@@ -1,0 +1,192 @@
+"""Shared benchmark utilities: timing, workloads, comparison systems.
+
+The paper evaluates HiStore against *all-hashtable* (3 hash replicas),
+*all-skiplist* (3 skiplist replicas), *single-hashtable* and
+*single-skiplist*.  None exist as RDMA systems here, so — as in the paper,
+which implemented them itself — we implement each as an index-group
+variant over the same substrate: identical logs/replication machinery,
+only the index structures differ.  All measurements are CPU wall-clock of
+the jitted index-side ops (the data path is identical across systems, so
+relative numbers mirror the paper's comparisons; see EXPERIMENTS.md
+§Paper-validation for the mapping).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.histore import scaled
+from repro.core import hash_index as hix
+from repro.core import index_group as ig
+from repro.core import log as lg
+from repro.core import sorted_index as six
+from repro.core.hashing import key_dtype
+
+KD = key_dtype()
+CFG = scaled(log_capacity=1 << 14, async_apply_batch=8192)
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def uniform_keys(n, seed=0, space=1 << 28):
+    rng = np.random.default_rng(seed)
+    return rng.choice(space, size=n, replace=False).astype(np.int64) + 1
+
+
+def zipf_indices(n_ops, n_keys, theta=0.9, seed=1):
+    """Zipfian ranks (YCSB-style, zipf constant 0.9)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_keys + 1)
+    p = 1.0 / ranks ** theta
+    p /= p.sum()
+    return rng.choice(n_keys, size=n_ops, p=p)
+
+
+# ---------------------------------------------------------------------------
+# Comparison systems (index-group variants)
+# ---------------------------------------------------------------------------
+class HiStoreSys:
+    """hash primary + 2 sorted replicas (the paper's system)."""
+    name = "histore"
+    supports_scan = True
+
+    def __init__(self, capacity):
+        self.g = ig.create(capacity, CFG)
+
+    def load(self, keys, addrs):
+        self.g, _ = ig.put(self.g, keys, addrs, CFG)
+        self.g = ig.drain(self.g, CFG)
+
+    def put(self, keys, addrs):
+        self.g, ok = ig.put(self.g, keys, addrs, CFG)
+        return ok
+
+    def get(self, keys):
+        # client-side routing: the primary is alive (static hint, as the
+        # paper's client routes one-sided reads to the primary)
+        return ig.get(self.g, keys, CFG, primary_alive=True)
+
+    def scan(self, lo, hi, limit):
+        out, self.g = ig.scan(self.g, lo, hi, limit, CFG)
+        return out
+
+    def apply_async(self):
+        self.g = ig.apply_async(self.g, CFG)
+
+
+class AllHashSys:
+    """3 hash tables (primary + 2 hash replicas); no range queries."""
+    name = "all-hashtable"
+    supports_scan = False
+
+    def __init__(self, capacity):
+        self.h = hix.create(capacity, CFG)
+        self.hrep = [hix.create(capacity, CFG) for _ in range(2)]
+        self.plog = lg.create(CFG.log_capacity)
+        self.blogs = [lg.create(CFG.log_capacity) for _ in range(2)]
+
+    def load(self, keys, addrs):
+        self.put(keys, addrs)
+        self._apply_all()
+
+    def put(self, keys, addrs):
+        ops = jnp.full(keys.shape, six.OP_PUT, jnp.int8)
+        self.plog, ok = lg.append(self.plog, keys, addrs, ops)
+        self.blogs = [lg.append(b, keys, addrs, ops)[0] for b in self.blogs]
+        self.h, okh = hix.insert(self.h, keys, addrs, CFG)
+        return ok & okh
+
+    def _apply_all(self):
+        for i, b in enumerate(self.blogs):
+            while int(lg.pending_count(b)) > 0:
+                k, a, o, b = lg.take_pending(b, CFG.async_apply_batch)
+                self.hrep[i], _ = hix.insert(
+                    self.hrep[i], jnp.where(o > 0, k, -1), a, CFG)
+            self.blogs[i] = b
+
+    def get(self, keys):
+        return hix.lookup(self.h, keys, CFG)
+
+    def apply_async(self):
+        for i, b in enumerate(self.blogs):
+            k, a, o, self.blogs[i] = lg.take_pending(b, CFG.async_apply_batch)
+            self.hrep[i], _ = hix.insert(
+                self.hrep[i], jnp.where(o > 0, k, -1), a, CFG)
+
+
+class AllSkipSys:
+    """3 skiplists; primary updates its sorted index synchronously."""
+    name = "all-skiplist"
+    supports_scan = True
+
+    def __init__(self, capacity):
+        self.s = six.create(capacity)
+        self.srep = [six.create(capacity) for _ in range(2)]
+        self.blogs = [lg.create(CFG.log_capacity) for _ in range(2)]
+
+    def load(self, keys, addrs):
+        ops = jnp.full(keys.shape, six.OP_PUT, jnp.int8)
+        self.s = six.merge(self.s, keys, addrs, ops)
+        self.srep = [six.merge(r, keys, addrs, ops) for r in self.srep]
+
+    def put(self, keys, addrs):
+        ops = jnp.full(keys.shape, six.OP_PUT, jnp.int8)
+        self.blogs = [lg.append(b, keys, addrs, ops)[0] for b in self.blogs]
+        self.s = six.merge(self.s, keys, addrs, ops)     # synchronous
+        return jnp.ones(keys.shape, bool)
+
+    def get(self, keys):
+        return six.search(self.s, keys, CFG.fanout)
+
+    def scan(self, lo, hi, limit):
+        return six.range_query(self.s, lo, hi, limit)
+
+    def apply_async(self):
+        for i, b in enumerate(self.blogs):
+            k, a, o, self.blogs[i] = lg.take_pending(b, CFG.async_apply_batch)
+            self.srep[i] = six.merge(self.srep[i], k, a, o)
+
+
+class SingleHashSys(AllHashSys):
+    name = "single-hashtable"
+
+    def put(self, keys, addrs):
+        self.h, ok = hix.insert(self.h, keys, addrs, CFG)
+        return ok
+
+    def load(self, keys, addrs):
+        self.put(keys, addrs)
+
+    def apply_async(self):
+        pass
+
+
+class SingleSkipSys(AllSkipSys):
+    name = "single-skiplist"
+
+    def __init__(self, capacity):
+        super().__init__(capacity)
+        self.blogs = []
+
+    def put(self, keys, addrs):
+        ops = jnp.full(keys.shape, six.OP_PUT, jnp.int8)
+        self.s = six.merge(self.s, keys, addrs, ops)
+        return jnp.ones(keys.shape, bool)
+
+    def apply_async(self):
+        pass
+
+
+SYSTEMS = [HiStoreSys, AllHashSys, AllSkipSys, SingleHashSys, SingleSkipSys]

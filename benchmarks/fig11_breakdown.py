@@ -1,0 +1,68 @@
+"""Fig. 11 reproduction: per-phase breakdown of PUT / GET / SCAN in
+HiStore: log append, log replication (backup sync), index access, data
+access, drain-before-scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CFG, KD, timeit, uniform_keys
+from repro.core import hash_index as hix
+from repro.core import index_group as ig
+from repro.core import log as lg
+from repro.core import sorted_index as six
+
+
+def run(report, n_load=200_000, batch=4096):
+    keys = uniform_keys(n_load, seed=11)
+    addrs = np.arange(n_load, dtype=np.int32)
+    g = ig.create(n_load * 4, CFG)
+    for i in range(0, n_load, 16384):
+        g, _ = ig.put(g, jnp.asarray(keys[i:i + 16384], KD),
+                      jnp.asarray(addrs[i:i + 16384]), CFG)
+        g = ig.drain(g, CFG)
+    vals = jnp.zeros((n_load * 2, CFG.value_words), jnp.int32)
+
+    nk = jnp.asarray(uniform_keys(batch, seed=78) + (1 << 29), KD)
+    na = jnp.arange(batch, dtype=jnp.int32)
+    ops = jnp.full((batch,), six.OP_PUT, jnp.int8)
+
+    # PUT phases
+    t_log, _ = timeit(lambda: lg.append(g.plog, nk, na, ops))
+    t_sync, _ = timeit(lambda: jax.vmap(
+        lambda l: lg.append(l, nk, na, ops))(g.blogs))
+    t_hash, _ = timeit(lambda: hix.insert(g.hash, nk, na, CFG))
+    total_put = t_log + t_sync + t_hash
+    report("fig11_put_log_append", share=round(t_log / total_put, 3),
+           us_per_op=t_log / batch * 1e6)
+    report("fig11_put_log_sync", share=round(t_sync / total_put, 3),
+           us_per_op=t_sync / batch * 1e6)
+    report("fig11_put_index_access", share=round(t_hash / total_put, 3),
+           us_per_op=t_hash / batch * 1e6)
+
+    # GET phases
+    gq = jnp.asarray(keys[:batch], KD)
+    t_idx, out = timeit(lambda: hix.lookup(g.hash, gq, CFG))
+    addr = out[0]
+    t_data, _ = timeit(lambda: vals[jnp.clip(addr, 0, vals.shape[0] - 1)])
+    report("fig11_get_index_access",
+           share=round(t_idx / (t_idx + t_data), 3),
+           us_per_op=t_idx / batch * 1e6)
+    report("fig11_get_data_access",
+           share=round(t_data / (t_idx + t_data), 3),
+           us_per_op=t_data / batch * 1e6)
+
+    # SCAN phases: drain + search + data fetch (100 keys)
+    g2, _ = ig.put(g, nk, na, CFG)
+    t_drain, g3 = timeit(lambda: ig.drain(g2, CFG, max_rounds=1),
+                         warmup=1, iters=3)
+    srt = jax.tree.map(lambda a: a[0], g3.sorted)
+    lo = jnp.asarray(int(np.median(keys)), KD)
+    t_q, out = timeit(lambda: six.range_query(srt, lo, jnp.asarray(1 << 30, KD), 100))
+    a100 = out[1]
+    t_dscan, _ = timeit(lambda: vals[jnp.clip(a100, 0, vals.shape[0] - 1)])
+    tot = t_drain + t_q + t_dscan
+    report("fig11_scan_drain", share=round(t_drain / tot, 3))
+    report("fig11_scan_index_query", share=round(t_q / tot, 3))
+    report("fig11_scan_data_access", share=round(t_dscan / tot, 3))

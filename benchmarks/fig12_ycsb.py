@@ -1,0 +1,80 @@
+"""Fig. 12 reproduction: YCSB A-F (zipfian 0.9, scan length 100) over
+histore / all-hashtable / all-skiplist, throughput normalised to
+all-skiplist (as in the paper)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (AllHashSys, AllSkipSys, HiStoreSys, KD,
+                               uniform_keys, zipf_indices)
+
+WORKLOADS = {
+    "A": {"read": 0.5, "update": 0.5},
+    "B": {"read": 0.95, "update": 0.05},
+    "C": {"read": 1.0},
+    "D": {"read": 0.95, "insert": 0.05},
+    "E": {"scan": 0.95, "insert": 0.05},
+    "F": {"read": 0.5, "rmw": 0.5},
+}
+
+
+def run(report, n_load=100_000, n_ops=16_384, batch=4096):
+    keys = uniform_keys(n_load, seed=21)
+    addrs = np.arange(n_load, dtype=np.int32)
+    results = {}
+    for SysCls in (AllSkipSys, HiStoreSys, AllHashSys):
+        sys_ = SysCls(n_load * 6)
+        for i in range(0, n_load, 16384):
+            sys_.load(jnp.asarray(keys[i:i + 16384], KD),
+                      jnp.asarray(addrs[i:i + 16384]))
+        for wl, mix in WORKLOADS.items():
+            if "scan" in mix and not sys_.supports_scan:
+                results[(sys_.name, wl)] = float("nan")
+                continue
+            rng = np.random.default_rng(42)
+            t0 = time.perf_counter()
+            done = 0
+            insert_base = 1 << 29
+            while done < n_ops:
+                r = rng.random()
+                acc = 0.0
+                kind = "read"
+                for k, p in mix.items():
+                    acc += p
+                    if r <= acc:
+                        kind = k
+                        break
+                if kind in ("read", "rmw"):
+                    idx = zipf_indices(batch, n_load, seed=done)
+                    q = jnp.asarray(keys[idx], KD)
+                    out = sys_.get(q)
+                    jax.block_until_ready(out)
+                    if kind == "rmw":
+                        sys_.put(q, jnp.arange(batch, dtype=jnp.int32))
+                elif kind == "update":
+                    idx = zipf_indices(batch, n_load, seed=done + 1)
+                    sys_.put(jnp.asarray(keys[idx], KD),
+                             jnp.arange(batch, dtype=jnp.int32))
+                    sys_.apply_async()
+                elif kind == "insert":
+                    nk = jnp.asarray(
+                        uniform_keys(batch, seed=done + 2) + insert_base, KD)
+                    sys_.put(nk, jnp.arange(batch, dtype=jnp.int32))
+                    sys_.apply_async()
+                elif kind == "scan":
+                    lo = jnp.asarray(int(keys[done % n_load]), KD)
+                    out = sys_.scan(lo, jnp.asarray(1 << 30, KD), 100)
+                    jax.block_until_ready(out)
+                done += batch
+            dt = time.perf_counter() - t0
+            results[(sys_.name, wl)] = n_ops / dt
+    for wl in WORKLOADS:
+        base = results[("all-skiplist", wl)]
+        for name in ("histore", "all-hashtable", "all-skiplist"):
+            v = results[(name, wl)]
+            report(f"fig12_ycsb_{wl}_{name}", ops_per_s=round(v, 1),
+                   normalized=round(v / base, 2) if base == base else "nan")

@@ -1,0 +1,58 @@
+"""Fig. 13 + 14 reproduction: recovery time (rebuild hash from sorted /
+sorted from hash) vs data amount, and degraded performance under primary /
+backup failure (normalised to healthy HiStore)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CFG, KD, timeit, uniform_keys
+from repro.core import index_group as ig
+
+
+def run(report, batch=4096):
+    for n in [50_000, 200_000]:
+        keys = uniform_keys(n, seed=31)
+        addrs = np.arange(n, dtype=np.int32)
+        g = ig.create(n * 4, CFG)
+        for i in range(0, n, 16384):
+            g, _ = ig.put(g, jnp.asarray(keys[i:i + 16384], KD),
+                          jnp.asarray(addrs[i:i + 16384]), CFG)
+            g = ig.drain(g, CFG)
+
+        gp = ig.fail(g, 0)
+        t_hash, _ = timeit(lambda: ig.recover_primary(gp, CFG),
+                           warmup=1, iters=2)
+        gb = ig.fail(g, 1)
+        t_sorted, _ = timeit(lambda: ig.recover_backup(gb, 0, CFG),
+                             warmup=1, iters=2)
+        report("fig13_recover_primary_hash", n=n, seconds=round(t_hash, 4))
+        report("fig13_recover_backup_sorted", n=n,
+               seconds=round(t_sorted, 4))
+
+        # Fig 14: degraded performance
+        q = jnp.asarray(keys[:batch], KD)
+        nk = jnp.asarray(uniform_keys(batch, seed=33) + (1 << 29), KD)
+        na = jnp.arange(batch, dtype=jnp.int32)
+        t_get, _ = timeit(lambda: ig.get(g, q, CFG, primary_alive=True),
+                          iters=3)
+        t_put, _ = timeit(lambda: ig.put(g, nk, na, CFG,
+                                         backups_alive=(True, True)), iters=3)
+        t_get_pf, _ = timeit(lambda: ig.get(gp, q, CFG, primary_alive=False),
+                             iters=3)
+        t_put_bf, _ = timeit(lambda: ig.put(gb, nk, na, CFG,
+                                            backups_alive=(False, True)),
+                             iters=3)
+        lo = jnp.asarray(int(np.median(keys)), KD)
+        hi = jnp.asarray(1 << 30, KD)
+        t_scan, _ = timeit(lambda: ig.scan(g, lo, hi, 100, CFG),
+                           warmup=1, iters=2)
+        t_scan_bf, _ = timeit(lambda: ig.scan(gb, lo, hi, 100, CFG),
+                              warmup=1, iters=2)
+        report("fig14_get_primary_fail", n=n,
+               normalized=round(t_get / t_get_pf, 3))
+        report("fig14_put_backup_fail", n=n,
+               normalized=round(t_put / t_put_bf, 3))
+        report("fig14_scan_backup_fail", n=n,
+               normalized=round(t_scan / t_scan_bf, 3))

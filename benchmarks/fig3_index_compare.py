@@ -1,0 +1,67 @@
+"""Fig. 3 reproduction: index-structure comparison.
+
+3a — memory accesses per single-key lookup vs data amount: hash table stays
+~1 (sub-bucket reads), the sorted directory grows as ceil(log_fanout N)
+(the skiplist/B+-tree levels in the paper grow 3->10 over 1M->100M).
+3b — indexing latency: hash probe (one-sided: no server logic) vs sorted
+search (server-side walk); we report measured batch latency per op.
+3c/3d — share of indexing in the whole PUT/GET (with 32 B value access).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CFG, KD, timeit, uniform_keys
+from repro.core import hash_index as hix
+from repro.core import sorted_index as six
+
+
+def run(report):
+    q = 4096
+    for n in [10_000, 100_000, 1_000_000]:
+        keys = jnp.asarray(uniform_keys(n, seed=n), KD)
+        addrs = jnp.arange(n, dtype=jnp.int32)
+        h = hix.create(n * 2, CFG)
+        h, _ = hix.insert(h, keys, addrs, CFG)
+        from repro.core.hashing import next_pow2
+        s = six.create(next_pow2(n))     # tight capacity: directory levels
+        s = six.bulk_load(s, keys, addrs)  # grow with data amount (Fig 3a)
+        probe = keys[:q]
+
+        t_h, out_h = timeit(lambda: hix.lookup(h, probe, CFG))
+        acc_h = float(jnp.mean(out_h[2]))
+        t_s, out_s = timeit(lambda: six.search(s, probe, CFG.fanout))
+        acc_s = float(jnp.mean(out_s[2]))
+        report("fig3a_hash_accesses", n=n, value=round(acc_h, 2))
+        report("fig3a_sorted_accesses", n=n, value=round(acc_s, 2))
+        report("fig3b_hash_lookup", n=n, us_per_op=t_h / q * 1e6)
+        report("fig3b_sorted_lookup", n=n, us_per_op=t_s / q * 1e6)
+
+    # 3c/3d: indexing share of full op (index + 32B value access)
+    n = 1_000_000
+    keys = jnp.asarray(uniform_keys(n, seed=5), KD)
+    addrs = jnp.arange(n, dtype=jnp.int32)
+    h = hix.create(n * 2, CFG)
+    h, _ = hix.insert(h, keys, addrs, CFG)
+    s = six.create(1 << 21)
+    s = six.bulk_load(s, keys, addrs)
+    vals = jnp.zeros((n, CFG.value_words), jnp.int32)
+    probe = keys[:q]
+
+    def get_hash_full():
+        a, f, _ = hix.lookup(h, probe, CFG)
+        return vals[jnp.clip(a, 0, n - 1)]
+
+    def get_sorted_full():
+        a, f, _ = six.search(s, probe, CFG.fanout)
+        return vals[jnp.clip(a, 0, n - 1)]
+
+    t_idx_h, _ = timeit(lambda: hix.lookup(h, probe, CFG))
+    t_full_h, _ = timeit(get_hash_full)
+    t_idx_s, _ = timeit(lambda: six.search(s, probe, CFG.fanout))
+    t_full_s, _ = timeit(get_sorted_full)
+    report("fig3d_get_index_share_hash",
+           value=round(t_idx_h / max(t_full_h, 1e-12), 3))
+    report("fig3d_get_index_share_sorted",
+           value=round(t_idx_s / max(t_full_s, 1e-12), 3))

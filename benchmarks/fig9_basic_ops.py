@@ -1,0 +1,48 @@
+"""Fig. 9 + 10 reproduction: throughput/latency of PUT, GET, SCAN for
+histore vs all-hashtable vs all-skiplist vs single-hashtable vs
+single-skiplist (db_bench-style: load N, then timed op batches)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (CFG, KD, SYSTEMS, timeit, uniform_keys)
+
+
+def run(report, n_load=200_000, batch=4096):
+    keys = uniform_keys(n_load, seed=9)
+    addrs = np.arange(n_load, dtype=np.int32)
+    rng = np.random.default_rng(3)
+
+    for SysCls in SYSTEMS:
+        sys_ = SysCls(n_load * 4)
+        for i in range(0, n_load, 16384):
+            sys_.load(jnp.asarray(keys[i:i + 16384], KD),
+                      jnp.asarray(addrs[i:i + 16384]))
+        # PUT: new uniform keys
+        new_keys = jnp.asarray(uniform_keys(batch, seed=77) + (1 << 29), KD)
+        new_addrs = jnp.arange(batch, dtype=jnp.int32)
+
+        def do_put():
+            ok = sys_.put(new_keys, new_addrs)
+            sys_.apply_async()
+            return ok
+
+        t_put, _ = timeit(do_put, warmup=1, iters=3)
+        report(f"fig9a_put_{sys_.name}", us_per_op=t_put / batch * 1e6,
+               mops=batch / t_put / 1e6)
+
+        # GET: uniform over loaded keys
+        gq = jnp.asarray(rng.choice(keys, batch), KD)
+        t_get, out = timeit(lambda: sys_.get(gq), iters=3)
+        assert bool(out[1].all()), sys_.name
+        report(f"fig9b_get_{sys_.name}", us_per_op=t_get / batch * 1e6,
+               mops=batch / t_get / 1e6)
+
+        # SCAN: 100-key ranges (paper setting)
+        if sys_.supports_scan:
+            lo = jnp.asarray(int(np.median(keys)), KD)
+            hi = jnp.asarray((1 << 30), KD)
+            t_scan, _ = timeit(lambda: sys_.scan(lo, hi, 100),
+                               warmup=1, iters=3)
+            report(f"fig9c_scan_{sys_.name}", us_per_op=t_scan * 1e6)

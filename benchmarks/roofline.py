@@ -1,0 +1,64 @@
+"""Roofline table: reads results/dryrun/*.json (produced by
+repro.launch.dryrun) and prints the per-(arch x shape) terms — the §Roofline
+deliverable.  Also emits the markdown table used by EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(results_dir=RESULTS):
+    cells = []
+    for f in sorted(glob.glob(str(results_dir / "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def run(report, results_dir=RESULTS):
+    for r in load_cells(results_dir):
+        tag = f"{r['arch']}__{r['shape']}"
+        if r["status"] == "skipped":
+            report(f"roofline_{tag}", status="skipped")
+            continue
+        if r["status"] != "ok":
+            report(f"roofline_{tag}", status="error")
+            continue
+        t = r["roofline"]
+        report(
+            f"roofline_{tag}",
+            compute_s=round(t["compute_s"], 4),
+            memory_s=round(t["memory_s"], 4),
+            collective_s=round(t["collective_s"], 4),
+            dominant=t["dominant"].replace("_s", ""),
+            useful_flops_ratio=round(r.get("useful_flops_ratio", 0), 3),
+            hbm_gb_per_dev=round(r["memory"]["peak_estimate_bytes"] / 1e9, 1),
+        )
+
+
+def markdown_table(results_dir=RESULTS) -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "dominant | useful-flops | HBM GB/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in load_cells(results_dir):
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skipped (sub-quadratic rule) | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{t['dominant'].replace('_s','')} | "
+            f"{r.get('useful_flops_ratio', 0):.3f} | "
+            f"{r['memory']['peak_estimate_bytes']/1e9:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

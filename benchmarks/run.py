@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+table from the dry-run artifacts.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # all benches
+  PYTHONPATH=src python -m benchmarks.run fig9 ycsb  # substring filter
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _reporter(rows):
+    def report(name, **kw):
+        us = kw.pop("us_per_op", kw.pop("us_per_call", ""))
+        derived = ";".join(f"{k}={v}" for k, v in kw.items())
+        rows.append((name, us, derived))
+        print(f"{name},{us if us == '' else round(us, 3)},{derived}",
+              flush=True)
+    return report
+
+
+def main() -> None:
+    from benchmarks import (fig3_index_compare, fig9_basic_ops,
+                            fig11_breakdown, fig12_ycsb, fig13_recovery,
+                            roofline)
+    benches = [
+        ("fig3_index_compare", fig3_index_compare.run),
+        ("fig9_10_basic_ops", fig9_basic_ops.run),
+        ("fig11_breakdown", fig11_breakdown.run),
+        ("fig12_ycsb", fig12_ycsb.run),
+        ("fig13_14_recovery_degraded", fig13_recovery.run),
+        ("roofline", roofline.run),
+    ]
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    rows = []
+    report = _reporter(rows)
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        if filters and not any(f in name for f in filters):
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        fn(report)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Serving example: batched requests through the continuous-batching
+engine whose paged-KV directory is a HiStore index group.
+
+    PYTHONPATH=src python examples/serve_kv_cache.py
+
+Shows: continuous batching over decode_step, page registration (PUT),
+SCAN-based page reclamation on sequence completion, and prefix-reuse GET
+hits when prompts repeat.
+"""
+import jax
+
+from repro.configs.tiny import tiny_config
+from repro.models.transformer import init_params
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    cfg = tiny_config("mistral-nemo-12b", d_model=128, n_layers=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, batch_slots=4, max_len=96, page_size=8)
+
+    wave1 = [[1, 2, 3, 4], [9, 8, 7], [5, 5, 5, 5, 5], [6, 7]]
+    for p in wave1:
+        eng.submit(p, max_new=12)
+    steps = eng.run()
+    # second wave repeats two prompts -> prefix-reuse hits in the hash index
+    wave2 = [[1, 2, 3, 4], [9, 8, 7]]
+    for p in wave2:
+        eng.submit(p, max_new=12)
+    steps += eng.run()
+    prompts = wave1 + wave2
+    s = eng.stats
+    print(f"served {len(prompts)} requests in {steps} engine steps "
+          f"({s['decode_steps']} decode steps)")
+    print(f"page directory: {s['pages_registered']} pages registered via "
+          f"PUT, {s['pages_freed']} reclaimed via SCAN "
+          f"({s['index_scans']} range scans)")
+    print(f"prefix reuse: {s['prefix_hits']} hash-index hits on repeated "
+          f"prompts ({s['index_gets']} GETs total)")
+    assert s["prefix_hits"] >= 2
+    print("serving example OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""End-to-end training driver: a ~100M-class decoder trained for a few
+hundred steps on the synthetic LM stream, with checkpoints and restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 100
+    PYTHONPATH=src python examples/train_lm.py --steps 200   # resumes!
+
+The default size is CPU-friendly (~20M params; pass --d-model 704
+--n-layers 12 for the full ~100M run on real hardware).  Loss on the
+synthetic copy-structure stream drops from ~ln(V) toward the copy floor.
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import make_local_mesh
+from repro.train.trainer import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--d-model", type=int, default=384)
+    ap.add_argument("--n-layers", type=int, default=6)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="train-lm-demo", family="dense",
+        n_layers=args.n_layers, d_model=args.d_model,
+        n_heads=max(4, args.d_model // 64), n_kv_heads=max(2, args.d_model // 128),
+        head_dim=64, d_ff=args.d_model * 4, vocab_size=2048,
+        attn_q_block=64, attn_kv_block=64, dtype="float32",
+    )
+    from repro.models.transformer import count_params, init_params
+    n = count_params(jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0)))
+    print(f"model: {n/1e6:.1f}M params, mesh={len(jax.devices())} device(s)")
+    shape = ShapeSpec("demo", args.seq_len, args.batch, "train")
+    out = train(cfg, make_local_mesh(), shape, steps=args.steps,
+                ckpt_dir=args.ckpt_dir, ckpt_every=25, lr=args.lr,
+                log_every=5)
+    h = out["history"]
+    print(f"loss: {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} "
+          f"over steps {h[0]['step']}..{h[-1]['step']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Sharded checkpointing with elastic restore.
+
+Format: one .npz per checkpoint step (flat leaf-path -> array) + a JSON
+manifest (step, tree structure, dtypes).  Restore re-places every leaf with
+the CURRENT mesh's shardings — the mesh may differ from the one that saved
+(elastic scaling): arrays are resharded on device_put.  Saves are atomic
+(tmp + rename) so a crash mid-save never corrupts the latest checkpoint;
+AsyncCheckpointer snapshots to host then writes on a background thread so
+the train loop never blocks on disk.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(ckpt_dir, step: int, tree) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    dtypes = {}
+    packed = {}
+    for k, v in flat.items():
+        dtypes[k] = str(v.dtype)
+        if v.dtype.kind == "V" or str(v.dtype) == "bfloat16":
+            v = v.view(np.uint16)          # npz-safe container for bf16
+        packed[k] = v
+    tmp = ckpt_dir / f".tmp_step_{step}.npz"
+    final = ckpt_dir / f"step_{step:08d}.npz"
+    np.savez(tmp, **packed)
+    tmp.rename(final)
+    manifest = {"step": step, "keys": sorted(flat), "dtypes": dtypes}
+    (ckpt_dir / f"manifest_{step:08d}.json").write_text(json.dumps(manifest))
+    (ckpt_dir / "manifest.json").write_text(json.dumps(manifest))
+    return final
+
+
+def latest_step(ckpt_dir) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(int(p.stem.split("_")[1]) for p in
+                   ckpt_dir.glob("step_*.npz"))
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree``; reshard onto
+    ``shardings`` (tree of NamedSharding) if given — the elastic path."""
+    ckpt_dir = Path(ckpt_dir)
+    data = np.load(ckpt_dir / f"step_{step:08d}.npz")
+    manifest = json.loads((ckpt_dir / f"manifest_{step:08d}.json").read_text())
+    flat_like = _flatten(like_tree)
+    restored_flat = {}
+    for key, like in flat_like.items():
+        arr = data[key]
+        if manifest["dtypes"].get(key) == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        assert arr.shape == tuple(like.shape), (key, arr.shape, like.shape)
+        restored_flat[key] = arr
+    # rebuild in tree order
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like_tree)
+    vals = []
+    for path, like in leaves_paths[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = restored_flat[key]
+        a = arr if str(arr.dtype) == str(like.dtype) else arr.astype(like.dtype)
+        vals.append(a)
+    tree = jax.tree_util.tree_unflatten(leaves_paths[1], vals)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree,
+                            shardings)
+    return tree
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host then background write; wait() joins the writer."""
+
+    def __init__(self, ckpt_dir):
+        self.ckpt_dir = Path(ckpt_dir)
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree):
+        host_tree = jax.tree.map(np.asarray, tree)   # synchronous snapshot
+        self.wait()
+        self._thread = threading.Thread(
+            target=save_checkpoint, args=(self.ckpt_dir, step, host_tree),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,27 @@
+"""Architecture registry: importing this package registers every assigned
+architecture (plus the paper's own HiStore configuration)."""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeSpec, SHAPES, Stage, layer_plan, input_specs,
+    shape_applicable, get_config, all_archs, register,
+)
+
+# Assigned architectures (one module per arch id).
+from repro.configs import zamba2_7b            # noqa: F401
+from repro.configs import internvl2_76b        # noqa: F401
+from repro.configs import mistral_large_123b   # noqa: F401
+from repro.configs import command_r_35b        # noqa: F401
+from repro.configs import gemma3_27b           # noqa: F401
+from repro.configs import mistral_nemo_12b     # noqa: F401
+from repro.configs import deepseek_v2_lite_16b # noqa: F401
+from repro.configs import kimi_k2_1t_a32b      # noqa: F401
+from repro.configs import musicgen_large       # noqa: F401
+from repro.configs import falcon_mamba_7b      # noqa: F401
+
+# Paper config (HiStore KV-store deployment parameters).
+from repro.configs import histore              # noqa: F401
+
+ARCH_IDS = [
+    "zamba2-7b", "internvl2-76b", "mistral-large-123b", "command-r-35b",
+    "gemma3-27b", "mistral-nemo-12b", "deepseek-v2-lite-16b",
+    "kimi-k2-1t-a32b", "musicgen-large", "falcon-mamba-7b",
+]

@@ -1,0 +1,41 @@
+"""HiStore (the paper's own system) deployment configuration.
+
+These are the KV-store parameters used by the core library, the examples and
+the paper-reproduction benchmarks.  Defaults mirror the paper's evaluation
+setup scaled to this container: key 16 B (we use int64 keys + a 64-bit
+signature pair — see DESIGN.md §Key codec), value 32 B, chained hash buckets
+of 7+1 slots (64 B), skiplist → 128-fanout hierarchical sorted directory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HiStoreConfig:
+    # hash index ---------------------------------------------------------
+    slots_per_bucket: int = 8      # paper: 7 slots + next ptr in a 64B bucket;
+                                   # we pre-link chains so all 8 are key slots
+    max_chain: int = 4             # pre-linked chain length (paper: dynamic)
+    load_factor: float = 0.5       # buckets over-provisioned to avoid resizing
+    # sorted index (skiplist → hierarchical directory) --------------------
+    fanout: int = 128              # TPU lane width; one "express lane" hop
+                                   # searches a 128-wide node branchlessly
+    # index group ---------------------------------------------------------
+    n_backups: int = 2             # replicas of the sorted index (paper §3.3)
+    log_capacity: int = 1 << 16    # per-group append-only log entries
+    # value store ----------------------------------------------------------
+    value_words: int = 4           # 32 B values = 4 x int64 words
+    # distribution ---------------------------------------------------------
+    groups_per_device: int = 1
+    # batching -------------------------------------------------------------
+    async_apply_batch: int = 4096  # log entries merged into the sorted index
+                                   # per asynchronous apply
+
+
+DEFAULT = HiStoreConfig()
+
+
+def scaled(**kw) -> HiStoreConfig:
+    return dataclasses.replace(DEFAULT, **kw)

@@ -1,0 +1,11 @@
+"""HiStore core: hybrid index (hash table + sorted index) in JAX.
+
+Modules:
+  hashing       — 32-bit key mixing (shared with the Pallas kernels)
+  hash_index    — chained bucket hash table (primary index)
+  sorted_index  — hierarchical-directory sorted array (TPU skiplist)
+  log           — append-only update log with applied-prefix marks
+  index_group   — 1 hash + N sorted replicas + logs; consistency; recovery
+  kvstore       — distributed store over index groups (see also verbs.py)
+"""
+from repro.core import hash_index, hashing, index_group, log, sorted_index  # noqa: F401

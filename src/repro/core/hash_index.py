@@ -1,0 +1,163 @@
+"""Chained bucket hash table as dense JAX arrays (the paper's primary
+index, adapted to TPU).
+
+Paper structure: 64 B buckets of 7 slots + a next-pointer, chains grown on
+demand.  TPU adaptation (DESIGN.md §Hash index): chains are PRE-LINKED —
+each logical bucket owns ``max_chain`` contiguous sub-buckets of
+``slots_per_bucket`` slots; the paper itself over-provisions buckets to
+avoid resizing, we over-provision the chain the same way.  A GET probes
+sub-bucket after sub-bucket, exactly like following next-pointers: the
+reported ``n_accesses`` equals the number of 64 B reads the RDMA client
+would issue (Fig. 3a reproduction).
+
+Batched inserts replace the paper's RDMA CAS with a sort-based
+conflict-free schedule: sort new keys by bucket, rank within bucket, place
+at fill+rank — one scatter, no retries (the TPU-native analogue of CAS
+contention resolution).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import bucket_of, next_pow2, sig_fp_of
+
+I32 = jnp.int32
+I64 = jnp.int64
+TOMBSTONE = -1
+BIG = jnp.int32(2 ** 30)
+
+
+class HashIndex(NamedTuple):
+    sig: jnp.ndarray    # int32 [nb, CS]   0=empty, -1=tombstone
+    fp: jnp.ndarray     # int32 [nb, CS]
+    addr: jnp.ndarray   # int32 [nb, CS]
+    fill: jnp.ndarray   # int32 [nb]  (appended slots incl. tombstones)
+
+    @property
+    def n_buckets(self) -> int:
+        return self.sig.shape[0]
+
+    @property
+    def chain_slots(self) -> int:
+        return self.sig.shape[1]
+
+
+def create(capacity: int, cfg) -> HashIndex:
+    """Size the table so expected occupancy is cfg.load_factor."""
+    cs = cfg.slots_per_bucket * cfg.max_chain
+    nb = next_pow2(max(8, int(capacity / (cs * cfg.load_factor) + 1)))
+    return HashIndex(
+        sig=jnp.zeros((nb, cs), I32),
+        fp=jnp.zeros((nb, cs), I32),
+        addr=jnp.full((nb, cs), -1, I32),
+        fill=jnp.zeros((nb,), I32),
+    )
+
+
+def _locate(idx: HashIndex, keys):
+    """Vectorized probe.  Returns (found, slot_flat, addr, n_accesses)."""
+    nb, cs = idx.sig.shape
+    b = bucket_of(keys, nb)
+    sig, fp = sig_fp_of(keys)
+    rows_sig = idx.sig[b]                       # [Q, CS]
+    rows_fp = idx.fp[b]
+    match = (rows_sig == sig[:, None]) & (rows_fp == fp[:, None])
+    found = match.any(axis=1)
+    off = jnp.argmax(match, axis=1)             # first match
+    slot_flat = b * cs + off
+    addr = jnp.where(found, idx.addr[b, off], -1)
+    return found, slot_flat, addr, b, off
+
+
+def lookup(idx: HashIndex, keys, cfg):
+    """GET probe.  Returns (addr [Q] int32, found [Q] bool, n_accesses [Q]).
+
+    n_accesses counts 64 B sub-bucket reads: hit -> sub-bucket containing
+    the slot; miss -> all occupied sub-buckets (>=1), exactly the one-sided
+    RDMA READ count of the paper's client."""
+    S = cfg.slots_per_bucket
+    found, _, addr, b, off = _locate(idx, keys)
+    occupied = jnp.maximum(idx.fill[b], 1)
+    acc_hit = off // S + 1
+    acc_miss = (occupied + S - 1) // S
+    n_acc = jnp.where(found, acc_hit, acc_miss)
+    return addr, found, n_acc
+
+
+def _dedupe_last(keys):
+    """Mask of entries that are the LAST occurrence of their key."""
+    Q = keys.shape[0]
+    pos = jnp.arange(Q)
+    order = jnp.lexsort((pos, keys))
+    k_s = keys[order]
+    is_last_sorted = jnp.concatenate(
+        [k_s[1:] != k_s[:-1], jnp.ones((1,), bool)])
+    live = jnp.zeros((Q,), bool).at[order].set(is_last_sorted)
+    return live
+
+
+def insert(idx: HashIndex, keys, addrs, cfg):
+    """Batched PUT/UPDATE.  Last-wins within the batch; updates in place if
+    the key exists, else appends at fill+rank.  Returns (idx, ok [Q])
+    where ok=False means the chain overflowed (caller surfaces the error,
+    mirroring the paper's add-bucket RPC)."""
+    nb, cs = idx.sig.shape
+    Q = keys.shape[0]
+    live = _dedupe_last(keys)
+    sig, fp = sig_fp_of(keys)
+    found, slot_flat, _, b, _ = _locate(idx, keys)
+
+    addr_flat = idx.addr.reshape(-1)
+    # in-place update of existing keys
+    upd = found & live
+    addr_flat = addr_flat.at[jnp.where(upd, slot_flat, BIG)].set(
+        addrs, mode="drop")
+
+    # append new keys: rank within bucket among accepted new entries
+    new = (~found) & live
+    pos = jnp.arange(Q)
+    b_for_sort = jnp.where(new, b, nb)          # push non-new to the end
+    order = jnp.lexsort((pos, b_for_sort))
+    b_s = b_for_sort[order]
+    start = jnp.searchsorted(b_s, b_s)          # first idx of each bucket run
+    rank = jnp.arange(Q) - start
+    fill_s = idx.fill[jnp.clip(b_s, 0, nb - 1)]
+    off = fill_s + rank
+    ok_s = (b_s < nb) & (off < cs)
+    slot_s = jnp.where(ok_s, jnp.clip(b_s, 0, nb - 1) * cs + off, BIG)
+    sig_flat = idx.sig.reshape(-1)
+    fp_flat = idx.fp.reshape(-1)
+    sig_flat = sig_flat.at[slot_s].set(sig[order], mode="drop")
+    fp_flat = fp_flat.at[slot_s].set(fp[order], mode="drop")
+    addr_flat = addr_flat.at[slot_s].set(addrs[order], mode="drop")
+    fill = idx.fill.at[jnp.where(ok_s, b_s, nb)].add(
+        jnp.ones((Q,), I32), mode="drop")
+
+    ok = jnp.zeros((Q,), bool).at[order].set(ok_s)
+    ok = ok | upd | ~live                        # dup-superseded entries: ok
+    new_idx = HashIndex(sig_flat.reshape(nb, cs), fp_flat.reshape(nb, cs),
+                        addr_flat.reshape(nb, cs), fill)
+    return new_idx, ok
+
+
+def delete(idx: HashIndex, keys, cfg):
+    """Batched DELETE: tombstone the slot (reclaimed on rebuild)."""
+    nb, cs = idx.sig.shape
+    found, slot_flat, _, _, _ = _locate(idx, keys)
+    tgt = jnp.where(found, slot_flat, BIG)
+    sig_flat = idx.sig.reshape(-1).at[tgt].set(TOMBSTONE, mode="drop")
+    fp_flat = idx.fp.reshape(-1).at[tgt].set(0, mode="drop")
+    addr_flat = idx.addr.reshape(-1).at[tgt].set(-1, mode="drop")
+    return HashIndex(sig_flat.reshape(nb, cs), fp_flat.reshape(nb, cs),
+                     addr_flat.reshape(nb, cs), idx.fill), found
+
+
+def valid_mask(idx: HashIndex):
+    return (idx.sig != 0) & (idx.sig != TOMBSTONE)
+
+
+def n_items(idx: HashIndex):
+    return valid_mask(idx).sum()

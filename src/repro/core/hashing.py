@@ -1,0 +1,79 @@
+"""Key hashing for the hybrid index.
+
+Keys are int64 (the paper's 16 B string keys are handled by the data layer's
+key codec — see DESIGN.md §Key codec).  All mixing is 32-bit (murmur3
+fmix32 over the two int32 halves) so the same hash runs unchanged inside
+the Pallas TPU kernels (TPU int64 support is limited).
+
+A slot stores a 31-bit odd signature (never 0 = empty, never -1 =
+tombstone) plus an independent 32-bit fingerprint; together they stand in
+for the paper's {1 B signature + exact-key check} with a ~2^-62 per-slot
+false-positive rate (adaptation noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+
+def key_dtype():
+    """Canonical key dtype: int64 when x64 is enabled (full 16 B-key codec
+    realism, used by the benchmarks), else int32 (default JAX x32 mode —
+    unit tests and the serving page-table, which packs (seq, page) into
+    int32)."""
+    import jax
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
+def key_inf(dtype=None):
+    """Max key value, reserved as the 'empty' sentinel of sorted indexes.
+    Application keys must be non-negative and < key_inf."""
+    return jnp.iinfo(dtype or key_dtype()).max
+
+
+def fmix32(x):
+    """murmur3 finalizer; x: uint32 array."""
+    x = x.astype(U32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def key_mix(keys):
+    """keys: int64 or int32 -> (h1, h2) uint32 mixes."""
+    if keys.dtype == jnp.int64:
+        k = keys.astype(jnp.uint64)
+        lo = (k & jnp.uint64(0xFFFFFFFF)).astype(U32)
+        hi = (k >> jnp.uint64(32)).astype(U32)
+    else:
+        lo = keys.astype(U32)
+        hi = jnp.zeros_like(lo)
+    h1 = fmix32(lo ^ fmix32(hi ^ jnp.uint32(0x9E3779B9)))
+    h2 = fmix32(hi ^ fmix32(lo ^ jnp.uint32(0x85EBCA77)))
+    return h1, h2
+
+
+def bucket_of(keys, n_buckets: int):
+    """n_buckets must be a power of two."""
+    h1, _ = key_mix(keys)
+    return (h1 & jnp.uint32(n_buckets - 1)).astype(I32)
+
+
+def sig_fp_of(keys):
+    """(signature, fingerprint): sig is positive odd int32 (!=0, !=-1)."""
+    h1, h2 = key_mix(keys)
+    sig = (((h1 >> 1) | jnp.uint32(1)) & jnp.uint32(0x7FFFFFFF)).astype(I32)
+    fp = h2.astype(I32)
+    return sig, fp
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p

@@ -1,0 +1,235 @@
+"""Index group: the unit of hybrid index (paper §3.2).
+
+One group = one hash table (primary server) + ``n_backups`` sorted-index
+replicas (backup servers), plus the primary's append-only log and one log
+per backup.  Default replication is the paper's choice (Fig. 6b): 1 hash +
+2 skiplists.
+
+Write path (§3.2.2): record in the primary log -> replicate the entries to
+every backup log -> apply synchronously to the hash table -> (later)
+backups apply their logs to the sorted replicas asynchronously, in batches.
+SCAN drains the chosen replica's log first (serializability).
+
+Failure handling (§4.3): ``alive`` masks servers.  Primary down -> GETs are
+served from a live sorted replica *after consulting its pending log*
+(degraded); backup down -> SCANs use the other replica; recovery rebuilds
+a hash table from a sorted replica or a sorted replica from the hash table.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hash_index as hi
+from repro.core import log as lg
+from repro.core import sorted_index as si
+from repro.core.hashing import key_inf
+from repro.core.sorted_index import OP_DEL, OP_PUT
+
+I32 = jnp.int32
+
+
+class IndexGroup(NamedTuple):
+    hash: hi.HashIndex          # primary
+    plog: lg.UpdateLog          # primary's log
+    sorted: si.SortedIndex      # stacked [R, ...] replicas
+    blogs: lg.UpdateLog         # stacked [R, ...] backup logs
+    alive: jnp.ndarray          # bool [1 + R]: primary, backup_0..R-1
+
+
+def create(capacity: int, cfg) -> IndexGroup:
+    R = cfg.n_backups
+    one_sorted = si.create(capacity)
+    one_log = lg.create(cfg.log_capacity)
+    stack = lambda t: jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (R,) + a.shape).copy(), t)
+    return IndexGroup(
+        hash=hi.create(capacity, cfg),
+        plog=lg.create(cfg.log_capacity),
+        sorted=stack(one_sorted),
+        blogs=stack(one_log),
+        alive=jnp.ones((1 + R,), bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Writes
+# ---------------------------------------------------------------------------
+def put(g: IndexGroup, keys, addrs, cfg, valid=None,
+        backups_alive: tuple | None = None) -> tuple:
+    """PUT/UPDATE batch.  Mirrors the paper's ordering: primary log ->
+    backup logs (the distributed layer does this via collective_permute;
+    here the replication is the stacked write) -> hash table update.
+
+    ``backups_alive`` is a static liveness hint: the primary skips pushing
+    log entries to dead backups (the paper's observation that PUT speeds
+    up under a backup failure); recovery re-syncs from a live replica.
+    Returns (group, ok)."""
+    q = keys.shape[0]
+    if valid is None:
+        valid = jnp.ones((q,), bool)
+    ops = jnp.where(valid, OP_PUT, 0).astype(jnp.int8)
+    plog, ok_log = lg.append(g.plog, keys, addrs, ops, valid)
+    if backups_alive is None:
+        blogs, _ = jax.vmap(
+            lambda l: lg.append(l, keys, addrs, ops, valid))(g.blogs)
+    else:
+        blogs = g.blogs
+        for r, live in enumerate(backups_alive):
+            if not live:
+                continue
+            one = jax.tree.map(lambda a: a[r], blogs)
+            one, _ = lg.append(one, keys, addrs, ops, valid)
+            blogs = jax.tree.map(lambda f, v, r=r: f.at[r].set(v), blogs, one)
+    new_hash, ok_hash = hi.insert(g.hash, keys, addrs, cfg)
+    # a write is complete only if logged everywhere and indexed
+    ok = ok_log & ok_hash & valid
+    return g._replace(hash=new_hash, plog=plog, blogs=blogs), ok
+
+
+def delete(g: IndexGroup, keys, cfg, valid=None) -> tuple:
+    q = keys.shape[0]
+    if valid is None:
+        valid = jnp.ones((q,), bool)
+    ops = jnp.where(valid, OP_DEL, 0).astype(jnp.int8)
+    addrs = jnp.full((q,), -1, I32)
+    plog, ok_log = lg.append(g.plog, keys, addrs, ops, valid)
+    blogs, _ = jax.vmap(lambda l: lg.append(l, keys, addrs, ops, valid))(g.blogs)
+    new_hash, found = hi.delete(g.hash, keys, cfg)
+    return g._replace(hash=new_hash, plog=plog, blogs=blogs), found & ok_log
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous apply (the backup "worker threads")
+# ---------------------------------------------------------------------------
+def apply_async(g: IndexGroup, cfg, batch: int | None = None) -> IndexGroup:
+    """Apply up to ``batch`` pending log entries to every sorted replica."""
+    batch = batch or cfg.async_apply_batch
+
+    def one(srt, blog):
+        keys, addrs, ops, blog2 = lg.take_pending(blog, batch)
+        return si.merge(srt, keys, addrs, ops), blog2
+
+    srt, blogs = jax.vmap(one)(g.sorted, g.blogs)
+    return g._replace(sorted=srt, blogs=blogs)
+
+
+def drain(g: IndexGroup, cfg, max_rounds: int | None = None) -> IndexGroup:
+    """Apply ALL pending entries (used before SCAN for serializability).
+
+    Eager callers (max_rounds=None) early-exit as soon as every log is
+    empty; traced/SPMD callers pass a fixed round count."""
+    if max_rounds is None:
+        for _ in range(1 << 16):
+            if int(lg.pending_count(g.blogs).max()) == 0:
+                break
+            g = apply_async(g, cfg)
+        return g
+    for _ in range(max_rounds):
+        g = apply_async(g, cfg)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Reads
+# ---------------------------------------------------------------------------
+def get(g: IndexGroup, keys, cfg, *, primary_alive: bool | None = None):
+    """GET batch.  Primary alive: one-sided hash probe.  Primary down:
+    degraded read from the first live sorted replica — pending log entries
+    are consulted first (newest wins), then the sorted index.
+
+    ``primary_alive`` is a STATIC routing hint: real clients know server
+    liveness (the paper's client routes to the primary or a backup), so
+    eager callers skip the unused path entirely; None keeps the branchless
+    both-paths select for traced/SPMD use.
+    Returns (addr, found, n_accesses)."""
+    if primary_alive is True:
+        return hi.lookup(g.hash, keys, cfg)
+    addr_h, found_h, acc_h = hi.lookup(g.hash, keys, cfg)
+
+    # degraded path via replica 0/1 (vectorised; selected by alive mask)
+    rep = jnp.argmax(g.alive[1:])                # first live backup
+    srt = jax.tree.map(lambda a: a[rep], g.sorted)
+    blog = jax.tree.map(lambda a: a[rep], g.blogs)
+    addr_s, found_s, acc_s = si.search(srt, keys, cfg.fanout)
+    # pending log scan (newest wins): entries [applied, tail)
+    cap = blog.keys.shape[0]
+    sl = jnp.arange(cap)
+    seq = blog.applied + sl                      # scan window in order
+    idx = seq % cap
+    pend_valid = seq < blog.tail
+    pk = jnp.where(pend_valid, blog.keys[idx], key_inf(blog.keys.dtype))
+    po = jnp.where(pend_valid, blog.ops[idx], 0)
+    pa = blog.addrs[idx]
+    m = pk[None, :] == keys[:, None]             # [Q, cap]
+    any_m = m.any(axis=1)
+    last = (cap - 1) - jnp.argmax(m[:, ::-1], axis=1)
+    hit_op = jnp.where(any_m, po[last], 0)
+    hit_addr = jnp.where(any_m & (hit_op == OP_PUT), pa[last], -1)
+    addr_d = jnp.where(any_m, hit_addr, addr_s)
+    found_d = jnp.where(any_m, hit_op == OP_PUT, found_s)
+
+    if primary_alive is False:
+        return addr_d, found_d, acc_s + 1
+    primary_ok = g.alive[0]
+    addr = jnp.where(primary_ok, addr_h, addr_d)
+    found = jnp.where(primary_ok, found_h, found_d)
+    acc = jnp.where(primary_ok, acc_h, acc_s + 1)
+    return addr, found, acc
+
+
+def scan(g: IndexGroup, lo, hi_key, limit: int, cfg):
+    """SCAN [lo, hi].  Serves from a live sorted replica after draining its
+    log (paper: 'worker threads make sure no index updates remain').
+    Returns (keys [limit], addrs [limit], count)."""
+    g = drain(g, cfg)
+    rep = jnp.argmax(g.alive[1:])
+    srt = jax.tree.map(lambda a: a[rep], g.sorted)
+    return si.range_query(srt, lo, hi_key, limit), g
+
+
+# ---------------------------------------------------------------------------
+# Failures & recovery (§4.3)
+# ---------------------------------------------------------------------------
+def fail(g: IndexGroup, server: int) -> IndexGroup:
+    return g._replace(alive=g.alive.at[server].set(False))
+
+
+def recover_primary(g: IndexGroup, cfg) -> IndexGroup:
+    """Rebuild the hash table from a live sorted replica (drained first)."""
+    g = drain(g, cfg)
+    rep = jnp.argmax(g.alive[1:])
+    srt = jax.tree.map(lambda a: a[rep], g.sorted)
+    keys, addrs, valid = si.items(srt)
+    fresh = hi.create(srt.keys.shape[0], cfg)
+    # insert only valid items: invalid keys hash to garbage buckets but are
+    # masked by routing them to an out-of-range bucket via valid gating
+    # placeholders: unique NEGATIVE keys (application keys are >= 0)
+    junk = -(jnp.arange(keys.shape[0], dtype=keys.dtype) + 2)
+    safe_keys = jnp.where(valid, keys, junk)
+    new_hash, _ = hi.insert(fresh, safe_keys, jnp.where(valid, addrs, -1), cfg)
+    new_hash, _ = hi.delete(new_hash, jnp.where(valid, -1, junk), cfg)
+    return g._replace(hash=new_hash, alive=g.alive.at[0].set(True))
+
+
+def recover_backup(g: IndexGroup, which: int, cfg) -> IndexGroup:
+    """Rebuild a sorted replica from the primary's hash table."""
+    keys_needed = False
+    # the hash index stores (sig, fp, addr) but not the key itself; the
+    # paper rebuilds a skiplist by fetching the hash table *and its keys*
+    # from the data items.  In the core layer the authoritative key set
+    # lives in the surviving replica / log; distributed rebuild fetches it
+    # from the kvstore data servers (see kvstore.recover).  Here we copy
+    # from a live replica (drained), which is the same data.
+    g = drain(g, cfg)
+    src = jnp.argmax(g.alive[1:] & (jnp.arange(g.alive.shape[0] - 1) != which))
+    srt_src = jax.tree.map(lambda a: a[src], g.sorted)
+    new_sorted = jax.tree.map(
+        lambda all_r, one: all_r.at[which].set(one), g.sorted, srt_src)
+    blog_src = jax.tree.map(lambda a: a[src], g.blogs)
+    new_blogs = jax.tree.map(
+        lambda all_r, one: all_r.at[which].set(one), g.blogs, blog_src)
+    return g._replace(sorted=new_sorted, blogs=new_blogs,
+                      alive=g.alive.at[1 + which].set(True))

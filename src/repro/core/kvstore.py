@@ -1,0 +1,334 @@
+"""HiStore: the distributed key-value store over index groups.
+
+Topology (one group per device; cfg.groups_per_device generalises):
+  device g is the PRIMARY server of group g (hash table + primary log + the
+  group's data-server shard) and the BACKUP server for groups g-1 (replica
+  0) and g-2 (replica 1): backup arrays use the SHIFTED layout — slice
+  [r, p] stores replica r of group (p - r - 1) mod G, so placing slice p on
+  device p puts every replica on a different failure domain, and log
+  replication is a ppermute by r+1 hops.
+
+Ops (all shard_map'd over the 1-D "kv" mesh axis; see verbs.py for the
+RDMA-verb mapping):
+  put    — route to owner; owner stores the value on its data shard,
+           appends its log, pushes the entries to both backup logs
+           (ppermute), updates the hash table, acks.
+  get    — one-sided: route, owner-side gather-only probe, value gather,
+           reverse route.  Primary dead -> the query is routed to a backup
+           holder, which consults its pending log + sorted replica.
+  scan   — backup-side: every device drains and range-queries the replicas
+           it holds, results are all_gathered and merged.
+  apply_async — one batched log->sorted merge round on every backup.
+  fail / recover — failure-mask protocol validation (SPMD devices cannot
+           actually vanish; DESIGN.md §Fault tolerance).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hash_index as hix
+from repro.core import log as lg
+from repro.core import sorted_index as six
+from repro.core.hashing import fmix32, key_inf
+from repro.core.verbs import (exchange, replicate_shift, route_build,
+                              route_return)
+
+I32 = jnp.int32
+AXIS = "kv"
+
+
+class KVStore(NamedTuple):
+    hash: hix.HashIndex       # leaves [G, ...]
+    plog: lg.UpdateLog        # leaves [G, ...]
+    bsorted: six.SortedIndex  # leaves [R, G, ...] (shifted layout)
+    blog: lg.UpdateLog        # leaves [R, G, ...]
+    dvals: jnp.ndarray        # [G, dcap, W] data-server shard
+    dfill: jnp.ndarray        # [G]
+    alive: jnp.ndarray        # [G] bool (server up)
+
+
+def create(mesh, capacity_per_group: int, cfg, key_dt=None) -> KVStore:
+    G = mesh.devices.size
+    R = cfg.n_backups
+    rep = lambda t, n: jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), t)
+    one_hash = hix.create(capacity_per_group, cfg)
+    one_plog = lg.create(cfg.log_capacity, key_dt)
+    one_sorted = six.create(capacity_per_group, key_dt)
+    one_blog = lg.create(cfg.log_capacity, key_dt)
+    store = KVStore(
+        hash=rep(one_hash, G),
+        plog=rep(one_plog, G),
+        bsorted=rep(rep(one_sorted, G), R),
+        blog=rep(rep(one_blog, G), R),
+        dvals=jnp.zeros((G, capacity_per_group, cfg.value_words), I32),
+        dfill=jnp.zeros((G,), I32),
+        alive=jnp.ones((G,), bool),
+    )
+    return jax.device_put(store, store_sharding(mesh))
+
+
+def store_sharding(mesh):
+    from jax.sharding import NamedSharding
+
+    def spec(path, leaf=None):
+        return NamedSharding(mesh, P(AXIS))  # placeholder; refined below
+
+    # group axis position differs: hash/plog/dvals shard dim0; bsorted/blog
+    # shard dim1; alive replicated.
+    def mk(tree, dim):
+        return jax.tree.map(lambda _: NamedSharding(
+            mesh, P(*([None] * dim + [AXIS]))), tree)
+
+    dummy_h = hix.HashIndex(0, 0, 0, 0)
+    return KVStore(
+        hash=hix.HashIndex(*[NamedSharding(mesh, P(AXIS))] * 4),
+        plog=lg.UpdateLog(*[NamedSharding(mesh, P(AXIS))] * 5),
+        bsorted=six.SortedIndex(*[NamedSharding(mesh, P(None, AXIS))] * 3),
+        blog=lg.UpdateLog(*[NamedSharding(mesh, P(None, AXIS))] * 5),
+        dvals=NamedSharding(mesh, P(AXIS)),
+        dfill=NamedSharding(mesh, P(AXIS)),
+        alive=NamedSharding(mesh, P()),
+    )
+
+
+def _specs():
+    return KVStore(
+        hash=hix.HashIndex(*[P(AXIS)] * 4),
+        plog=lg.UpdateLog(*[P(AXIS)] * 5),
+        bsorted=six.SortedIndex(*[P(None, AXIS)] * 3),
+        blog=lg.UpdateLog(*[P(None, AXIS)] * 5),
+        dvals=P(AXIS),
+        dfill=P(AXIS),
+        alive=P(),
+    )
+
+
+def owner_group(keys, G: int):
+    """Group routing hash — decorrelated from the bucket hash."""
+    from repro.core.hashing import key_mix
+    h1, h2 = key_mix(keys)
+    return (fmix32(h2 ^ jnp.uint32(0xA5A5A5A5)) % jnp.uint32(G)).astype(I32)
+
+
+def _first_alive_holder(g, alive):
+    """Device to contact for group g: primary g, else backup holders."""
+    G = alive.shape[0]
+    cand = jnp.stack([g % G, (g + 1) % G, (g + 2) % G])
+    ok = alive[cand]
+    pick = jnp.argmax(ok)          # first alive in priority order
+    return cand[pick]
+
+
+# ---------------------------------------------------------------------------
+# shard_map bodies (one device's view; leading group axis is local size 1)
+# ---------------------------------------------------------------------------
+def _sq(tree):
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+def _ex(tree, val):
+    return jax.tree.map(lambda a, v: a.at[0].set(v), tree, val)
+
+
+def _put_body(cfg, G, capacity, store: KVStore, keys, addrs_unused, vals):
+    me = jax.lax.axis_index(AXIS)
+    dest_g = owner_group(keys, G)
+    dest = jax.vmap(lambda g: _first_alive_holder(g, store.alive))(dest_g)
+    bufs, slot, ok_route = route_build(
+        dest, {"k": (keys, 0), "v": (vals, 0), "g": (dest_g, -1)},
+        G, capacity)
+    recv = exchange(bufs, AXIS)
+    rk, rv, rg = recv["k"], recv["v"], recv["g"]
+    valid = rg >= 0
+    # --- owner side: store value on the data shard ----------------------
+    dvals = store.dvals[0]
+    dfill = store.dfill[0]
+    n = valid.shape[0]
+    off = jnp.cumsum(valid.astype(I32)) - 1
+    slot_d = jnp.where(valid, (dfill + off) % dvals.shape[0], dvals.shape[0])
+    dvals = dvals.at[slot_d].set(rv, mode="drop")
+    new_dfill = dfill + valid.sum().astype(I32)
+    addr = jnp.where(valid, me * dvals.shape[0] + slot_d, -1).astype(I32)
+    # --- primary log + hash (only if I am the true primary) -------------
+    am_primary = rg == me
+    ops = jnp.where(valid & am_primary, six.OP_PUT, 0).astype(jnp.int8)
+    plog, ok_p = lg.append(_sq(store.plog), rk, addr, ops,
+                           valid & am_primary)
+    new_hash, ok_h = hix.insert(_sq(store.hash), jnp.where(
+        valid & am_primary, rk, -1), addr, cfg)
+    # --- replicate the entries to backup logs (ppermute r+1 hops) -------
+    blog = store.blog
+    for r in range(store.blog.tail.shape[0]):
+        pk = replicate_shift(rk, r + 1, AXIS)
+        pa = replicate_shift(addr, r + 1, AXIS)
+        po = replicate_shift(ops, r + 1, AXIS)
+        one = jax.tree.map(lambda a: a[r, 0], store.blog)
+        one, _ = lg.append(one, pk, pa, po, po > 0)
+        blog = jax.tree.map(lambda full, v, r=r: full.at[r, 0].set(v),
+                            blog, one)
+    # degraded-write path: requests routed to me as BACKUP holder (primary
+    # dead).  I act as temporary primary: append to my backup log for that
+    # group and forward to the *other* replica holder (paper §4.3).
+    for r in range(store.blog.tail.shape[0]):
+        mine_as_backup = valid & (rg == (me - r - 1) % G) & (rg != me)
+        opsb = jnp.where(mine_as_backup, six.OP_PUT, 0).astype(jnp.int8)
+        one = jax.tree.map(lambda a: a[r, 0], blog)
+        one, _ = lg.append(one, rk, addr, opsb, mine_as_backup)
+        blog = jax.tree.map(lambda full, v, r=r: full.at[r, 0].set(v),
+                            blog, one)
+    if store.blog.tail.shape[0] >= 2:
+        # forward replica-0 degraded entries one hop to the replica-1 holder
+        ops0 = jnp.where(valid & (rg == (me - 1) % G) & (rg != me),
+                         six.OP_PUT, 0).astype(jnp.int8)
+        fk = replicate_shift(rk, 1, AXIS)
+        fa = replicate_shift(addr, 1, AXIS)
+        fo = replicate_shift(ops0, 1, AXIS)
+        one = jax.tree.map(lambda a: a[1, 0], blog)
+        one, _ = lg.append(one, fk, fa, fo, fo > 0)
+        blog = jax.tree.map(lambda full, v: full.at[1, 0].set(v), blog, one)
+    ok_req = (valid & ((am_primary & ok_p & ok_h) | ~am_primary)).astype(I32)
+    back = route_return({"ok": ok_req, "addr": addr}, slot, AXIS)
+    new_store = store._replace(
+        hash=_ex(store.hash, new_hash), plog=_ex(store.plog, plog),
+        blog=blog, dvals=store.dvals.at[0].set(dvals),
+        dfill=store.dfill.at[0].set(new_dfill))
+    return new_store, back["ok"].astype(bool) & ok_route, back["addr"]
+
+
+def _get_body(cfg, G, capacity, store: KVStore, keys):
+    me = jax.lax.axis_index(AXIS)
+    dest_g = owner_group(keys, G)
+    dest = jax.vmap(lambda g: _first_alive_holder(g, store.alive))(dest_g)
+    bufs, slot, ok_route = route_build(
+        dest, {"k": (keys, key_inf(keys.dtype))}, G, capacity)
+    recv = exchange(bufs, AXIS)
+    rk = recv["k"]
+    # --- primary path: one-sided probe (gathers only) -------------------
+    addr_p, found_p, acc_p = hix.lookup(_sq(store.hash), rk, cfg)
+    # --- backup path: pending log + sorted replica (per replica slot) ---
+    addr_b = jnp.full_like(addr_p, -1)
+    found_b = jnp.zeros_like(found_p)
+    acc_b = jnp.zeros_like(acc_p)
+    for r in range(store.blog.tail.shape[0]):
+        srt = jax.tree.map(lambda a: a[r, 0], store.bsorted)
+        blog = jax.tree.map(lambda a: a[r, 0], store.blog)
+        a_s, f_s, c_s = six.search(srt, rk, cfg.fanout)
+        cap_l = blog.keys.shape[0]
+        seq = blog.applied + jnp.arange(cap_l)
+        idx = seq % cap_l
+        pv = seq < blog.tail
+        pk = jnp.where(pv, blog.keys[idx], key_inf(blog.keys.dtype))
+        m = pk[None, :] == rk[:, None]
+        any_m = m.any(axis=1)
+        last = (cap_l - 1) - jnp.argmax(m[:, ::-1], axis=1)
+        hit_op = jnp.where(any_m, blog.ops[idx][last], 0)
+        hit_addr = jnp.where(any_m & (hit_op == six.OP_PUT),
+                             blog.addrs[idx][last], -1)
+        a_r = jnp.where(any_m, hit_addr, a_s)
+        f_r = jnp.where(any_m, hit_op == six.OP_PUT, f_s)
+        sel = (me - r - 1) % G == owner_group(rk, G)
+        addr_b = jnp.where(sel & ~(found_b > 0), a_r, addr_b)
+        found_b = jnp.where(sel, f_r, found_b)
+        acc_b = jnp.where(sel, c_s + 1, acc_b)
+    am_primary = owner_group(rk, G) == me
+    addr = jnp.where(am_primary, addr_p, addr_b)
+    found = jnp.where(am_primary, found_p, found_b)
+    acc = jnp.where(am_primary, acc_p, acc_b)
+    # --- value gather: one-sided read from the LOCAL data shard ---------
+    dcap = store.dvals.shape[1]
+    local_slot = jnp.where(found & (addr // dcap == me), addr % dcap, dcap)
+    vals = jnp.concatenate(
+        [store.dvals[0], jnp.zeros((1,) + store.dvals.shape[2:], I32)]
+    )[jnp.clip(local_slot, 0, dcap)]
+    # remote addr (value written on a different shard during degraded
+    # writes): fetch skipped — flagged for a second-hop read (paper: the
+    # client reads the value from the data server given the address).
+    back = route_return({"addr": addr, "found": found.astype(I32),
+                         "acc": acc, "val": vals}, slot, AXIS)
+    return (back["addr"], back["found"].astype(bool) & ok_route,
+            back["acc"], back["val"])
+
+
+def _apply_body(cfg, batch, store: KVStore):
+    blog = store.blog
+    bsorted = store.bsorted
+    for r in range(store.blog.tail.shape[0]):
+        one_log = jax.tree.map(lambda a: a[r, 0], blog)
+        one_srt = jax.tree.map(lambda a: a[r, 0], bsorted)
+        keys, addrs, ops, one_log = lg.take_pending(one_log, batch)
+        one_srt = six.merge(one_srt, keys, addrs, ops)
+        blog = jax.tree.map(lambda f, v, r=r: f.at[r, 0].set(v), blog, one_log)
+        bsorted = jax.tree.map(lambda f, v, r=r: f.at[r, 0].set(v),
+                               bsorted, one_srt)
+    return store._replace(blog=blog, bsorted=bsorted)
+
+
+def _scan_body(cfg, G, limit, store: KVStore, lo, hi):
+    me = jax.lax.axis_index(AXIS)
+    # drain my replicas, then range-query the ones I should serve
+    st = store
+    for _ in range(4):
+        st = _apply_body(cfg, cfg.async_apply_batch, st)
+    outs_k, outs_a = [], []
+    for r in range(store.blog.tail.shape[0]):
+        srt = jax.tree.map(lambda a: a[r, 0], st.bsorted)
+        k, a, n = six.range_query(srt, lo[0], hi[0], limit)
+        g = (me - r - 1) % G
+        # serve replica r of group g iff I'm alive and (r==0 or the r-1
+        # holder (device g+r) is dead)
+        holder_prev_ok = store.alive[(g + r) % G] if r > 0 else jnp.array(False)
+        serve = store.alive[me] & ((r == 0) | ~holder_prev_ok)
+        k = jnp.where(serve, k, key_inf(k.dtype))
+        a = jnp.where(serve, a, -1)
+        outs_k.append(k)
+        outs_a.append(a)
+    mk = jnp.stack(outs_k)          # [R, limit]
+    ma = jnp.stack(outs_a)
+    allk = jax.lax.all_gather(mk, AXIS).reshape(-1)   # [G*R*limit]
+    alla = jax.lax.all_gather(ma, AXIS).reshape(-1)
+    order = jnp.argsort(allk)
+    return allk[order][:limit], alla[order][:limit], st
+
+
+# ---------------------------------------------------------------------------
+# Public API (jit + shard_map wrappers)
+# ---------------------------------------------------------------------------
+def _smap(mesh, f, in_specs, out_specs):
+    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs,
+                                 check_vma=False))
+
+
+@functools.lru_cache(maxsize=32)
+def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
+    """Build the jitted distributed ops for a mesh."""
+    G = mesh.devices.size
+    S = _specs()
+
+    put = _smap(mesh,
+                lambda st, k, a, v: _put_body(cfg, G, capacity_q, st, k, a, v),
+                (S, P(AXIS), P(AXIS), P(AXIS)),
+                (S, P(AXIS), P(AXIS)))
+    get = _smap(mesh, lambda st, k: _get_body(cfg, G, capacity_q, st, k),
+                (S, P(AXIS)), (P(AXIS), P(AXIS), P(AXIS), P(AXIS)))
+    apply_async = _smap(mesh,
+                        lambda st: _apply_body(cfg, cfg.async_apply_batch, st),
+                        (S,), (S,))
+    scan = _smap(mesh, lambda st, lo, hi: _scan_body(cfg, G, scan_limit,
+                                                     st, lo, hi),
+                 (S, P(AXIS), P(AXIS)), (P(), P(), S))
+    return {"put": put, "get": get, "apply": apply_async, "scan": scan}
+
+
+def fail_server(store: KVStore, dev: int) -> KVStore:
+    return store._replace(alive=store.alive.at[dev].set(False))
+
+
+def recover_server(store: KVStore, dev: int) -> KVStore:
+    return store._replace(alive=store.alive.at[dev].set(True))

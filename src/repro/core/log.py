@@ -1,0 +1,75 @@
+"""Append-only update log (paper §3.2.2).
+
+Each entry is {key, value address, op}; the paper's per-entry "isApplied"
+mark is realised as the ``applied`` prefix pointer (entries are applied to
+the sorted index strictly in order, so a prefix pointer is equivalent and
+cheaper — noted in DESIGN.md).  The log is a ring: capacity bounds the
+number of *pending* (appended-but-unapplied) entries; the engine forces an
+apply when a batch would overflow.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.hashing import key_dtype
+
+I32 = jnp.int32
+
+
+class UpdateLog(NamedTuple):
+    keys: jnp.ndarray     # int64 [cap]
+    addrs: jnp.ndarray    # int32 [cap]
+    ops: jnp.ndarray      # int8  [cap]   (0 invalid / 1 PUT / 2 DEL)
+    tail: jnp.ndarray     # int32 scalar: total appended
+    applied: jnp.ndarray  # int32 scalar: prefix applied to the sorted index
+
+
+def create(capacity: int, dtype=None) -> UpdateLog:
+    return UpdateLog(
+        keys=jnp.zeros((capacity,), dtype or key_dtype()),
+        addrs=jnp.full((capacity,), -1, I32),
+        ops=jnp.zeros((capacity,), jnp.int8),
+        tail=jnp.zeros((), I32),
+        applied=jnp.zeros((), I32),
+    )
+
+
+def append(log: UpdateLog, keys, addrs, ops, valid=None) -> tuple:
+    """Append a batch.  Returns (log, ok): ok=False entries were rejected
+    because the pending window would overflow (engine must drain first)."""
+    cap = log.keys.shape[0]
+    q = keys.shape[0]
+    if valid is None:
+        valid = jnp.ones((q,), bool)
+    offsets = jnp.cumsum(valid.astype(I32)) - 1
+    pending = log.tail - log.applied
+    fits = valid & (pending + offsets + 1 <= cap)
+    slot = jnp.where(fits, (log.tail + offsets) % cap, cap)
+    new = UpdateLog(
+        keys=log.keys.at[slot].set(keys, mode="drop"),
+        addrs=log.addrs.at[slot].set(addrs, mode="drop"),
+        ops=log.ops.at[slot].set(jnp.where(fits, ops, 0), mode="drop"),
+        tail=log.tail + fits.sum().astype(I32),
+        applied=log.applied,
+    )
+    return new, fits | ~valid
+
+
+def pending_count(log: UpdateLog):
+    return log.tail - log.applied
+
+
+def take_pending(log: UpdateLog, batch: int):
+    """Gather up to ``batch`` oldest pending entries (static shape).
+    Returns (keys, addrs, ops(0 for empty), new_log with applied advanced)."""
+    cap = log.keys.shape[0]
+    n = jnp.minimum(pending_count(log), batch)
+    idx = (log.applied + jnp.arange(batch)) % cap
+    live = jnp.arange(batch) < n
+    keys = jnp.where(live, log.keys[idx], 0)
+    addrs = jnp.where(live, log.addrs[idx], -1)
+    ops = jnp.where(live, log.ops[idx], 0).astype(jnp.int8)
+    new = log._replace(applied=log.applied + n)
+    return keys, addrs, ops, new

@@ -1,0 +1,139 @@
+"""Sorted index: the paper's skiplist, re-thought for TPU.
+
+A skiplist is pointer-chased express lanes — hostile to vector units.  The
+TPU-native equivalent (DESIGN.md §Sorted index) is an *implicit hierarchical
+directory over a packed sorted array*: level l is the stride-fanout^l view
+of the keys array; one "hop" loads a fanout-wide node (fanout=128 = the TPU
+lane width) and counts keys <= q branchlessly — exactly a skiplist level
+descent, one vector op per level.  n_accesses = number of levels touched,
+the analogue of the paper's per-lookup memory accesses.
+
+Updates are batched merges (the asynchronous log apply of §3.2.2): the
+incoming batch is sorted and merged with the packed array, newest-wins per
+key, DELETE entries compacted away — the skiplist "list split" cost becomes
+one streaming merge, which is also what the Pallas bitonic/merge kernels
+accelerate.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import key_dtype, key_inf
+
+I32 = jnp.int32
+
+OP_PUT = jnp.int8(1)
+OP_DEL = jnp.int8(2)
+
+
+class SortedIndex(NamedTuple):
+    keys: jnp.ndarray    # int64 [cap], ascending, empty = KEY_INF
+    addrs: jnp.ndarray   # int32 [cap]
+    size: jnp.ndarray    # int32 scalar
+
+
+def create(capacity: int, dtype=None) -> SortedIndex:
+    dtype = dtype or key_dtype()
+    return SortedIndex(
+        keys=jnp.full((capacity,), key_inf(dtype), dtype),
+        addrs=jnp.full((capacity,), -1, I32),
+        size=jnp.zeros((), I32),
+    )
+
+
+def bulk_load(idx: SortedIndex, keys, addrs) -> SortedIndex:
+    """Load (unsorted) pairs into an empty index."""
+    cap = idx.keys.shape[0]
+    order = jnp.argsort(keys)
+    k = keys[order]
+    a = addrs[order]
+    n = keys.shape[0]
+    new_keys = idx.keys.at[:n].set(k)
+    new_addrs = idx.addrs.at[:n].set(a)
+    return SortedIndex(new_keys, new_addrs, jnp.asarray(n, I32))
+
+
+def merge(idx: SortedIndex, keys, addrs, ops) -> SortedIndex:
+    """Apply a batch of log entries (PUT/DEL).  Newest-wins per key; DELETEs
+    compact away.  Invalid entries are marked op=0 (ignored)."""
+    cap = idx.keys.shape[0]
+    m = keys.shape[0]
+    INF = key_inf(idx.keys.dtype)
+    # priority: existing entries 0; batch entries 1..m by arrival order
+    all_keys = jnp.concatenate(
+        [idx.keys, jnp.where(ops > 0, keys.astype(idx.keys.dtype), INF)])
+    all_addrs = jnp.concatenate([idx.addrs, addrs])
+    all_del = jnp.concatenate(
+        [jnp.zeros((cap,), bool), ops == OP_DEL])
+    prio = jnp.concatenate([jnp.zeros((cap,), I32), 1 + jnp.arange(m, dtype=I32)])
+    order = jnp.lexsort((prio, all_keys))
+    k = all_keys[order]
+    a = all_addrs[order]
+    d = all_del[order]
+    # keep the last entry of each equal-key run; drop if it's a DELETE or INF
+    is_last = jnp.concatenate([k[1:] != k[:-1], jnp.ones((1,), bool)])
+    keep = is_last & (~d) & (k != INF)
+    dest = jnp.cumsum(keep) - 1
+    dest = jnp.where(keep, dest, cap + m)  # dropped -> out of range
+    new_keys = jnp.full((cap,), INF, idx.keys.dtype).at[dest].set(
+        k, mode="drop")
+    new_addrs = jnp.full((cap,), -1, I32).at[dest].set(a, mode="drop")
+    return SortedIndex(new_keys, new_addrs, keep.sum().astype(I32))
+
+
+def directory_levels(cap: int, fanout: int) -> int:
+    lv = 1
+    span = fanout
+    while span < cap:
+        span *= fanout
+        lv += 1
+    return lv
+
+
+def search(idx: SortedIndex, keys, fanout: int = 128):
+    """Hierarchical lookup.  keys: [Q] -> (addr, found, n_accesses).
+
+    Descends the implicit directory: at level l (stride fanout^l) it loads
+    the fanout-wide node starting at the current position and counts
+    entries <= key (branchless).  n_accesses = levels = ceil(log_f cap)."""
+    cap = idx.keys.shape[0]
+    levels = directory_levels(cap, fanout)
+    Q = keys.shape[0]
+    pos = jnp.zeros((Q,), I32)           # node start, in units of stride
+    for l in range(levels - 1, -1, -1):
+        stride = fanout ** l
+        offs = jnp.arange(fanout, dtype=I32)
+        gather_idx = pos[:, None] + offs[None, :] * stride   # [Q, fanout]
+        node = idx.keys[jnp.clip(gather_idx, 0, cap - 1)]
+        node = jnp.where(gather_idx < cap, node, key_inf(idx.keys.dtype))
+        cnt = (node <= keys[:, None]).sum(axis=1).astype(I32)
+        step = jnp.maximum(cnt - 1, 0)
+        pos = pos + step * stride
+    found = idx.keys[pos] == keys
+    addr = jnp.where(found, idx.addrs[pos], -1)
+    n_acc = jnp.full((Q,), levels, I32)
+    return addr, found, n_acc
+
+
+def range_query(idx: SortedIndex, lo, hi, limit: int):
+    """SCAN [lo, hi]: up to ``limit`` ascending entries.
+    lo, hi: scalars.  Returns (keys [limit], addrs [limit], count)."""
+    cap = idx.keys.shape[0]
+    start = jnp.searchsorted(idx.keys, lo)
+    take = jnp.clip(start + jnp.arange(limit), 0, cap - 1)
+    k = idx.keys[take]
+    a = idx.addrs[take]
+    INF = key_inf(idx.keys.dtype)
+    valid = ((start + jnp.arange(limit)) < cap) & (k <= hi) & (k != INF)
+    k = jnp.where(valid, k, INF)
+    a = jnp.where(valid, a, -1)
+    return k, a, valid.sum().astype(I32)
+
+
+def items(idx: SortedIndex):
+    """(keys, addrs, valid) of live entries (for rebuilds)."""
+    valid = idx.keys != key_inf(idx.keys.dtype)
+    return idx.keys, idx.addrs, valid

@@ -1,0 +1,82 @@
+"""RDMA-verb analogues on the TPU interconnect (DESIGN.md §Verb mapping).
+
+The paper's communication primitives map onto jax.lax collectives inside
+shard_map:
+
+  one-sided READ   -> capacity-routed all_to_all pair: the client computes
+                      the remote address locally (hash), the owner shard
+                      executes only gathers (no "server CPU" logic beyond
+                      address arithmetic — the DMA analogue), results come
+                      back on the reverse all_to_all.  2 hops = 1 RTT.
+  two-sided SEND   -> the same routed all_to_all, but the owner runs real
+                      per-request logic (log append, index update) before
+                      acking — the RPC analogue.
+  log replication  -> collective_permute to the next R devices (primary ->
+                      backups), matching the shifted backup layout.
+
+Routing is capacity-based (fixed [D, c] exchange buffers, the standard TPU
+static-shape dispatch, same machinery as MoE token routing): overflow
+entries are reported to the caller, which retries — the analogue of an RPC
+queue-full push-back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+I32 = jnp.int32
+
+
+def route_build(dest, payloads: dict, n_dev: int, capacity: int):
+    """Pack per-query payload rows into a [n_dev * capacity, ...] send
+    buffer bucketed by destination.  Returns (buffers, slot, ok) where
+    ``slot`` is each query's position in the exchange buffer (kept by the
+    sender for return routing) and ok=False marks capacity overflow."""
+    q = dest.shape[0]
+    pos = jnp.arange(q)
+    order = jnp.lexsort((pos, dest))
+    d_s = dest[order]
+    start = jnp.searchsorted(d_s, d_s)
+    rank = jnp.arange(q) - start
+    ok_s = rank < capacity
+    slot_s = jnp.where(ok_s, d_s * capacity + rank, n_dev * capacity)
+    bufs = {}
+    for name, (arr, fill) in payloads.items():
+        shape = (n_dev * capacity,) + arr.shape[1:]
+        buf = jnp.full(shape, fill, arr.dtype)
+        bufs[name] = buf.at[slot_s].set(arr[order], mode="drop")
+    slot = jnp.full((q,), n_dev * capacity, I32).at[order].set(
+        slot_s.astype(I32))
+    ok = jnp.zeros((q,), bool).at[order].set(ok_s)
+    return bufs, slot, ok
+
+
+def exchange(bufs: dict, axis: str):
+    """all_to_all a dict of [n_dev * c, ...] buffers (forward or reverse)."""
+    out = {}
+    for name, arr in bufs.items():
+        n_dev = jax.lax.axis_size(axis)
+        c = arr.shape[0] // n_dev
+        out[name] = jax.lax.all_to_all(
+            arr.reshape((n_dev, c) + arr.shape[1:]), axis,
+            split_axis=0, concat_axis=0).reshape(arr.shape)
+    return out
+
+
+def route_return(result_bufs: dict, slot, axis: str):
+    """Send per-request results back and gather each query's answer."""
+    back = exchange(result_bufs, axis)
+    out = {}
+    for name, arr in back.items():
+        pad = jnp.zeros((1,) + arr.shape[1:], arr.dtype)
+        padded = jnp.concatenate([arr, pad], axis=0)
+        out[name] = padded[jnp.clip(slot, 0, arr.shape[0])]
+    return out
+
+
+def replicate_shift(x, shift: int, axis: str):
+    """collective_permute by +shift along the ring: primary d -> backup
+    holder d+shift (the paper's primary->backup log push)."""
+    n = jax.lax.axis_size(axis)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return jax.lax.ppermute(x, axis, perm)

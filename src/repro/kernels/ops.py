@@ -1,0 +1,59 @@
+"""Jitted public wrappers over the Pallas kernels.
+
+The wrappers own the host-side prep (key hashing, capacity padding) and the
+interpret-mode switch: on CPU (this container) kernels run with
+interpret=True; on real TPU the same call sites compile the Mosaic kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import bucket_of, sig_fp_of
+from repro.kernels.bitonic_sort import bitonic_sort_kernel
+from repro.kernels.hash_probe import hash_probe_kernel
+from repro.kernels.sorted_search import sorted_search_kernel
+
+I32 = jnp.int32
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hash_probe(index, keys, cfg, *, q_block: int = 256):
+    """GET probe through the Pallas kernel.  index: core.hash_index
+    HashIndex; keys: [Q].  Returns (addr, found bool, n_accesses)."""
+    nb = index.sig.shape[0]
+    b = bucket_of(keys, nb)
+    sig, fp = sig_fp_of(keys)
+    Q = keys.shape[0]
+    pad = (-Q) % q_block
+    if pad:
+        b = jnp.pad(b, (0, pad))
+        sig = jnp.pad(sig, (0, pad), constant_values=-7)  # never matches
+        fp = jnp.pad(fp, (0, pad))
+    addr, found, acc = hash_probe_kernel(
+        b, sig, fp, index.sig, index.fp, index.addr,
+        slots_per_bucket=cfg.slots_per_bucket, q_block=q_block,
+        interpret=_interpret())
+    return addr[:Q], found[:Q].astype(bool), acc[:Q]
+
+
+def sorted_search(index, queries, *, fanout: int = 128, q_block: int = 256):
+    """Point lookup on a SortedIndex through the Pallas kernel.
+    Requires int32 keys (canonical x32 codec)."""
+    assert index.keys.dtype == jnp.int32, "kernel path uses int32 keys"
+    Q = queries.shape[0]
+    pad = (-Q) % q_block
+    q = jnp.pad(queries, (0, pad), constant_values=-1) if pad else queries
+    addr, found, acc = sorted_search_kernel(
+        q.astype(I32), index.keys, index.addrs, fanout=fanout,
+        q_block=q_block, interpret=_interpret())
+    return addr[:Q], found[:Q].astype(bool), acc[:Q]
+
+
+def sort_pairs(keys, vals, *, row_block: int = 8):
+    """Rowwise (key, payload) sort via the bitonic kernel."""
+    return bitonic_sort_kernel(keys.astype(I32), vals.astype(I32),
+                               row_block=row_block, interpret=_interpret())

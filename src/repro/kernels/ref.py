@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+I32 = jnp.int32
+KEY_INF32 = jnp.iinfo(jnp.int32).max
+
+
+def ref_hash_probe(bucket, qsig, qfp, sig, fp, addr, *, slots_per_bucket):
+    """Oracle for hash_probe_kernel (mirrors core.hash_index.lookup)."""
+    rows_sig = sig[bucket]
+    rows_fp = fp[bucket]
+    rows_addr = addr[bucket]
+    CS = sig.shape[1]
+    match = (rows_sig == qsig[:, None]) & (rows_fp == qfp[:, None])
+    found = match.any(axis=1)
+    off = jnp.argmax(match, axis=1)
+    out_addr = jnp.where(found, jnp.take_along_axis(
+        rows_addr, off[:, None], axis=1)[:, 0], -1)
+    occ = (rows_sig != 0).sum(axis=1)
+    S = slots_per_bucket
+    acc = jnp.where(found, off // S + 1,
+                    jnp.maximum((occ + S - 1) // S, 1))
+    return out_addr, found.astype(I32), acc.astype(I32)
+
+
+def ref_sorted_search(queries, keys, addrs, *, fanout=128):
+    """Oracle for sorted_search_kernel (directory descent semantics)."""
+    cap = keys.shape[0]
+    levels = 1
+    span = fanout
+    while span < cap:
+        span *= fanout
+        levels += 1
+    pos = jnp.zeros(queries.shape, I32)
+    for li in range(levels):
+        stride = fanout ** (levels - 1 - li)
+        idx = pos[:, None] + jnp.arange(fanout, dtype=I32)[None, :] * stride
+        node = keys[jnp.clip(idx, 0, cap - 1)]
+        node = jnp.where(idx < cap, node, KEY_INF32)
+        cnt = (node <= queries[:, None]).sum(axis=1).astype(I32)
+        pos = pos + jnp.maximum(cnt - 1, 0) * stride
+    found = keys[pos] == queries
+    out = jnp.where(found, addrs[pos], -1)
+    return out, found.astype(I32), jnp.full(queries.shape, levels, I32)
+
+
+def ref_mamba_scan(x, dt, B_ssm, C_ssm, A):
+    """Oracle for mamba_scan_kernel: sequential selective scan."""
+    import jax
+    Bsz, S, di = x.shape
+    N = B_ssm.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, t):
+        a = jnp.exp(dt[:, t].astype(f32)[..., None] * A)     # [B,di,N]
+        b = ((dt[:, t] * x[:, t]).astype(f32)[..., None]
+             * B_ssm[:, t].astype(f32)[:, None, :])
+        h = a * h + b
+        y = (h * C_ssm[:, t].astype(f32)[:, None, :]).sum(-1)
+        return h, y.astype(x.dtype)
+
+    h0 = jnp.zeros((Bsz, di, N), f32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def ref_bitonic_sort(keys, vals):
+    """Oracle for bitonic_sort_kernel: rowwise stable sort by key."""
+    order = jnp.argsort(keys, axis=1, stable=True)
+    return (jnp.take_along_axis(keys, order, axis=1),
+            jnp.take_along_axis(vals, order, axis=1))

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  Everything below is ordinary.
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with production shardings, prove memory fit, and extract the
+roofline terms.
+
+Per cell:
+  * single-pod (16x16): full SCANNED lowering -> compile proof +
+    memory_analysis; then COMPOSITIONAL cost (per-layer unrolled lowerings
+    x layer counts + n_layers=0 base, see roofline/compositional.py) ->
+    exact flops / bytes / collective bytes for the roofline terms.
+  * multi-pod (2x16x16) SCANNED lowering -> proves the "pod" axis shards
+    (compile success is the deliverable; metrics also recorded).
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json, consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mistral-large-123b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # full sweep
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES, all_archs, get_config, input_specs,
+                           shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import init_cache, init_params
+from repro.optim.adamw import adamw_init
+from repro.roofline.analysis import (active_params, collective_bytes_from_hlo,
+                                     model_flops, roofline_terms)
+from repro.serving.serve_step import prefill, serve_step
+from repro.sharding.context import use_mesh
+from repro.sharding.partition import (cache_pspecs, input_pspecs, opt_pspecs,
+                                      param_pspecs, to_named)
+from repro.train.step import train_step
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _tune_for_shape(cfg, shape):
+    """Bound unrolled-HLO size: wide attention blocks for 32k prefill."""
+    if shape.kind == "prefill":
+        cfg = cfg.scaled(attn_q_block=2048, attn_kv_block=2048)
+    if shape.kind == "train":
+        cfg = cfg.scaled(attn_q_block=1024, attn_kv_block=1024)
+    return cfg
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               comp: bool = True, opts: str = ""):
+    unroll = False   # full program is always lowered scanned (fast compile)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    cfg = _tune_for_shape(cfg, shape).with_opts(opts)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    key = jax.random.PRNGKey(0)
+    return _lower_cell_inner(cfg, arch, shape_name, shape, mesh, multi_pod,
+                             comp, key, opts)
+
+
+def _lower_cell_inner(cfg, arch, shape_name, shape, mesh, multi_pod, comp,
+                      key, opts):
+    from repro.sharding.context import use_mesh as _use
+    with _use(mesh):
+        return _lower_cell_body(cfg, arch, shape_name, shape, mesh,
+                                multi_pod, comp, key, opts)
+
+
+def _lower_cell_body(cfg, arch, shape_name, shape, mesh, multi_pod, comp,
+                     key, opts):
+    unroll = False   # full program always scanned; compositional unrolls
+    params_s = jax.eval_shape(lambda k: init_params(cfg, k), key)
+    p_spec = param_pspecs(cfg, params_s, mesh)
+    p_shard = to_named(mesh, p_spec)
+    inputs = input_specs(cfg, shape)
+    in_shard = to_named(mesh, input_pspecs(cfg, shape, inputs, mesh))
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_s = jax.eval_shape(adamw_init, params_s)
+        o_shard = to_named(mesh, opt_pspecs(cfg, opt_s, mesh))
+
+        def step(p, o, b):
+            return train_step(cfg, p, o, b, unroll=unroll)
+
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, in_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_s, opt_s, inputs)
+    elif shape.kind == "prefill":
+        def step(p, b):
+            return prefill(cfg, p, b, unroll=unroll)
+
+        jitted = jax.jit(step, in_shardings=(p_shard, in_shard))
+        lowered = jitted.lower(params_s, inputs)
+    else:  # decode
+        cache_s = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+        c_shard = to_named(mesh, cache_pspecs(cfg, shape, cache_s, mesh))
+
+        def step(p, c, b):
+            return serve_step(cfg, p, c, b)
+
+        jitted = jax.jit(step, in_shardings=(p_shard, c_shard, in_shard),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params_s, cache_s, inputs)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    n_total, n_active = active_params(cfg, params_s)
+    n_chips = 512 if multi_pod else 256
+    mflops = model_flops(cfg, n_total, n_active, shape)
+
+    # compositional exact cost (single-pod roofline only)
+    comp_cost = None
+    if comp and not multi_pod:
+        from repro.roofline.compositional import compositional_cost
+        t0 = time.time()
+        comp_cost = compositional_cost(cfg, shape, mesh)
+        comp_cost["t_comp_s"] = round(time.time() - t0, 1)
+    if comp_cost is not None:
+        flops = comp_cost["flops"]
+        byts = comp_cost["bytes"]
+        coll_total = comp_cost["coll_bytes"]
+    else:
+        flops = float(ca.get("flops", 0.0))
+        byts = float(ca.get("bytes accessed", 0.0))
+        coll_total = coll["total_bytes"]
+    terms = roofline_terms(flops, byts, coll_total)
+    rec = {
+        "arch": arch, "shape": shape_name, "opts": opts,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "cost_source": "compositional" if comp_cost else "scanned",
+        "status": "ok",
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "flops_per_dev": flops, "bytes_per_dev": byts,
+        "scanned_cost": {"flops": float(ca.get("flops", 0.0)),
+                         "bytes": float(ca.get("bytes accessed", 0.0))},
+        "collectives": coll if comp_cost is None else {
+            "total_bytes": coll_total,
+            "bytes_by_type": comp_cost["coll_by_type"],
+            "scanned_program": coll},
+        "compositional": comp_cost,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": (ma.argument_size_in_bytes
+                                    + ma.output_size_in_bytes
+                                    + ma.temp_size_in_bytes
+                                    - ma.alias_size_in_bytes),
+        },
+        "params_total": int(n_total), "params_active": int(n_active),
+        "model_flops_global": mflops,
+        "useful_flops_ratio": (mflops / (flops * n_chips)) if flops else 0.0,
+        "roofline": terms,
+        "hlo_bytes": len(hlo),
+    }
+    return rec
+
+
+def run_cell(arch, shape_name, multi_pod, comp, outdir: Path, opts="",
+             tag_suffix=""):
+    tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    if tag_suffix:
+        tag += f"__{tag_suffix}"
+    out = outdir / f"{tag}.json"
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod=multi_pod, comp=comp,
+                         opts=opts)
+    except Exception as e:  # noqa: BLE001 - sweep must survive cell failures
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    status = rec.get("status")
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" compute={r['compute_s']:.3f}s mem={r['memory_s']:.3f}s"
+                 f" coll={r['collective_s']:.3f}s dom={r['dominant']}"
+                 f" compile={rec['t_compile_s']}s")
+    elif status == "error":
+        extra = " " + rec["error"][:160]
+    print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--scanned", action="store_true",
+                    help="skip the compositional cost pass (fast; memory/"
+                         "proof only)")
+    ap.add_argument("--out", default=str(RESULTS))
+    ap.add_argument("--set", default="", dest="opts",
+                    help="cfg overrides k=v,k=v (hillclimb variants)")
+    ap.add_argument("--tag", default="", help="suffix for the output file")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+
+    cells = []
+    if args.all:
+        for a in all_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+    n_ok = n_fail = 0
+    for a, s in cells:
+        comp = (not args.multi_pod) and (not args.scanned)
+        rec = run_cell(a, s, args.multi_pod, comp, outdir, opts=args.opts,
+                       tag_suffix=args.tag)
+        if rec.get("status") in ("ok", "skipped"):
+            n_ok += 1
+        else:
+            n_fail += 1
+    print(f"[dryrun] done: {n_ok} ok/skip, {n_fail} failed", flush=True)
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,3 @@
+from repro.models.transformer import (  # noqa: F401
+    init_params, apply_model, init_cache, decode_step, count_params,
+)

@@ -1,0 +1,488 @@
+"""Attention: GQA (global + sliding-window) and MLA, with train/prefill
+(blockwise online-softmax "flash" formulation in pure jnp) and single-token
+decode paths over a position-tagged ring-buffer KV cache.
+
+Design notes
+------------
+* flash_attention scans q blocks; per q block an inner scan over kv blocks
+  keeps fp32 running (max, sum, acc).  ``unroll=True`` fully unrolls both
+  scans so compiled cost analysis counts every block (used by the roofline
+  dry-run; see launch/dryrun.py).
+* The baseline causal path visits every kv block and masks (the standard
+  naive-flash baseline, ~2x attention-flop waste).  ``cfg.attn_block_skip``
+  switches to a divide-and-conquer causal decomposition
+  (causal(S) = 2 x causal(S/2) + rect(S/2 x S/2)) that skips the fully
+  masked half with static shapes — a §Perf hillclimb lever.
+* Sliding-window layers gather only the ceil(W/blk)+1 kv blocks that
+  intersect the window -> O(S*window) flops, not O(S^2).
+* Decode caches are ring buffers tagged with per-slot positions (pos_buf),
+  so local layers keep only window-sized caches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_init
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _constrain_cache(k_cache, v_cache, mode: str = "seq"):
+    """Pin KV-cache sharding after the decode scatter.
+
+    mode="seq": shard the cache LENGTH over model (flash-decode style) —
+    scores stay local per sequence shard and only the [B,H,hd] weighted
+    partials + softmax stats cross the interconnect (psum).
+    mode="hd": shard head_dim (C2 variant; psums full-length scores)."""
+    from repro.sharding.context import constrain, get_mesh
+    mesh = get_mesh()
+    if mesh is None:
+        return k_cache, v_cache
+    msz = mesh.shape.get("model", 1)
+    B, cap, Hkv, hd = k_cache.shape
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dpsz = 1
+    for a in dp:
+        dpsz *= mesh.shape[a]
+    if B % dpsz:
+        # SP mode (batch==1 long-context): cache length is data-sharded at
+        # the jit boundary; forcing model-sharding here would reshard it
+        return k_cache, v_cache
+    if mode == "seq" and cap % msz == 0 and cap >= msz:
+        axes = (dp, "model", None, None)
+    elif Hkv % msz == 0 and Hkv >= msz:
+        axes = (dp, None, "model", None)
+    elif hd % msz == 0 and hd >= msz:
+        axes = (dp, None, None, "model")
+    else:
+        axes = (dp, "model", None, None)
+    return constrain(k_cache, *axes), constrain(v_cache, *axes)
+
+
+def _seq_shard_ok(k_cache):
+    from repro.sharding.context import get_mesh
+    mesh = get_mesh()
+    if mesh is None:
+        return False
+    msz = mesh.shape.get("model", 1)
+    B, cap = k_cache.shape[0], k_cache.shape[1]
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    return cap % msz == 0 and cap >= msz and B % dp == 0
+
+
+def _sharded_cache_update(k_cache, v_cache, pos_buf, k_new, v_new, pos):
+    """In-place ring write into a (batch=dp, cap=model)-sharded cache."""
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.context import get_mesh
+    mesh = get_mesh()
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    cap = k_cache.shape[1]
+    msz = mesh.shape.get("model", 1)
+    capl = cap // msz
+
+    def body(ck, cv, pb, kn, vn, ps):
+        mi = _jax.lax.axis_index("model")
+        slot = ps % cap
+        local = slot - mi * capl
+        li = jnp.where((local >= 0) & (local < capl), local, capl)
+        bidx = jnp.arange(ck.shape[0])
+        ck = ck.at[bidx, li].set(kn, mode="drop")
+        cv = cv.at[bidx, li].set(vn, mode="drop")
+        pb = pb.at[bidx, li].set(ps, mode="drop")
+        return ck, cv, pb
+
+    fn = _jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp_spec, "model", None, None),
+                  P(dp_spec, "model", None, None),
+                  P(dp_spec, "model"),
+                  P(dp_spec, None, None), P(dp_spec, None, None), P(dp_spec)),
+        out_specs=(P(dp_spec, "model", None, None),
+                   P(dp_spec, "model", None, None),
+                   P(dp_spec, "model")),
+        check_vma=False)
+    return fn(k_cache, v_cache, pos_buf, k_new, v_new, pos)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+def attn_init(cfg, key, kind: str) -> dict:
+    dt = cfg.param_dtype
+    D = cfg.d_model
+    if kind == "mla":
+        H, r = cfg.n_heads, cfg.kv_lora_rank
+        nope, rope, hv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        ks = jax.random.split(key, 6)
+        s = D ** -0.5
+        return {
+            "wq": (jax.random.normal(ks[0], (D, H * (nope + rope)), F32) * s).astype(dt),
+            "w_dkv": (jax.random.normal(ks[1], (D, r), F32) * s).astype(dt),
+            "w_kr": (jax.random.normal(ks[5], (D, rope), F32) * s).astype(dt),
+            "w_uk": (jax.random.normal(ks[2], (r, H * nope), F32) * r ** -0.5).astype(dt),
+            "w_uv": (jax.random.normal(ks[3], (r, H * hv), F32) * r ** -0.5).astype(dt),
+            "wo": (jax.random.normal(ks[4], (H * hv, D), F32) * (H * hv) ** -0.5).astype(dt),
+            "kv_norm": rmsnorm_init(r, dt),
+        }
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    s = D ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (D, H * hd), F32) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (D, Hkv * hd), F32) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (D, Hkv * hd), F32) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (H * hd, D), F32) * (H * hd) ** -0.5).astype(dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention, pure jnp
+# ---------------------------------------------------------------------------
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_block: int = 512, kv_block: int = 512,
+                    unroll: bool = False, return_stats: bool = False):
+    """q: [B,Sq,H,hdq]; k: [B,Skv,Hkv,hdq]; v: [B,Skv,Hkv,hdv] -> [B,Sq,H,hdv].
+
+    ``causal`` assumes Sq == Skv.  ``window`` > 0 restricts each query to the
+    last ``window`` keys (implies causal).  With ``return_stats`` also
+    returns the per-row online-softmax stats (m, l) with shape
+    [B, Sq, Hkv, G] (used by the divide-and-conquer merge).
+    """
+    B, Sq, H, hdq = q.shape
+    Skv, Hkv, hdv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // Hkv
+    qb = min(q_block, Sq)
+    kvb = min(kv_block, Skv)
+    nq, nkv = Sq // qb, Skv // kvb
+    scale = hdq ** -0.5
+    qg = q.reshape(B, nq, qb, Hkv, G, hdq)
+
+    if window:
+        assert Sq == Skv
+        return _sliding_window(qg, k, v, window, qb, scale, unroll)
+
+    kb = k.reshape(B, nkv, kvb, Hkv, hdq)
+    vb = v.reshape(B, nkv, kvb, Hkv, hdv)
+
+    def q_step(_, qi):
+        q_blk = qg[:, qi] * scale                              # [B,qb,Hkv,G,hd]
+        q_pos = qi * qb + jnp.arange(qb)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", q_blk, kb[:, kj],
+                           preferred_element_type=F32)
+            if causal:
+                kv_pos = kj * kvb + jnp.arange(kvb)
+                mask = q_pos[:, None] >= kv_pos[None, :]       # [qb,kvb]
+                s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bqhgk,bkhv->bqhgv", p.astype(v.dtype), vb[:, kj],
+                            preferred_element_type=F32)
+            return (m_new, l_new, acc * alpha[..., None] + pv), None
+
+        init = (jnp.full((B, qb, Hkv, G), NEG_INF, F32),
+                jnp.zeros((B, qb, Hkv, G), F32),
+                jnp.zeros((B, qb, Hkv, G, hdv), F32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nkv),
+                                      unroll=nkv if unroll else 1)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, (out.astype(q.dtype), m, l)
+
+    _, (outs, ms, ls) = jax.lax.scan(q_step, None, jnp.arange(nq),
+                                     unroll=nq if unroll else 1)
+    # outs: [nq, B, qb, Hkv, G, hdv] -> [B, Sq, H, hdv]
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hkv, G, hdv)
+    out = out.reshape(B, Sq, H, hdv)
+    if return_stats:
+        m = jnp.moveaxis(ms, 0, 1).reshape(B, Sq, Hkv, G)
+        l = jnp.moveaxis(ls, 0, 1).reshape(B, Sq, Hkv, G)
+        return out, m, l
+    return out
+
+
+def _merge_two(o1, m1, l1, o2, m2, l2, out_dtype):
+    """Merge two normalised online-softmax partial results over the same
+    queries but disjoint key sets."""
+    m = jnp.maximum(m1, m2)
+    w1 = l1 * jnp.exp(m1 - m)
+    w2 = l2 * jnp.exp(m2 - m)
+    denom = jnp.maximum(w1 + w2, 1e-30)
+    G = o1.shape  # [B,S,H,hdv]; stats are [B,S,Hkv,G]
+    B, S, H, hdv = o1.shape
+    Hkv = m1.shape[2]
+    g = H // Hkv
+    w1e = w1.reshape(B, S, H)[..., None].astype(F32)
+    w2e = w2.reshape(B, S, H)[..., None].astype(F32)
+    de = denom.reshape(B, S, H)[..., None]
+    o = (o1.astype(F32) * w1e + o2.astype(F32) * w2e) / de
+    return (o.astype(out_dtype),
+            m, (w1 + w2))
+
+
+def causal_divide_conquer(q, k, v, *, q_block: int = 512, leaf: int = 2048,
+                          unroll: bool = False, return_stats: bool = False):
+    """Exact causal attention via causal(S) = [causal(front half)] ++
+    [merge(causal(back half), rect(back q x front kv))].
+
+    The strictly-upper half of the score matrix is never materialised or
+    computed, halving attention flops with fully static shapes.  Trace-time
+    recursion bottoms out at ``leaf`` where the masked flash path runs.
+    """
+    B, S, H, _ = q.shape
+    if S <= leaf:
+        return flash_attention(q, k, v, causal=True, q_block=q_block,
+                               kv_block=q_block, unroll=unroll,
+                               return_stats=return_stats)
+    h = S // 2
+    front = causal_divide_conquer(q[:, :h], k[:, :h], v[:, :h],
+                                  q_block=q_block, leaf=leaf, unroll=unroll,
+                                  return_stats=True)
+    back_diag = causal_divide_conquer(q[:, h:], k[:, h:], v[:, h:],
+                                      q_block=q_block, leaf=leaf,
+                                      unroll=unroll, return_stats=True)
+    back_rect = flash_attention(q[:, h:], k[:, :h], v[:, :h], causal=False,
+                                q_block=q_block, kv_block=q_block,
+                                unroll=unroll, return_stats=True)
+    o_b, m_b, l_b = _merge_two(*back_diag, *back_rect, q.dtype)
+    o_f, m_f, l_f = front
+    out = jnp.concatenate([o_f, o_b], axis=1)
+    if return_stats:
+        return out, jnp.concatenate([m_f, m_b], 1), jnp.concatenate([l_f, l_b], 1)
+    return out
+
+
+def _sliding_window(qg, k, v, window: int, qb: int, scale, unroll):
+    """Local attention: q block qi gathers the nwin kv blocks covering
+    [qi*qb - window + 1, (qi+1)*qb) and masks exactly.  O(S * window)."""
+    B, nq, _, Hkv, G, hdq = qg.shape
+    hdv = v.shape[3]
+    S = nq * qb
+    nwin = (window + qb - 1) // qb + 1           # kv blocks per q block
+    pad = (nwin - 1) * qb
+    kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+    def q_step(_, qi):
+        q_blk = qg[:, qi] * scale
+        start = qi * qb                          # padded coord of window start
+        k_win = jax.lax.dynamic_slice_in_dim(kp, start, nwin * qb, axis=1)
+        v_win = jax.lax.dynamic_slice_in_dim(vp, start, nwin * qb, axis=1)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", q_blk, k_win,
+                       preferred_element_type=F32)
+        q_pos = qi * qb + jnp.arange(qb)
+        kv_pos = qi * qb - pad + jnp.arange(nwin * qb)   # logical positions
+        mask = ((q_pos[:, None] >= kv_pos[None, :])
+                & (q_pos[:, None] - kv_pos[None, :] < window)
+                & (kv_pos[None, :] >= 0))
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = p.sum(axis=-1)
+        pv = jnp.einsum("bqhgk,bkhv->bqhgv", p.astype(v.dtype), v_win,
+                        preferred_element_type=F32)
+        out = pv / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(k.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq),
+                           unroll=nq if unroll else 1)
+    outs = jnp.moveaxis(outs, 0, 1).reshape(B, S, Hkv, G, hdv)
+    H = Hkv * G
+    return outs.reshape(B, S, H, hdv)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (train/prefill)
+# ---------------------------------------------------------------------------
+def gqa_apply(cfg, params, x, positions, *, window: int = 0,
+              unroll: bool = False):
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    k = (x @ params["wk"]).reshape(B, S, Hkv, hd)
+    v = (x @ params["wv"]).reshape(B, S, Hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attn_impl == "naive":
+        o = _naive_attention(q, k, v, window)
+    elif cfg.attn_block_skip and not window:
+        o = causal_divide_conquer(q, k, v, q_block=cfg.attn_q_block,
+                                  leaf=2 * cfg.attn_q_block, unroll=unroll)
+    else:
+        o = flash_attention(q, k, v, causal=True, window=window,
+                            q_block=cfg.attn_q_block,
+                            kv_block=cfg.attn_kv_block, unroll=unroll)
+    return o.reshape(B, S, H * hd) @ params["wo"]
+
+
+def _naive_attention(q, k, v, window: int = 0):
+    """Materialised-scores oracle (smoke tests / tiny shapes only)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k,
+                   preferred_element_type=F32) * hd ** -0.5
+    qp, kp = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+    mask = qp >= kp
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=F32).astype(q.dtype)
+    return o.reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA decode (single token, ring-buffer cache)
+# ---------------------------------------------------------------------------
+def gqa_cache_init(cfg, batch: int, seq_len: int, *, window: int = 0) -> dict:
+    cap = min(window, seq_len) if window else seq_len
+    Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.param_dtype
+    return {
+        "k": jnp.zeros((batch, cap, Hkv, hd), dt),
+        "v": jnp.zeros((batch, cap, Hkv, hd), dt),
+        "pos": jnp.full((batch, cap), -1, jnp.int32),
+    }
+
+
+def gqa_decode(cfg, params, x, pos, cache, *, window: int = 0):
+    """x: [B, 1, D]; pos: [B] current position. Returns (out [B,1,D], cache)."""
+    B, _, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    G = H // Hkv
+    q = (x @ params["wq"]).reshape(B, 1, H, hd)
+    k = (x @ params["wk"]).reshape(B, 1, Hkv, hd)
+    v = (x @ params["wv"]).reshape(B, 1, Hkv, hd)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    cap = cache["k"].shape[1]
+    slot = pos % cap
+    bidx = jnp.arange(B)
+    if cfg.decode_cache_hint and _seq_shard_ok(cache["k"]):
+        # sequence-sharded cache: do the slot write as a shard_map-local
+        # scatter (GSPMD otherwise lowers scatter-into-sharded-dim to a
+        # full-cache masked select) — §Perf hillclimb C4
+        k_cache, v_cache, pos_buf = _sharded_cache_update(
+            cache["k"], cache["v"], cache["pos"], k[:, 0], v[:, 0], pos)
+    else:
+        k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+        v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+        pos_buf = cache["pos"].at[bidx, slot].set(pos)
+        if cfg.decode_cache_hint:
+            k_cache, v_cache = _constrain_cache(k_cache, v_cache)
+    qg = q.reshape(B, Hkv, G, hd) * hd ** -0.5
+    if cfg.decode_cache_hint:
+        # q replicated over model (tiny); scores stay sequence-sharded
+        from repro.sharding.context import constrain
+        qg = constrain(qg, ("pod", "data"), None, None, None)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=F32)
+    valid = (pos_buf >= 0) & (pos_buf <= pos[:, None])
+    if window:
+        valid &= (pos[:, None] - pos_buf) < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v_cache,
+                   preferred_element_type=F32).astype(x.dtype)
+    out = o.reshape(B, 1, H * hd) @ params["wo"]
+    return out, {"k": k_cache, "v": v_cache, "pos": pos_buf}
+
+
+# ---------------------------------------------------------------------------
+# MLA (train/prefill decompressed; decode absorbed over compressed cache)
+# ---------------------------------------------------------------------------
+def mla_apply(cfg, params, x, positions, *, unroll: bool = False):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    r, nope, rope_d, hv = (cfg.kv_lora_rank, cfg.qk_nope_dim,
+                           cfg.qk_rope_dim, cfg.v_head_dim)
+    q = (x @ params["wq"]).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = rmsnorm(params["kv_norm"], x @ params["w_dkv"], cfg.norm_eps)
+    k_rope = apply_rope((x @ params["w_kr"])[..., None, :], positions,
+                        cfg.rope_theta)
+    k_nope = (ckv @ params["w_uk"]).reshape(B, S, H, nope)
+    v = (ckv @ params["w_uv"]).reshape(B, S, H, hv)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, rope_d))],
+                         axis=-1)
+    if cfg.attn_impl == "naive":
+        o = _naive_attention(qf, kf, v)
+    elif cfg.attn_block_skip:
+        o = causal_divide_conquer(qf, kf, v, q_block=cfg.attn_q_block,
+                                  leaf=2 * cfg.attn_q_block, unroll=unroll)
+    else:
+        o = flash_attention(qf, kf, v, causal=True, q_block=cfg.attn_q_block,
+                            kv_block=cfg.attn_kv_block, unroll=unroll)
+    return o.reshape(B, S, H * hv) @ params["wo"]
+
+
+def mla_cache_init(cfg, batch: int, seq_len: int) -> dict:
+    dt = cfg.param_dtype
+    return {
+        "ckv": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, seq_len, cfg.qk_rope_dim), dt),
+        "pos": jnp.full((batch, seq_len), -1, jnp.int32),
+    }
+
+
+def mla_decode(cfg, params, x, pos, cache):
+    """Absorbed-matrix decode over the compressed cache (the memory- and
+    flop-efficient MLA decode; the naive alternative decompresses the whole
+    cache every step)."""
+    B, _, D = x.shape
+    H = cfg.n_heads
+    r, nope, rope_d, hv = (cfg.kv_lora_rank, cfg.qk_nope_dim,
+                           cfg.qk_rope_dim, cfg.v_head_dim)
+    q = (x @ params["wq"]).reshape(B, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    ckv_t = rmsnorm(params["kv_norm"], (x @ params["w_dkv"])[:, 0],
+                    cfg.norm_eps)
+    k_rope_t = apply_rope((x @ params["w_kr"])[:, :, None, :], pos[:, None],
+                          cfg.rope_theta)[:, 0, 0]
+    cap = cache["ckv"].shape[1]
+    slot = pos % cap
+    bidx = jnp.arange(B)
+    ckv_c = cache["ckv"].at[bidx, slot].set(ckv_t)
+    kr_c = cache["k_rope"].at[bidx, slot].set(k_rope_t)
+    pos_buf = cache["pos"].at[bidx, slot].set(pos)
+    if cfg.decode_cache_hint:
+        from repro.sharding.context import constrain, get_mesh
+        if get_mesh() is not None:
+            dp = tuple(a for a in ("pod", "data")
+                       if a in get_mesh().axis_names)
+            ckv_c = constrain(ckv_c, dp, None, None)
+            kr_c = constrain(kr_c, dp, None, None)
+    # absorb W_uk into q: q_abs[b,h,r] = q_nope[b,h,n] . W_uk[r, h, n]
+    w_uk = params["w_uk"].reshape(r, H, nope)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk,
+                       preferred_element_type=F32).astype(x.dtype)
+    scale = (nope + rope_d) ** -0.5
+    s = (jnp.einsum("bhr,bsr->bhs", q_abs, ckv_c, preferred_element_type=F32)
+         + jnp.einsum("bhd,bsd->bhs", q_rope, kr_c,
+                      preferred_element_type=F32)) * scale
+    valid = (pos_buf >= 0) & (pos_buf <= pos[:, None])
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", p.astype(x.dtype), ckv_c,
+                     preferred_element_type=F32).astype(x.dtype)
+    w_uv = params["w_uv"].reshape(r, H, hv)
+    o = jnp.einsum("bhr,rhv->bhv", ctx, w_uv,
+                   preferred_element_type=F32).astype(x.dtype)
+    out = o.reshape(B, 1, H * hv) @ params["wo"]
+    return out, {"ckv": ckv_c, "k_rope": kr_c, "pos": pos_buf}

@@ -1,0 +1,100 @@
+"""Shared primitive layers: RMSNorm, RoPE, SwiGLU MLP, embeddings.
+
+All functions are pure (params-in, activations-out).  Matmul accumulation is
+fp32 (``preferred_element_type``) with bf16 storage, matching TPU MXU usage.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def dot(x, w):
+    """Matmul with fp32 accumulation, result cast back to x.dtype."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=F32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype=F32)}  # (1+scale) parametrisation
+
+
+def rmsnorm(params, x, eps: float):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=F32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., T, H, hd]; positions: broadcastable to [..., T]."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions.astype(F32)[..., None] * inv      # [..., T, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                  # [..., T, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_ff = d_ff ** -0.5
+    return {
+        "wi": (jax.random.normal(k1, (d_model, d_ff), dtype=F32) * s_in).astype(dtype),
+        "wg": (jax.random.normal(k2, (d_model, d_ff), dtype=F32) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k3, (d_ff, d_model), dtype=F32) * s_ff).astype(dtype),
+    }
+
+
+def mlp_apply(params, x):
+    h = dot(x, params["wi"])
+    g = dot(x, params["wg"])
+    h = h * jax.nn.silu(g.astype(F32)).astype(h.dtype)
+    return dot(h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab: int, d_model: int, dtype) -> dict:
+    tbl = jax.random.normal(key, (vocab, d_model), dtype=F32) * (d_model ** -0.5)
+    return {"table": tbl.astype(dtype)}
+
+
+def embed_lookup(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def lm_head_init(key, d_model: int, vocab: int, dtype) -> dict:
+    tbl = jax.random.normal(key, (d_model, vocab), dtype=F32) * (d_model ** -0.5)
+    return {"table": tbl.astype(dtype)}
+
+
+def logits_from_hidden(cfg, params, x):
+    """x: [B, T, D] -> logits [B, T, V] (vocab axis model-sharded)."""
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].T          # [D, V]
+    else:
+        w = params["lm_head"]["table"]
+    return jax.lax.dot_general(
+        x, w, (((2,), (0,)), ((), ())), preferred_element_type=F32)

@@ -1,0 +1,171 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Dispatch is the TPU-native sort route (argsort tokens by expert, rank
+within expert, scatter into a fixed-capacity [E, C, D] buffer) rather than
+the GShard one-hot-einsum route: the one-hot dispatch einsum costs
+2*T*E*C*D flops — for the 384-expert configs here that is >10x the expert
+matmul itself, so sort-dispatch is the only roofline-sane baseline.
+Tokens beyond capacity are dropped (standard); the router adds the usual
+load-balance + z losses.  Expert weights are expert-sharded (EP over the
+"model" mesh axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def moe_init(cfg, key) -> dict:
+    dt = cfg.param_dtype
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    s_in, s_ff = D ** -0.5, F ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E), F32) * s_in),
+        "e_wi": (jax.random.normal(ks[1], (E, D, F), F32) * s_in).astype(dt),
+        "e_wg": (jax.random.normal(ks[2], (E, D, F), F32) * s_in).astype(dt),
+        "e_wo": (jax.random.normal(ks[3], (E, F, D), F32) * s_ff).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        from repro.models.layers import mlp_init
+        p["shared"] = mlp_init(ks[4], D, F * cfg.n_shared_experts, dt)
+    return p
+
+
+def _capacity(cfg, T: int) -> int:
+    c = int(T * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_apply(cfg, params, x):
+    """x: [B,S,D] -> (y [B,S,D], aux_loss scalar)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = _capacity(cfg, T)
+    xf = x.reshape(T, D)
+
+    logits = (xf @ params["router"].astype(x.dtype)).astype(F32)   # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                            # [T,k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses: load-balance (Switch) + router z-loss
+    density = jnp.zeros((E,), F32).at[eidx.reshape(-1)].add(
+        jnp.ones((T * k,), F32)) / (T * k)
+    p_mean = probs.mean(0)
+    aux = E * jnp.sum(density * p_mean)
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux_loss = 0.01 * aux + 0.001 * zloss
+
+    from repro.sharding.context import get_mesh
+    if cfg.moe_impl == "smap" and get_mesh() is not None:
+        out = _dispatch_smap(cfg, params, xf, eidx, gate)
+    else:
+        out = _dispatch_gspmd(cfg, params, xf, eidx, gate, C)
+
+    if cfg.n_shared_experts:
+        from repro.models.layers import mlp_apply
+        out = out + mlp_apply(params["shared"], xf)
+    return out.reshape(B, S, D), aux_loss
+
+
+def _dispatch_gspmd(cfg, params, xf, eidx, gate, C):
+    """Global sort-based dispatch (baseline): scatter into the [E, C, D]
+    buffer under GSPMD.  GSPMD realises the cross-shard scatters as
+    partial-scatter + all-reduce over data — the §Perf hillclimb B baseline."""
+    T, D = xf.shape
+    E, k = cfg.n_experts, cfg.top_k
+    e_flat = eidx.reshape(-1)                                       # [T*k]
+    t_flat = jnp.repeat(jnp.arange(T), k)
+    g_flat = gate.reshape(-1)
+    order = jnp.argsort(e_flat)
+    e_s, t_s, g_s = e_flat[order], t_flat[order], g_flat[order]
+    counts = jnp.zeros((E,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.cumsum(counts) - counts                            # exclusive
+    rank = jnp.arange(T * k) - starts[e_s]
+    keep = rank < C
+    dest = jnp.where(keep, e_s * C + rank, E * C)                   # E*C = drop
+
+    xs = jnp.zeros((E * C + 1, D), xf.dtype).at[dest].set(xf[t_s])
+    xs = xs[:-1].reshape(E, C, D)
+
+    h = jnp.einsum("ecd,edf->ecf", xs, params["e_wi"],
+                   preferred_element_type=F32).astype(xf.dtype)
+    g = jnp.einsum("ecd,edf->ecf", xs, params["e_wg"],
+                   preferred_element_type=F32)
+    h = h * jax.nn.silu(g).astype(h.dtype)
+    ys = jnp.einsum("ecf,efd->ecd", h, params["e_wo"],
+                    preferred_element_type=F32).astype(xf.dtype)
+
+    ys_flat = jnp.concatenate([ys.reshape(E * C, D),
+                               jnp.zeros((1, D), xf.dtype)], 0)
+    contrib = ys_flat[dest] * (g_s * keep)[:, None].astype(xf.dtype)
+    return jnp.zeros((T, D), xf.dtype).at[t_s].add(contrib)
+
+
+def _dispatch_smap(cfg, params, xf, eidx, gate):
+    """Shard_map expert-parallel dispatch (§Perf hillclimb B).
+
+    TP activations are logically replicated over "model", so each expert
+    shard SELECTS its own tokens locally — the dispatch needs no
+    collectives at all; only the combined output psums over "model"
+    ([T_local, D], the same size as a standard TP MLP all-reduce).
+    Capacity is per (data-shard, expert): slight drop-semantics change vs
+    the global-capacity baseline (documented in EXPERIMENTS.md)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.context import get_mesh
+    mesh = get_mesh()
+    T, D = xf.shape
+    E, k, F = cfg.n_experts, cfg.top_k, cfg.moe_d_ff
+    msz = mesh.shape.get("model", 1)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    dpsz = 1
+    for a in dp:
+        dpsz *= mesh.shape[a]
+    if T % dpsz or E % msz:
+        return _dispatch_gspmd(cfg, params, xf, eidx, gate, _capacity(cfg, T))
+    Tl = T // dpsz
+    E_l = E // msz
+    C = max(8, (int(Tl * k * cfg.capacity_factor) // E + 7) // 8 * 8)
+
+    def body(x_l, e_l, g_l, wi, wg, wo):
+        mi = jax.lax.axis_index("model")
+        e_flat = e_l.reshape(-1)
+        t_flat = jnp.repeat(jnp.arange(Tl), k)
+        g_flat = g_l.reshape(-1)
+        mine = (e_flat >= mi * E_l) & (e_flat < (mi + 1) * E_l)
+        e_loc = jnp.where(mine, e_flat - mi * E_l, E_l)
+        pos = jnp.arange(Tl * k)
+        order = jnp.lexsort((pos, e_loc))
+        e_s, t_s, g_s = e_loc[order], t_flat[order], g_flat[order]
+        starts = jnp.searchsorted(e_s, e_s)
+        rank = pos - starts
+        keep = (e_s < E_l) & (rank < C)
+        dest = jnp.where(keep, e_s * C + rank, E_l * C)
+        xs = jnp.zeros((E_l * C + 1, D), x_l.dtype).at[dest].set(x_l[t_s])
+        xs = xs[:-1].reshape(E_l, C, D)
+        h = jnp.einsum("ecd,edf->ecf", xs, wi,
+                       preferred_element_type=F32).astype(x_l.dtype)
+        g = jnp.einsum("ecd,edf->ecf", xs, wg, preferred_element_type=F32)
+        h = h * jax.nn.silu(g).astype(h.dtype)
+        ys = jnp.einsum("ecf,efd->ecd", h, wo,
+                        preferred_element_type=F32).astype(x_l.dtype)
+        ys_flat = jnp.concatenate([ys.reshape(E_l * C, D),
+                                   jnp.zeros((1, D), x_l.dtype)], 0)
+        contrib = ys_flat[dest] * (g_s * keep)[:, None].astype(x_l.dtype)
+        out = jnp.zeros((Tl, D), x_l.dtype).at[t_s].add(contrib)
+        return jax.lax.psum(out, "model")
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp_spec, None), P(dp_spec, None), P(dp_spec, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=P(dp_spec, None),
+        check_vma=False)
+    return fn(xf, eidx, gate.astype(xf.dtype),
+              params["e_wi"], params["e_wg"], params["e_wo"])

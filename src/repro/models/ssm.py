@@ -1,0 +1,336 @@
+"""State-space blocks: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+TPU adaptation: the CUDA "hardware-aware" fused scan of the Mamba papers is
+re-thought as a *chunked* formulation — within a chunk the recurrence is
+computed with associative_scan (Mamba-1) or in matmul form (Mamba-2 SSD,
+MXU-friendly); a lax.scan over chunks carries the [B, ..., N] state.  Chunk
+length cfg.ssm_chunk bounds the materialised state tensor so it fits VMEM-
+scale working sets.  Both scans accept ``unroll`` for exact cost analysis.
+
+Tensor-parallel layout: the fused in_proj of the reference CUDA code is
+split into per-segment projections (in_x / in_z / in_B / in_C / in_dt) so
+that every weight shards cleanly on the model axis (segment boundaries of a
+fused projection do not align with shard boundaries).
+
+Decode is the single-step recurrence over carried (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm, rmsnorm_init
+
+F32 = jnp.float32
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: [B,S,C]; w: [k,C]; b: [C]."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x, dtype=F32)
+    for j in range(k):
+        shift = k - 1 - j
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xs.astype(F32) * w[j].astype(F32)
+    return (out + b.astype(F32)).astype(x.dtype)
+
+
+def _conv_step(conv_state, x_t, w, b):
+    """One decode step of the causal conv.  conv_state: [B,k-1,C] (last k-1
+    inputs); x_t: [B,C].  Returns (y_t, new_state)."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # [B,k,C]
+    y = jnp.einsum("bkc,kc->bc", window.astype(F32), w.astype(F32)) + b.astype(F32)
+    return y.astype(x_t.dtype), window[:, 1:]
+
+
+# ===========================================================================
+# Mamba-1
+# ===========================================================================
+def mamba1_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return d_inner, dt_rank
+
+
+def mamba1_init(cfg, key) -> dict:
+    dt = cfg.param_dtype
+    D, N, k = cfg.d_model, cfg.ssm_state, cfg.ssm_conv
+    di, R = mamba1_dims(cfg)
+    ks = jax.random.split(key, 7)
+    s = D ** -0.5
+    a = jnp.tile(jnp.arange(1, N + 1, dtype=F32)[None, :], (di, 1))
+    return {
+        "in_x": (jax.random.normal(ks[0], (D, di), F32) * s).astype(dt),
+        "in_z": (jax.random.normal(ks[1], (D, di), F32) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[2], (k, di), F32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": (jax.random.normal(ks[3], (di, R + 2 * N), F32) * di ** -0.5).astype(dt),
+        "dt_proj": (jax.random.normal(ks[4], (R, di), F32) * R ** -0.5).astype(dt),
+        "dt_bias": jnp.full((di,), -4.6, F32),   # softplus^-1(~0.01)
+        "A_log": jnp.log(a),                      # [di, N] fp32
+        "ssm_D": jnp.ones((di,), F32),
+        "out_proj": (jax.random.normal(ks[5], (di, D), F32) * di ** -0.5).astype(dt),
+    }
+
+
+def _mamba1_scan_chunk(h_in, a, b, C):
+    """h_in: [B,di,N]; a,b: [B,T,di,N]; C: [B,T,N] -> (y [B,T,di], h_out)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    a_cum, b_scan = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = a_cum * h_in[:, None].astype(a.dtype) + b_scan  # [B,T,di,N]
+    y = jnp.einsum("btdn,btn->btd", h, C, preferred_element_type=F32)
+    return y, h[:, -1].astype(F32)
+
+
+def mamba1_apply(cfg, params, u, *, unroll: bool = False):
+    """u: [B,S,D] -> [B,S,D] (full-sequence / train path)."""
+    B, S, D = u.shape
+    N = cfg.ssm_state
+    di, R = mamba1_dims(cfg)
+    T = min(cfg.ssm_chunk, S)
+    nchunk = S // T
+    x = u @ params["in_x"]
+    z = u @ params["in_z"]
+    x = _causal_conv(x, params["conv_w"], params["conv_b"])
+    x = jax.nn.silu(x.astype(F32)).astype(x.dtype)
+    dbc = x @ params["x_proj"]
+    dt_in, B_ssm, C_ssm = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_in @ params["dt_proj"]).astype(F32) + params["dt_bias"])  # [B,S,di]
+    A = -jnp.exp(params["A_log"])                                     # [di,N]
+    if cfg.ssm_impl == "pallas":
+        # §Perf A2: fused VMEM-resident scan — HBM touches only the kernel
+        # I/O (x, dt, B, C, y); forward-only (prefill/serve paths)
+        from repro.kernels.mamba_scan import mamba_scan_kernel
+        y = mamba_scan_kernel(x, dt.astype(F32), B_ssm, C_ssm, A,
+                              interpret=jax.default_backend() != "tpu")
+        y = y.astype(F32)
+        y = y + params["ssm_D"] * x.astype(F32)
+        y = y * jax.nn.silu(z.astype(F32))
+        return (y.astype(u.dtype)) @ params["out_proj"]
+    if cfg.ssm_impl == "stub":
+        # analysis-only placeholder with the kernel's I/O shapes: lets the
+        # compositional lowering measure the NON-scan layer cost by XLA;
+        # the kernel's analytic cost is added in EXPERIMENTS.md §Perf
+        y = (x.astype(F32) * (1.0 + dt) + B_ssm.sum(-1, keepdims=True)
+             + C_ssm.sum(-1, keepdims=True))
+        y = y + params["ssm_D"] * x.astype(F32)
+        y = y * jax.nn.silu(z.astype(F32))
+        return (y.astype(u.dtype)) @ params["out_proj"]
+    a = jnp.exp(dt[..., None] * A)                                    # [B,S,di,N]
+    b = (dt * x.astype(F32))[..., None] * B_ssm.astype(F32)[:, :, None, :]
+    # §Perf A1: the [B,S,di,N] scan intermediates dominate HBM traffic;
+    # bf16 halves it (state re-accumulated in f32 at the chunk boundary)
+    sd = jnp.dtype(cfg.ssm_scan_dtype)
+    a = a.astype(sd)
+    b = b.astype(sd)
+
+    a_c = a.reshape(B, nchunk, T, di, N)
+    b_c = b.reshape(B, nchunk, T, di, N)
+    C_c = C_ssm.astype(sd).reshape(B, nchunk, T, N)
+
+    def chunk_step(h, idx):
+        y, h_new = _mamba1_scan_chunk(h, a_c[:, idx], b_c[:, idx], C_c[:, idx])
+        return h_new, y
+
+    h0 = jnp.zeros((B, di, N), F32)
+    _, ys = jax.lax.scan(chunk_step, h0, jnp.arange(nchunk),
+                         unroll=nchunk if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    y = y + params["ssm_D"] * x.astype(F32)
+    y = y * jax.nn.silu(z.astype(F32))
+    return (y.astype(u.dtype)) @ params["out_proj"]
+
+
+def mamba1_cache_init(cfg, batch: int) -> dict:
+    di, _ = mamba1_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), cfg.param_dtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm_state), F32),
+    }
+
+
+def mamba1_decode(cfg, params, u, cache):
+    """u: [B,1,D] -> ([B,1,D], new cache)."""
+    N = cfg.ssm_state
+    di, R = mamba1_dims(cfg)
+    x = u[:, 0] @ params["in_x"]
+    z = u[:, 0] @ params["in_z"]
+    x, conv_state = _conv_step(cache["conv"], x, params["conv_w"],
+                               params["conv_b"])
+    x = jax.nn.silu(x.astype(F32)).astype(x.dtype)
+    dbc = x @ params["x_proj"]
+    dt_in, B_ssm, C_ssm = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_in @ params["dt_proj"]).astype(F32) + params["dt_bias"])  # [B,di]
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt[..., None] * A)                                    # [B,di,N]
+    b = (dt * x.astype(F32))[..., None] * B_ssm.astype(F32)[:, None, :]
+    h = a * cache["ssm"] + b
+    y = jnp.einsum("bdn,bn->bd", h, C_ssm.astype(F32))
+    y = y + params["ssm_D"] * x.astype(F32)
+    y = y * jax.nn.silu(z.astype(F32))
+    out = y.astype(u.dtype) @ params["out_proj"]
+    return out[:, None], {"conv": conv_state, "ssm": h}
+
+
+# ===========================================================================
+# Mamba-2 (SSD)
+# ===========================================================================
+def mamba2_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    H = di // cfg.ssm_head_dim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    return di, H, G, N
+
+
+def mamba2_init(cfg, key) -> dict:
+    dt = cfg.param_dtype
+    D, k = cfg.d_model, cfg.ssm_conv
+    di, H, G, N = mamba2_dims(cfg)
+    ks = jax.random.split(key, 8)
+    s = D ** -0.5
+    return {
+        "in_z": (jax.random.normal(ks[0], (D, di), F32) * s).astype(dt),
+        "in_x": (jax.random.normal(ks[1], (D, di), F32) * s).astype(dt),
+        "in_B": (jax.random.normal(ks[2], (D, G * N), F32) * s).astype(dt),
+        "in_C": (jax.random.normal(ks[3], (D, G * N), F32) * s).astype(dt),
+        "in_dt": (jax.random.normal(ks[4], (D, H), F32) * s).astype(dt),
+        "conv_xw": (jax.random.normal(ks[5], (k, di), F32) * 0.2).astype(dt),
+        "conv_xb": jnp.zeros((di,), dt),
+        "conv_Bw": (jax.random.normal(ks[6], (k, G * N), F32) * 0.2).astype(dt),
+        "conv_Bb": jnp.zeros((G * N,), dt),
+        "conv_Cw": (jax.random.normal(ks[7], (k, G * N), F32) * 0.2).astype(dt),
+        "conv_Cb": jnp.zeros((G * N,), dt),
+        "dt_bias": jnp.full((H,), -4.6, F32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "ssm_D": jnp.ones((H,), F32),
+        "norm": rmsnorm_init(di, dt),
+        "out_proj": (jax.random.normal(
+            jax.random.fold_in(key, 99), (di, D), F32) * di ** -0.5).astype(dt),
+    }
+
+
+def _ssd_chunk(h_in, x, Bm, Cm, a_log, dt):
+    """One SSD chunk in matmul form.
+    h_in: [B,H,P,N]; x: [B,T,H,P]; Bm/Cm: [B,T,G,N]; a_log: [B,T,H] (log
+    decay); dt: [B,T,H].  Returns (y [B,T,H,P], h_out)."""
+    Bsz, T, H, P = x.shape
+    G = Bm.shape[2]
+    hg = H // G
+    cum = jnp.cumsum(a_log, axis=1)                       # [B,T,H]
+    # intra-chunk: L[t,s] = exp(cum_t - cum_s), t >= s
+    Ldiff = cum[:, :, None, :] - cum[:, None, :, :]       # [B,T,S,H]
+    tril = jnp.tril(jnp.ones((T, T), bool))
+    L = jnp.where(tril[None, :, :, None], jnp.exp(Ldiff), 0.0)
+    CB = jnp.einsum("btgn,bsgn->btsg", Cm.astype(F32), Bm.astype(F32))
+    CB = jnp.repeat(CB, hg, axis=-1)                      # [B,T,S,H]
+    W = CB * L                                            # [B,T,S,H]
+    xdt = x.astype(F32) * dt[..., None]                   # [B,T,H,P]
+    y_intra = jnp.einsum("btsh,bshp->bthp", W, xdt)
+    # inter-chunk: y_inter[t] = exp(cum_t) * C_t . h_in   (C grouped -> heads)
+    Ce = jnp.repeat(Cm.astype(F32), hg, axis=2)           # [B,T,H,N]
+    y_inter = jnp.einsum("bthn,bhpn->bthp", Ce, h_in) * jnp.exp(cum)[..., None]
+    # state update: h_out = exp(cum_T) h_in + sum_s exp(cum_T - cum_s) dt_s x_s B_s
+    w_end = jnp.exp(cum[:, -1:, :] - cum)                 # [B,T,H]
+    Be = jnp.repeat(Bm.astype(F32), hg, axis=2)           # [B,T,H,N]
+    dh = jnp.einsum("bthp,bthn->bhpn", xdt * w_end[..., None], Be)
+    h_out = jnp.exp(cum[:, -1])[:, :, None, None] * h_in + dh
+    return y_intra + y_inter, h_out
+
+
+def mamba2_apply(cfg, params, u, *, unroll: bool = False):
+    B, S, D = u.shape
+    di, H, G, N = mamba2_dims(cfg)
+    P = cfg.ssm_head_dim
+    T = min(cfg.ssm_chunk, S)
+    nchunk = S // T
+    z = u @ params["in_z"]
+    x = u @ params["in_x"]
+    Bm = u @ params["in_B"]
+    Cm = u @ params["in_C"]
+    dt_in = u @ params["in_dt"]
+    x = _causal_conv(x, params["conv_xw"], params["conv_xb"])
+    Bm = _causal_conv(Bm, params["conv_Bw"], params["conv_Bb"])
+    Cm = _causal_conv(Cm, params["conv_Cw"], params["conv_Cb"])
+    x = jax.nn.silu(x.astype(F32)).astype(x.dtype)
+    Bm = jax.nn.silu(Bm.astype(F32)).astype(Bm.dtype)
+    Cm = jax.nn.silu(Cm.astype(F32)).astype(Cm.dtype)
+    x = x.reshape(B, S, H, P)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_in.astype(F32) + params["dt_bias"])       # [B,S,H]
+    a_log = -jnp.exp(params["A_log"]) * dt                             # [B,S,H]
+
+    xc = x.reshape(B, nchunk, T, H, P)
+    bc = Bm.reshape(B, nchunk, T, G, N)
+    cc = Cm.reshape(B, nchunk, T, G, N)
+    ac = a_log.reshape(B, nchunk, T, H)
+    dc = dt.reshape(B, nchunk, T, H)
+
+    def chunk_step(h, idx):
+        y, h_new = _ssd_chunk(h, xc[:, idx], bc[:, idx], cc[:, idx],
+                              ac[:, idx], dc[:, idx])
+        return h_new, y
+
+    h0 = jnp.zeros((B, H, P, N), F32)
+    _, ys = jax.lax.scan(chunk_step, h0, jnp.arange(nchunk),
+                         unroll=nchunk if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    y = y + params["ssm_D"][:, None] * x.astype(F32)
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z.astype(F32))
+    y = rmsnorm(params["norm"], y.astype(u.dtype), cfg.norm_eps)
+    return y @ params["out_proj"]
+
+
+def mamba2_cache_init(cfg, batch: int) -> dict:
+    di, H, G, N = mamba2_dims(cfg)
+    dt = cfg.param_dtype
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, di), dt),
+        "conv_B": jnp.zeros((batch, cfg.ssm_conv - 1, G * N), dt),
+        "conv_C": jnp.zeros((batch, cfg.ssm_conv - 1, G * N), dt),
+        "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), F32),
+    }
+
+
+def mamba2_decode(cfg, params, u, cache):
+    B = u.shape[0]
+    di, H, G, N = mamba2_dims(cfg)
+    P = cfg.ssm_head_dim
+    hg = H // G
+    z = u[:, 0] @ params["in_z"]
+    x = u[:, 0] @ params["in_x"]
+    Bm = u[:, 0] @ params["in_B"]
+    Cm = u[:, 0] @ params["in_C"]
+    dt_in = u[:, 0] @ params["in_dt"]
+    x, conv_x = _conv_step(cache["conv_x"], x, params["conv_xw"],
+                           params["conv_xb"])
+    Bm, conv_B = _conv_step(cache["conv_B"], Bm, params["conv_Bw"],
+                            params["conv_Bb"])
+    Cm, conv_C = _conv_step(cache["conv_C"], Cm, params["conv_Cw"],
+                            params["conv_Cb"])
+    x = jax.nn.silu(x.astype(F32)).astype(x.dtype)
+    Bm = jax.nn.silu(Bm.astype(F32)).astype(Bm.dtype)
+    Cm = jax.nn.silu(Cm.astype(F32)).astype(Cm.dtype)
+    x = x.reshape(B, H, P)
+    Bm = Bm.reshape(B, G, N)
+    Cm = Cm.reshape(B, G, N)
+    dt = jax.nn.softplus(dt_in.astype(F32) + params["dt_bias"])        # [B,H]
+    a = jnp.exp(-jnp.exp(params["A_log"]) * dt)                         # [B,H]
+    Be = jnp.repeat(Bm.astype(F32), hg, axis=1)                         # [B,H,N]
+    Ce = jnp.repeat(Cm.astype(F32), hg, axis=1)
+    dh = jnp.einsum("bhp,bhn->bhpn", x.astype(F32) * dt[..., None], Be)
+    h = a[:, :, None, None] * cache["ssm"] + dh
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ce)
+    y = y + params["ssm_D"][:, None] * x.astype(F32)
+    y = y.reshape(B, di)
+    y = y * jax.nn.silu(z.astype(F32))
+    y = rmsnorm(params["norm"], y.astype(u.dtype), cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out[:, None], {"conv_x": conv_x, "conv_B": conv_B,
+                          "conv_C": conv_C, "ssm": h}

@@ -1,0 +1,285 @@
+"""Generic decoder stack driven entirely by ModelConfig.
+
+Layers are grouped into *stages* (see configs.base.layer_plan): runs of a
+repeating pattern are executed with lax.scan over stacked parameters (keeps
+HLO small at 80+ layers), leading/trailing odd layers run unstacked.  The
+same stage structure drives init, train/prefill apply, cache init, and
+single-token decode (caches ride the scan as xs/ys).
+
+``unroll=True`` unrolls every scan (layers, attention blocks, ssm chunks)
+so the compiled dry-run's cost analysis counts each iteration — see
+launch/dryrun.py and EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, Stage, layer_plan
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (
+    embed_init, embed_lookup, lm_head_init, logits_from_hidden, mlp_apply,
+    mlp_init, rmsnorm, rmsnorm_init,
+)
+from repro.models.moe import moe_apply, moe_init
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+def _block_init(cfg: ModelConfig, key, spec) -> dict:
+    mixer, ffn = spec
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    p: dict = {"ln1": rmsnorm_init(cfg.d_model, dt)}
+    if mixer in ("attn", "local"):
+        p["mixer"] = attn.attn_init(cfg, ks[0], "gqa")
+    elif mixer == "mla":
+        p["mixer"] = attn.attn_init(cfg, ks[0], "mla")
+    elif mixer == "mamba1":
+        p["mixer"] = ssm.mamba1_init(cfg, ks[0])
+    elif mixer in ("mamba2", "mamba2+shared"):
+        p["mixer"] = ssm.mamba2_init(cfg, ks[0])
+    else:
+        raise ValueError(mixer)
+    if ffn == "mlp":
+        p["ln2"] = rmsnorm_init(cfg.d_model, dt)
+        p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt)
+    elif ffn == "moe":
+        p["ln2"] = rmsnorm_init(cfg.d_model, dt)
+        p["ffn"] = moe_init(cfg, ks[1])
+    return p
+
+
+def _shared_block_init(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 2)
+    dt = cfg.param_dtype
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dt),
+        "attn": attn.attn_init(cfg, ks[0], "gqa"),
+        "ln2": rmsnorm_init(cfg.d_model, dt),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _block_apply(cfg, params, spec, x, positions, shared, *, unroll):
+    """Full-sequence (train/prefill) block application.  Returns (x, aux)."""
+    mixer, ffn = spec
+    aux = jnp.zeros((), F32)
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        x = x + attn.gqa_apply(cfg, params["mixer"], h, positions,
+                               unroll=unroll)
+    elif mixer == "local":
+        x = x + attn.gqa_apply(cfg, params["mixer"], h, positions,
+                               window=cfg.sliding_window, unroll=unroll)
+    elif mixer == "mla":
+        x = x + attn.mla_apply(cfg, params["mixer"], h, positions,
+                               unroll=unroll)
+    elif mixer == "mamba1":
+        x = x + ssm.mamba1_apply(cfg, params["mixer"], h, unroll=unroll)
+    elif mixer in ("mamba2", "mamba2+shared"):
+        x = x + ssm.mamba2_apply(cfg, params["mixer"], h, unroll=unroll)
+    if ffn == "mlp":
+        x = x + mlp_apply(params["ffn"], rmsnorm(params["ln2"], x, cfg.norm_eps))
+    elif ffn == "moe":
+        y, aux = moe_apply(cfg, params["ffn"],
+                           rmsnorm(params["ln2"], x, cfg.norm_eps))
+        x = x + y
+    if mixer == "mamba2+shared":
+        h = rmsnorm(shared["ln1"], x, cfg.norm_eps)
+        x = x + attn.gqa_apply(cfg, shared["attn"], h, positions,
+                               unroll=unroll)
+        x = x + mlp_apply(shared["mlp"], rmsnorm(shared["ln2"], x, cfg.norm_eps))
+    return x, aux
+
+
+def _block_cache_init(cfg, spec, batch, seq_len):
+    mixer, _ = spec
+    if mixer == "attn":
+        return attn.gqa_cache_init(cfg, batch, seq_len)
+    if mixer == "local":
+        return attn.gqa_cache_init(cfg, batch, seq_len,
+                                   window=cfg.sliding_window)
+    if mixer == "mla":
+        return attn.mla_cache_init(cfg, batch, seq_len)
+    if mixer == "mamba1":
+        return ssm.mamba1_cache_init(cfg, batch)
+    if mixer == "mamba2":
+        return ssm.mamba2_cache_init(cfg, batch)
+    if mixer == "mamba2+shared":
+        return {"mamba": ssm.mamba2_cache_init(cfg, batch),
+                "shared": attn.gqa_cache_init(cfg, batch, seq_len)}
+    raise ValueError(mixer)
+
+
+def _block_decode(cfg, params, spec, x, pos, cache, shared):
+    mixer, ffn = spec
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        y, cache = attn.gqa_decode(cfg, params["mixer"], h, pos, cache)
+        x = x + y
+    elif mixer == "local":
+        y, cache = attn.gqa_decode(cfg, params["mixer"], h, pos, cache,
+                                   window=cfg.sliding_window)
+        x = x + y
+    elif mixer == "mla":
+        y, cache = attn.mla_decode(cfg, params["mixer"], h, pos, cache)
+        x = x + y
+    elif mixer == "mamba1":
+        y, cache = ssm.mamba1_decode(cfg, params["mixer"], h, cache)
+        x = x + y
+    elif mixer == "mamba2+shared":
+        y, mcache = ssm.mamba2_decode(cfg, params["mixer"], h, cache["mamba"])
+        x = x + y
+    elif mixer == "mamba2":
+        y, cache = ssm.mamba2_decode(cfg, params["mixer"], h, cache)
+        x = x + y
+    if ffn == "mlp":
+        x = x + mlp_apply(params["ffn"], rmsnorm(params["ln2"], x, cfg.norm_eps))
+    elif ffn == "moe":
+        y, _ = moe_apply(cfg, params["ffn"],
+                         rmsnorm(params["ln2"], x, cfg.norm_eps))
+        x = x + y
+    if mixer == "mamba2+shared":
+        h = rmsnorm(shared["ln1"], x, cfg.norm_eps)
+        y, scache = attn.gqa_decode(cfg, shared["attn"], h, pos,
+                                    cache["shared"])
+        x = x + y
+        x = x + mlp_apply(shared["mlp"], rmsnorm(shared["ln2"], x, cfg.norm_eps))
+        cache = {"mamba": mcache, "shared": scache}
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> dict:
+    stages = layer_plan(cfg)
+    n_keys = len(stages) + 4
+    ks = jax.random.split(key, n_keys)
+    params: dict = {}
+    if cfg.frontend == "token":
+        params["embed"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                     cfg.param_dtype)
+    elif cfg.tie_embeddings:
+        # embed-frontend archs still need a (tied) output table
+        params["embed"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                     cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = lm_head_init(ks[1], cfg.d_model, cfg.vocab_size,
+                                         cfg.param_dtype)
+    params["final_norm"] = rmsnorm_init(cfg.d_model, cfg.param_dtype)
+    if cfg.shared_attn_every:
+        params["shared"] = _shared_block_init(cfg, ks[2])
+    stage_params = []
+    for si, st in enumerate(stages):
+        sk = jax.random.fold_in(ks[3], si)
+        if st.kind == "single":
+            stage_params.append(_block_init(cfg, sk, st.pattern[0]))
+        else:
+            per_pos = []
+            for pi, spec in enumerate(st.pattern):
+                reps = [
+                    _block_init(cfg, jax.random.fold_in(sk, pi * 1000 + r), spec)
+                    for r in range(st.n_rep)
+                ]
+                per_pos.append(jax.tree.map(lambda *a: jnp.stack(a), *reps))
+            stage_params.append(tuple(per_pos))
+    params["stages"] = stage_params
+    return params
+
+
+def _frontend(cfg, params, inputs):
+    if cfg.frontend == "token":
+        key = "tokens" if "tokens" in inputs else "token"
+        return embed_lookup(params["embed"], inputs[key])
+    return inputs["embeds"]
+
+
+def apply_model(cfg: ModelConfig, params, inputs, *, unroll: bool = False):
+    """Train/prefill forward.  Returns (hidden [B,S,D], aux_loss)."""
+    x = _frontend(cfg, params, inputs)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    shared = params.get("shared")
+    stages = layer_plan(cfg)
+    aux_total = jnp.zeros((), F32)
+    for st, sp in zip(stages, params["stages"]):
+        if st.kind == "single":
+            x, aux = _block_apply(cfg, sp, st.pattern[0], x, positions,
+                                  shared, unroll=unroll)
+            aux_total = aux_total + aux
+        else:
+            def unit(x, slices, st=st):
+                aux_u = jnp.zeros((), F32)
+                for spec, p in zip(st.pattern, slices):
+                    x, aux = _block_apply(cfg, p, spec, x, positions, shared,
+                                          unroll=unroll)
+                    aux_u = aux_u + aux
+                return x, aux_u
+            if cfg.remat == "unit":
+                unit = jax.checkpoint(unit)
+
+            def body(x, slices):
+                return unit(x, slices)
+            x, auxs = jax.lax.scan(body, x, sp,
+                                   unroll=st.n_rep if unroll else 1)
+            aux_total = aux_total + auxs.sum()
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total
+
+
+def hidden_to_logits(cfg, params, hidden):
+    return logits_from_hidden(cfg, params, hidden)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    stages = layer_plan(cfg)
+    caches = []
+    for st in stages:
+        if st.kind == "single":
+            caches.append(_block_cache_init(cfg, st.pattern[0], batch, seq_len))
+        else:
+            per_pos = []
+            for spec in st.pattern:
+                one = _block_cache_init(cfg, spec, batch, seq_len)
+                per_pos.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (st.n_rep,) + a.shape),
+                    one))
+            caches.append(tuple(per_pos))
+    return caches
+
+
+def decode_step(cfg: ModelConfig, params, cache, inputs):
+    """One decode step.  inputs: {tokens [B,1] | embeds [B,1,D], pos [B]}.
+    Returns (logits [B,V], new_cache)."""
+    x = _frontend(cfg, params, inputs)
+    pos = inputs["pos"]
+    shared = params.get("shared")
+    stages = layer_plan(cfg)
+    new_caches = []
+    for st, sp, sc in zip(stages, params["stages"], cache):
+        if st.kind == "single":
+            x, c = _block_decode(cfg, sp, st.pattern[0], x, pos, sc, shared)
+            new_caches.append(c)
+        else:
+            def body(x, slices, st=st):
+                ps, cs = slices
+                cs_new = []
+                for spec, p, c in zip(st.pattern, ps, cs):
+                    x, c2 = _block_decode(cfg, p, spec, x, pos, c, shared)
+                    cs_new.append(c2)
+                return x, tuple(cs_new)
+            x, c = jax.lax.scan(body, x, (sp, sc))
+            new_caches.append(c)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x)[:, 0]
+    return logits, new_caches
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

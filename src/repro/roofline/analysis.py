@@ -1,0 +1,119 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Conventions (validated against analytic flop counts in task-1 probe):
+  * ``compiled.cost_analysis()`` reports PER-DEVICE flops / bytes of the
+    SPMD-partitioned module, so terms divide by per-chip peaks directly
+    (the "/ chips" in the spec formulas is already applied by SPMD
+    partitioning).
+  * XLA counts a while/scan body ONCE, so roofline lowerings unroll every
+    scan (``unroll=True`` threads through layers / attention blocks / ssm
+    chunks / loss chunks).
+  * collective bytes are summed from the post-partitioning HLO text:
+    result-shape bytes of every all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute instruction (async *-start counted
+    once).  These are per-device shapes -> per-chip link traffic.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HWSpec:
+    peak_flops: float = 197e12      # bf16 per chip
+    hbm_bw: float = 819e9           # bytes/s per chip
+    ici_bw: float = 50e9            # bytes/s per link
+
+
+HW = HWSpec()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+ = )?"
+    r"(\(?[\w\[\],{}\s/]*\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum per-device result bytes of collective ops, by type."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind, start = m.group(1), m.group(2), m.group(3)
+        # *-done duplicates are not matched (no '(' after shape for done);
+        # count the -start (or sync) form once.
+        b = _shape_bytes(shape_str)
+        out[kind] += b
+        counts[kind] += 1
+    return {"bytes_by_type": out, "counts_by_type": counts,
+            "total_bytes": sum(out.values())}
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, hw: HWSpec = HW) -> dict:
+    t_c = flops_per_dev / hw.peak_flops
+    t_m = bytes_per_dev / hw.hbm_bw
+    t_n = coll_bytes_per_dev / hw.ici_bw
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n}
+    dom = max(terms, key=terms.get)
+    bound = max(t_c, t_m, t_n)
+    terms["dominant"] = dom
+    terms["roofline_fraction_compute"] = t_c / bound if bound else 0.0
+    return terms
+
+
+def model_flops(cfg, n_params: int, n_active: int, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D for train, 2·N·tokens for inference."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_params(cfg, params_tree_shapes) -> tuple[int, int]:
+    """(total, active) parameter counts; active discounts routed experts
+    to their top-k/E share."""
+    import jax
+    total = 0
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_tree_shapes)[0]:
+        names = [p.key for p in path if hasattr(p, "key")]
+        total += leaf.size
+        if any(n in ("e_wi", "e_wg", "e_wo") for n in names):
+            routed += leaf.size
+    active = total - routed
+    if cfg.n_experts:
+        active += routed * cfg.top_k / cfg.n_experts
+    return total, int(active)

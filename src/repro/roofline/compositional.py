@@ -1,0 +1,225 @@
+"""Compositional cost analysis.
+
+XLA's cost_analysis counts while/scan bodies ONCE, and fully unrolling a
+whole 80-layer train step makes single-core compiles take >10 min.  The
+compositional approach is exact and fast:
+
+    cost(cell) = cost(base) + sum_spec  n_layers(spec) * cost(layer(spec))
+
+where cost(layer) is obtained by lowering ONE layer (fwd + vjp + its AdamW
+slice for train cells; the decode step for decode cells) with every inner
+scan unrolled, under the same mesh/shardings as the full program, and
+cost(base) is the n_layers=0 program (frontend, final norm, blockwise CE
+loss, optimizer for non-layer params).  flops, HBM bytes and collective
+bytes all compose this way; memory_analysis comes from the full scanned
+compile (deployment-realistic), recorded alongside.
+
+Known approximations (documented in EXPERIMENTS.md §Roofline): GSPMD may
+fuse across the layer boundary in the full program (small), and the global
+grad-norm reduction over layer params (~2 flops/param) is attributed to the
+base program only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.roofline.analysis import collective_bytes_from_hlo
+from repro.sharding.partition import (batch_pspec, cache_pspecs, dp_axes,
+                                      input_pspecs, opt_pspecs, param_pspecs,
+                                      to_named)
+
+F32 = jnp.float32
+
+
+def _cost_of(lowered):
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll["total_bytes"]),
+        "coll_by_type": coll["bytes_by_type"],
+    }
+
+
+def _acc(total, part, n=1):
+    total["flops"] += n * part["flops"]
+    total["bytes"] += n * part["bytes"]
+    total["coll_bytes"] += n * part["coll_bytes"]
+    for k, v in part["coll_by_type"].items():
+        total["coll_by_type"][k] = total["coll_by_type"].get(k, 0) + n * v
+    return total
+
+
+def _zero():
+    return {"flops": 0.0, "bytes": 0.0, "coll_bytes": 0.0, "coll_by_type": {}}
+
+
+def _act_specs(cfg, shape, mesh):
+    dp = batch_pspec(mesh, shape.global_batch)
+    bspec = dp if dp else None
+    sp = dp_axes(mesh) if (not dp and shape.global_batch == 1) else None
+    return bspec, sp
+
+
+def _x_spec(cfg, shape, mesh, seq_dim=True):
+    bspec, sp = _act_specs(cfg, shape, mesh)
+    return P(bspec, sp, None) if seq_dim else P(bspec, None, None)
+
+
+def layer_cost_train(cfg: ModelConfig, spec, shape, mesh) -> dict:
+    """Cost of one layer's fwd + bwd (with remat recompute) + AdamW slice."""
+    B, S = shape.global_batch, shape.seq_len
+    key = jax.random.PRNGKey(0)
+    blk_s = jax.eval_shape(lambda k: tfm._block_init(cfg, k, spec), key)
+    shared_s = (jax.eval_shape(lambda k: tfm._shared_block_init(cfg, k), key)
+                if spec[0] == "mamba2+shared" else None)
+    p_tree = {"blk": blk_s} | ({"shared": shared_s} if shared_s else {})
+    p_spec = param_pspecs(cfg, p_tree, mesh)
+    o_spec = opt_pspecs(cfg, p_tree, mesh)
+    x_s = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.param_dtype)
+    xp = _x_spec(cfg, shape, mesh)
+    pos_s = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+    def f(p, m, v, x, pos, ct):
+        def fwd(p, x):
+            y, aux = tfm._block_apply(cfg, p["blk"], spec, x, pos,
+                                      p.get("shared"), unroll=True)
+            return y, aux
+        if cfg.remat == "unit":
+            fwd = jax.checkpoint(fwd)
+        (y, aux), vjp = jax.vjp(fwd, p, x)
+        gp, gx = vjp((ct, jnp.ones((), F32)))
+        # AdamW slice for this layer's params (matches optimizer cost/bytes)
+        def upd(pp, gg, mm, vv):
+            gg = gg.astype(F32)
+            mm = 0.9 * mm + 0.1 * gg
+            vv = 0.95 * vv + 0.05 * gg * gg
+            pp = (pp.astype(F32) - 3e-4 * (mm / (jnp.sqrt(vv) + 1e-8)
+                                           + 0.1 * pp.astype(F32))).astype(pp.dtype)
+            return pp, mm, vv
+        out = jax.tree.map(upd, p, gp, m, v)
+        return y, gx, out
+
+    lowered = jax.jit(f, in_shardings=(
+        to_named(mesh, p_spec), to_named(mesh, o_spec), to_named(mesh, o_spec),
+        NamedSharding(mesh, xp), None, NamedSharding(mesh, xp)),
+    ).lower(p_tree,
+            jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, F32), p_tree),
+            jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, F32), p_tree),
+            x_s, pos_s, x_s)
+    return _cost_of(lowered)
+
+
+def layer_cost_prefill(cfg: ModelConfig, spec, shape, mesh) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    key = jax.random.PRNGKey(0)
+    blk_s = jax.eval_shape(lambda k: tfm._block_init(cfg, k, spec), key)
+    shared_s = (jax.eval_shape(lambda k: tfm._shared_block_init(cfg, k), key)
+                if spec[0] == "mamba2+shared" else None)
+    p_tree = {"blk": blk_s} | ({"shared": shared_s} if shared_s else {})
+    p_spec = param_pspecs(cfg, p_tree, mesh)
+    x_s = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.param_dtype)
+    xp = _x_spec(cfg, shape, mesh)
+    pos_s = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+    def f(p, x, pos):
+        y, _ = tfm._block_apply(cfg, p["blk"], spec, x, pos, p.get("shared"),
+                                unroll=True)
+        return y
+
+    lowered = jax.jit(f, in_shardings=(to_named(mesh, p_spec),
+                                       NamedSharding(mesh, xp), None),
+                      ).lower(p_tree, x_s, pos_s)
+    return _cost_of(lowered)
+
+
+def layer_cost_decode(cfg: ModelConfig, spec, shape, mesh) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    key = jax.random.PRNGKey(0)
+    blk_s = jax.eval_shape(lambda k: tfm._block_init(cfg, k, spec), key)
+    shared_s = (jax.eval_shape(lambda k: tfm._shared_block_init(cfg, k), key)
+                if spec[0] == "mamba2+shared" else None)
+    p_tree = {"blk": blk_s} | ({"shared": shared_s} if shared_s else {})
+    p_spec = param_pspecs(cfg, p_tree, mesh)
+    cache_s = jax.eval_shape(lambda: tfm._block_cache_init(cfg, spec, B, S))
+    c_spec = cache_pspecs(cfg, shape, cache_s, mesh)
+    x_s = jax.ShapeDtypeStruct((B, 1, cfg.d_model), cfg.param_dtype)
+    xp = _x_spec(cfg, shape, mesh, seq_dim=False)
+    pos_s = jax.ShapeDtypeStruct((B,), jnp.int32)
+    bspec, _ = _act_specs(cfg, shape, mesh)
+
+    def f(p, c, x, pos):
+        return tfm._block_decode(cfg, p["blk"], spec, x, pos, c,
+                                 p.get("shared"))
+
+    lowered = jax.jit(f, in_shardings=(
+        to_named(mesh, p_spec), to_named(mesh, c_spec),
+        NamedSharding(mesh, xp), NamedSharding(mesh, P(bspec))),
+        out_shardings=(NamedSharding(mesh, xp), to_named(mesh, c_spec)),
+        donate_argnums=(1,),
+    ).lower(p_tree, cache_s, x_s, pos_s)
+    return _cost_of(lowered)
+
+
+def base_cost(cfg: ModelConfig, shape, mesh) -> dict:
+    """n_layers=0 program: frontend + final norm + head/loss (+ optimizer
+    over non-layer params for train)."""
+    from repro.configs.base import input_specs
+    from repro.optim.adamw import adamw_init
+    from repro.serving.serve_step import prefill as prefill_fn
+    from repro.train.step import train_step
+
+    cfg0 = cfg.scaled(n_layers=0, first_k_dense=0, shared_attn_every=0)
+    key = jax.random.PRNGKey(0)
+    params_s = jax.eval_shape(lambda k: tfm.init_params(cfg0, k), key)
+    p_shard = to_named(mesh, param_pspecs(cfg0, params_s, mesh))
+    inputs = input_specs(cfg0, shape)
+    in_shard = to_named(mesh, input_pspecs(cfg0, shape, inputs, mesh))
+    if shape.kind == "train":
+        opt_s = jax.eval_shape(adamw_init, params_s)
+        o_shard = to_named(mesh, opt_pspecs(cfg0, opt_s, mesh))
+        lowered = jax.jit(
+            lambda p, o, b: train_step(cfg0, p, o, b, unroll=True),
+            in_shardings=(p_shard, o_shard, in_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1)).lower(params_s, opt_s, inputs)
+    elif shape.kind == "prefill":
+        lowered = jax.jit(
+            lambda p, b: prefill_fn(cfg0, p, b, unroll=True),
+            in_shardings=(p_shard, in_shard)).lower(params_s, inputs)
+    else:
+        def f(p, b):
+            x = tfm._frontend(cfg0, p, b)
+            from repro.models.layers import logits_from_hidden, rmsnorm
+            x = rmsnorm(p["final_norm"], x, cfg0.norm_eps)
+            return logits_from_hidden(cfg0, p, x)[:, 0]
+        lowered = jax.jit(f, in_shardings=(p_shard, in_shard)).lower(
+            params_s, inputs)
+    return _cost_of(lowered)
+
+
+def compositional_cost(cfg: ModelConfig, shape, mesh) -> dict:
+    """Total per-device cost composed from base + per-spec layer costs."""
+    specs = cfg.layer_specs()
+    uniq: dict = {}
+    for s in specs:
+        uniq[s] = uniq.get(s, 0) + 1
+    total = _acc(_zero(), base_cost(cfg, shape, mesh))
+    per_layer = {}
+    for s, n in uniq.items():
+        if shape.kind == "train":
+            c = layer_cost_train(cfg, s, shape, mesh)
+        elif shape.kind == "prefill":
+            c = layer_cost_prefill(cfg, s, shape, mesh)
+        else:
+            c = layer_cost_decode(cfg, s, shape, mesh)
+        per_layer["/".join(str(x) for x in s)] = {"count": n, **c}
+        total = _acc(total, c, n)
+    total["per_layer"] = per_layer
+    return total

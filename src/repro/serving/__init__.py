@@ -1,0 +1,1 @@
+from repro.serving.serve_step import make_serve_step, serve_step, prefill  # noqa: F401

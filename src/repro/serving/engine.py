@@ -1,0 +1,199 @@
+"""Batched serving engine with a HiStore-backed paged KV-cache directory.
+
+This is where the paper's hybrid index becomes a first-class serving
+feature.  The KV cache is organised in pages; an *index group* (hash table
++ sorted index + log) is the page directory:
+
+  * page registration (a page fills)  -> PUT (seq_id, page_no) -> page addr
+    — synchronous hash update, logged, asynchronously merged into the
+    sorted index (exactly the paper's write path).
+  * decode-time page lookup           -> GET via the hash table — the
+    one-sided single-point read (optionally through the Pallas
+    hash_probe kernel).
+  * release / eviction of a sequence  -> SCAN over the key range
+    [seq_id<<20, (seq_id+1)<<20) on the sorted index — the range query the
+    hash table cannot serve, and the reason serving wants the HYBRID index:
+    point lookups stay O(1) while range reclamation stays O(log n + k).
+  * prefix reuse (RadixAttention-lite)-> GET on hash(prefix_tokens): a hit
+    maps a new request onto existing pages.
+
+Keys pack (seq_id, page_no) into the canonical int key; the model itself
+runs decode over per-slot ring caches (the compiled serve_step of the
+dry-run), while the directory tracks page ownership for reuse/eviction —
+the separation mirrors the paper's index server / data server split.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.histore import HiStoreConfig, scaled
+from repro.core import hash_index as hix
+from repro.core import index_group as ig
+from repro.core.hashing import key_dtype
+from repro.models.transformer import decode_step, init_cache
+
+import jax as _jax
+
+# key space adapts to the canonical key dtype (int32 in x32 mode):
+PAGE_BITS = 20 if _jax.config.jax_enable_x64 else 12
+_PREFIX_MOD = (1 << 40) if _jax.config.jax_enable_x64 else (1 << 30)
+
+
+def page_key(seq_id: int, page_no: int):
+    return (int(seq_id) << PAGE_BITS) | int(page_no)
+
+
+def prefix_key(prompt) -> int:
+    return abs(hash(tuple(prompt))) % _PREFIX_MOD | (1 << (PAGE_BITS - 1))
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int
+    tokens: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    pos: int = 0
+    done: bool = False
+    prefix_hit: bool = False
+
+
+class ServingEngine:
+    """Greedy continuous-batching engine over decode_step."""
+
+    def __init__(self, cfg, params, *, batch_slots: int = 4,
+                 max_len: int = 256, page_size: int = 16,
+                 store_cfg: Optional[HiStoreConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.kd = key_dtype()
+        self.store_cfg = store_cfg or scaled(log_capacity=1 << 12,
+                                             async_apply_batch=256)
+        # page directory: one index group (the serving-node's group)
+        self.n_pages = batch_slots * (max_len // page_size) * 2
+        self.directory = ig.create(max(self.n_pages * 4, 1024), self.store_cfg)
+        self.free_pages = list(range(self.n_pages, 0, -1))
+        self.cache = init_cache(cfg, batch_slots, max_len)
+        self.slots: list[Optional[Request]] = [None] * batch_slots
+        self.queue: list[Request] = []
+        self._rid = 0
+        self._step = jax.jit(
+            lambda p, c, i: decode_step(cfg, p, c, i))
+        self.stats = {"index_puts": 0, "index_gets": 0, "index_scans": 0,
+                      "prefix_hits": 0, "pages_registered": 0,
+                      "pages_freed": 0, "decode_steps": 0}
+
+    # -- request lifecycle -------------------------------------------------
+    def submit(self, prompt: list[int], max_new: int = 16) -> int:
+        r = Request(self._rid, list(prompt), max_new)
+        self._rid += 1
+        # prefix reuse probe: GET on the prompt hash
+        pk = jnp.asarray([prefix_key(prompt)], self.kd)
+        _, found, _ = ig.get(self.directory, pk, self.store_cfg,
+                             primary_alive=True)
+        self.stats["index_gets"] += 1
+        if bool(found[0]):
+            r.prefix_hit = True
+            self.stats["prefix_hits"] += 1
+        self.queue.append(r)
+        return r.rid
+
+    def _admit(self):
+        for i in range(self.B):
+            if self.slots[i] is None and self.queue:
+                r = self.queue.pop(0)
+                r.slot = i
+                r.pos = 0
+                r.tokens = []
+                self.slots[i] = r
+                # register the prompt-prefix key for future reuse
+                pk = jnp.asarray([prefix_key(r.prompt)], self.kd)
+                self.directory, _ = ig.put(
+                    self.directory, pk,
+                    jnp.asarray([r.slot], jnp.int32), self.store_cfg)
+                self.stats["index_puts"] += 1
+
+    def _register_page(self, r: Request):
+        page_no = (r.pos - 1) // self.page_size
+        if not self.free_pages:
+            return
+        addr = self.free_pages.pop()
+        k = jnp.asarray([page_key(r.rid, page_no)], self.kd)
+        self.directory, ok = ig.put(self.directory, k,
+                                    jnp.asarray([addr], jnp.int32),
+                                    self.store_cfg)
+        self.stats["index_puts"] += 1
+        self.stats["pages_registered"] += 1
+
+    def release(self, r: Request):
+        """Reclaim all of a sequence's pages via a sorted-index range scan
+        (the SCAN the hash table cannot do)."""
+        lo = jnp.asarray(page_key(r.rid, 0), self.kd)
+        hi = jnp.asarray(page_key(r.rid, (1 << PAGE_BITS) - 1), self.kd)
+        (ks, addrs, n), self.directory = ig.scan(
+            self.directory, lo, hi, 64, self.store_cfg)
+        self.stats["index_scans"] += 1
+        n = int(n)
+        freed = [int(a) for a in np.asarray(addrs[:n])]
+        self.free_pages.extend(a for a in freed if a > 0)
+        self.stats["pages_freed"] += n
+        keys_del = ks[:n]
+        if n:
+            self.directory, _ = ig.delete(self.directory,
+                                          jnp.asarray(keys_del),
+                                          self.store_cfg)
+
+    # -- decode loop ---------------------------------------------------------
+    def _batch_inputs(self):
+        toks = np.zeros((self.B, 1), np.int32)
+        pos = np.zeros((self.B,), np.int32)
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            if r.pos < len(r.prompt):
+                toks[i, 0] = r.prompt[r.pos]
+            elif r.tokens:
+                toks[i, 0] = r.tokens[-1]
+            pos[i] = r.pos
+        return {"tokens": jnp.asarray(toks), "pos": jnp.asarray(pos)}
+
+    def step(self):
+        self._admit()
+        if all(r is None for r in self.slots):
+            return False
+        logits, self.cache = self._step(self.params, self.cache,
+                                        self._batch_inputs())
+        self.stats["decode_steps"] += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            r.pos += 1
+            if r.pos % self.page_size == 0:
+                self._register_page(r)
+            if r.pos > len(r.prompt):
+                r.tokens.append(int(nxt[i]))
+            if (len(r.tokens) >= r.max_new
+                    or r.pos >= self.max_len - 1):
+                r.done = True
+                self.release(r)
+                self.slots[i] = None
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        finished = []
+        active = True
+        while (self.queue or any(self.slots)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

@@ -1,0 +1,37 @@
+"""Serving steps: prefill (full prompt forward, returns last-position
+logits) and serve_step (one new token against the KV cache).
+
+The higher-level batched-request engine (continuous batching, paged KV
+cache backed by the HiStore hybrid index) lives in serving/engine.py; these
+are the pure compiled steps that the dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import apply_model, decode_step, init_cache
+from repro.models.layers import logits_from_hidden
+
+
+def prefill(cfg, params, inputs, *, unroll: bool = False):
+    """Full-prompt forward; returns logits at the final position [B, V]."""
+    hidden, _ = apply_model(cfg, params, inputs, unroll=unroll)
+    last = hidden[:, -1:]
+    return logits_from_hidden(cfg, params, last)[:, 0]
+
+
+def serve_step(cfg, params, cache, inputs):
+    """One decode step: inputs {tokens [B,1] | embeds [B,1,D], pos [B]}.
+    Returns (logits [B, V], new_cache)."""
+    return decode_step(cfg, params, cache, inputs)
+
+
+def make_serve_step(cfg):
+    return functools.partial(serve_step, cfg)
+
+
+def make_cache(cfg, batch: int, seq_len: int):
+    return init_cache(cfg, batch, seq_len)

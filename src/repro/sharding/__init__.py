@@ -1,0 +1,4 @@
+from repro.sharding.partition import (  # noqa: F401
+    dp_axes, param_pspecs, params_sharding, opt_pspecs, input_pspecs,
+    cache_pspecs, to_named, batch_pspec,
+)

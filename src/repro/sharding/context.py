@@ -1,0 +1,64 @@
+"""Ambient mesh context for in-model sharding constraints.
+
+Model code is mesh-agnostic; launchers (dryrun / trainer / layer-cost
+lowering) set the mesh here, and `constrain(x, *axes)` applies
+with_sharding_constraint when a mesh is active (no-op otherwise, so unit
+tests and single-device paths are untouched).  Axis entries may be None,
+an axis name, or a tuple of names; axes that don't divide the dim are
+dropped automatically.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = contextvars.ContextVar("repro_mesh", default=None)
+
+
+def set_mesh(mesh):
+    _MESH.set(mesh)
+
+
+def get_mesh():
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+
+
+def _axis_size(mesh, names) -> int:
+    if names is None:
+        return 1
+    s = 1
+    for n in (names if isinstance(names, tuple) else (names,)):
+        s *= mesh.shape[n]
+    return s
+
+
+def constrain(x, *axes):
+    """Apply a sharding constraint if a mesh is active and dims divide."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        valid = tuple(a for a in ((ax,) if not isinstance(ax, tuple) else ax)
+                      if a in mesh.axis_names)
+        sz = _axis_size(mesh, valid) if valid else 1
+        spec.append((valid if len(valid) > 1 else (valid[0] if valid else None))
+                    if valid and dim % sz == 0 and dim >= sz else None)
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

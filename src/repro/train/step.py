@@ -1,0 +1,74 @@
+"""Training step: blockwise cross-entropy loss + AdamW update.
+
+The LM-head matmul and softmax are computed blockwise over sequence chunks
+inside a rematerialised scan, so the [B, S, V] logits tensor is never
+materialised (vocab up to 262k here).  The vocab axis is model-sharded; the
+logsumexp / label-pick reductions over it lower to psums.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import apply_model
+from repro.models.layers import logits_from_hidden
+from repro.optim.adamw import adamw_update
+
+F32 = jnp.float32
+LOSS_CHUNK = 512
+
+
+def _ce_chunk(cfg, params, hidden_chunk, target_chunk):
+    """hidden: [B,c,D]; targets: [B,c] -> (sum_loss, n_valid)."""
+    logits = logits_from_hidden(cfg, params, hidden_chunk)        # [B,c,V] f32
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    picked = jnp.sum(jnp.where(iota == target_chunk[..., None], logits, 0.0),
+                     axis=-1)
+    valid = (target_chunk >= 0)
+    loss = jnp.where(valid, lse - picked, 0.0)
+    return loss.sum(), valid.sum()
+
+
+def blockwise_ce(cfg, params, hidden, targets, *, unroll: bool = False):
+    B, S, D = hidden.shape
+    c = min(LOSS_CHUNK, S)
+    n = S // c
+    hid = hidden.reshape(B, n, c, D)
+    tgt = targets.reshape(B, n, c)
+    chunk_fn = jax.checkpoint(
+        lambda h, t: _ce_chunk(cfg, params, h, t))
+
+    def body(carry, idx):
+        s, cnt = carry
+        ls, nv = chunk_fn(hid[:, idx], tgt[:, idx])
+        return (s + ls, cnt + nv), None
+
+    (loss_sum, n_valid), _ = jax.lax.scan(
+        body, (jnp.zeros((), F32), jnp.zeros((), jnp.int32)),
+        jnp.arange(n), unroll=n if unroll else 1)
+    return loss_sum / jnp.maximum(n_valid, 1)
+
+
+def loss_fn(cfg, params, batch, *, unroll: bool = False):
+    hidden, aux = apply_model(cfg, params, batch, unroll=unroll)
+    ce = blockwise_ce(cfg, params, hidden, batch["targets"], unroll=unroll)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def train_step(cfg, params, opt_state, batch, *, unroll: bool = False,
+               lr: float = 3e-4):
+    """One full training step (fwd + bwd + AdamW).  Pure function; jit and
+    shard at the call site (see launch/train.py and launch/dryrun.py)."""
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch, unroll=unroll), has_aux=True)(params)
+    params, opt_state, gnorm = adamw_update(params, grads, opt_state, lr=lr)
+    metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg, *, unroll: bool = False, lr: float = 3e-4):
+    return functools.partial(train_step, cfg, unroll=unroll, lr=lr)

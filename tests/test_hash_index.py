@@ -1,0 +1,100 @@
+"""Hash index unit + property tests against a Python-dict model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.histore import scaled
+from repro.core.hashing import key_dtype
+
+KD = key_dtype()
+from repro.core import hash_index as hi
+
+CFG = scaled()
+
+
+def _np(x):
+    return np.asarray(x)
+
+
+def test_insert_lookup_roundtrip():
+    idx = hi.create(4096, CFG)
+    keys = jnp.arange(1, 1001, dtype=KD) * 7919
+    addrs = jnp.arange(1000, dtype=jnp.int32)
+    idx, ok = hi.insert(idx, keys, addrs, CFG)
+    assert bool(ok.all())
+    got, found, acc = hi.lookup(idx, keys, CFG)
+    assert bool(found.all())
+    np.testing.assert_array_equal(_np(got), _np(addrs))
+    assert int(acc.max()) <= CFG.max_chain
+    # misses
+    miss = keys + 1
+    _, found_m, _ = hi.lookup(idx, miss, CFG)
+    assert not bool(found_m.any())
+
+
+def test_update_in_place_and_batch_dup_last_wins():
+    idx = hi.create(1024, CFG)
+    keys = jnp.array([5, 9, 5, 9, 5], dtype=KD)
+    addrs = jnp.array([1, 2, 3, 4, 5], dtype=jnp.int32)
+    idx, ok = hi.insert(idx, keys, addrs, CFG)
+    assert bool(ok.all())
+    got, found, _ = hi.lookup(idx, jnp.array([5, 9], dtype=KD), CFG)
+    assert bool(found.all())
+    np.testing.assert_array_equal(_np(got), [5, 4])
+    # second batch updates in place (no new slots)
+    fill_before = int(idx.fill.sum())
+    idx, ok = hi.insert(idx, jnp.array([5], dtype=KD),
+                        jnp.array([77], dtype=jnp.int32), CFG)
+    assert bool(ok.all())
+    assert int(idx.fill.sum()) == fill_before
+    got, _, _ = hi.lookup(idx, jnp.array([5], dtype=KD), CFG)
+    assert int(got[0]) == 77
+
+
+def test_delete_tombstones():
+    idx = hi.create(1024, CFG)
+    keys = jnp.arange(1, 101, dtype=KD)
+    idx, _ = hi.insert(idx, keys, keys.astype(jnp.int32), CFG)
+    idx, found = hi.delete(idx, keys[:50], CFG)
+    assert bool(found.all())
+    _, found2, _ = hi.lookup(idx, keys, CFG)
+    np.testing.assert_array_equal(_np(found2), [False] * 50 + [True] * 50)
+    assert int(hi.n_items(idx)) == 50
+
+
+def test_chain_overflow_reports_not_ok():
+    tiny = scaled(slots_per_bucket=2, max_chain=1, load_factor=8.0)
+    idx = hi.create(8, tiny)   # nb small -> chains overflow quickly
+    keys = jnp.arange(1, 201, dtype=KD)
+    idx, ok = hi.insert(idx, keys, keys.astype(jnp.int32), tiny)
+    assert not bool(ok.all())          # some rejected
+    # every accepted key is findable
+    got, found, _ = hi.lookup(idx, keys, tiny)
+    np.testing.assert_array_equal(_np(found), _np(ok))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["put", "del"]),
+                          st.integers(1, 50),
+                          st.integers(0, 1000)),
+                min_size=1, max_size=12))
+def test_matches_dict_model(ops):
+    """Property: batched put/delete sequence behaves like a python dict."""
+    idx = hi.create(512, CFG)
+    model: dict[int, int] = {}
+    for kind, k, a in ops:
+        if kind == "put":
+            idx, ok = hi.insert(idx, jnp.array([k], KD),
+                                jnp.array([a], jnp.int32), CFG)
+            if bool(ok[0]):
+                model[k] = a
+        else:
+            idx, _ = hi.delete(idx, jnp.array([k], KD), CFG)
+            model.pop(k, None)
+    probe = jnp.array(sorted(set(k for _, k, _ in ops)), KD)
+    got, found, _ = hi.lookup(idx, probe, CFG)
+    for i, k in enumerate(probe.tolist()):
+        assert bool(found[i]) == (k in model)
+        if k in model:
+            assert int(got[i]) == model[k]

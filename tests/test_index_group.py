@@ -1,0 +1,144 @@
+"""Index-group tests: consistency guarantees (§3.2.3), async apply,
+degraded reads and recovery (§3.3, §4.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.histore import scaled
+from repro.core.hashing import key_dtype
+
+KD = key_dtype()
+from repro.core import index_group as ig
+from repro.core import log as lg
+from repro.core import sorted_index as si
+from repro.core.hashing import key_dtype
+
+KD = key_dtype()
+
+CFG = scaled(log_capacity=256, async_apply_batch=64)
+
+
+def _put(g, ks, as_):
+    return ig.put(g, jnp.array(ks, KD), jnp.array(as_, jnp.int32), CFG)
+
+
+def test_put_then_get_serializable():
+    """Written items are visible to GET immediately (hash is synchronous)."""
+    g = ig.create(2048, CFG)
+    g, ok = _put(g, [3, 1, 4, 1, 5], [30, 10, 40, 11, 50])
+    assert bool(ok.all())
+    addr, found, acc = ig.get(g, jnp.array([1, 3, 4, 5, 9], KD), CFG)
+    np.testing.assert_array_equal(np.asarray(found),
+                                  [True, True, True, True, False])
+    np.testing.assert_array_equal(np.asarray(addr)[:4], [11, 30, 40, 50])
+
+
+def test_scan_sees_all_writes():
+    """SCAN drains pending log entries first (strong consistency)."""
+    g = ig.create(2048, CFG)
+    g, _ = _put(g, list(range(10, 100, 10)), list(range(9)))
+    assert int(lg.pending_count(jax.tree.map(lambda a: a[0], g.blogs))) > 0
+    (k, a, n), g = ig.scan(g, KD(15), KD(75), 16, CFG)
+    assert int(n) == 6            # 20,30,40,50,60,70
+    np.testing.assert_array_equal(np.asarray(k)[:6], [20, 30, 40, 50, 60, 70])
+
+
+def test_hash_and_sorted_agree_after_drain():
+    g = ig.create(2048, CFG)
+    keys = list(np.random.RandomState(1).choice(10000, 200, replace=False))
+    g, _ = _put(g, keys, list(range(200)))
+    g, _ = ig.delete(g, jnp.array(keys[:50], KD), CFG)
+    g = ig.drain(g, CFG)
+    for rep in range(CFG.n_backups):
+        srt = jax.tree.map(lambda a: a[rep], g.sorted)
+        assert int(srt.size) == 150
+        addr_s, found_s, _ = si.search(srt, jnp.array(keys, KD))
+        addr_h, found_h, _ = ig.get(g, jnp.array(keys, KD), CFG)
+        np.testing.assert_array_equal(np.asarray(found_s), np.asarray(found_h))
+
+
+def test_degraded_get_after_primary_failure():
+    """Primary down -> GET served from sorted replica + pending log."""
+    g = ig.create(2048, CFG)
+    g, _ = _put(g, [7, 8, 9], [70, 80, 90])
+    g = ig.apply_async(g, CFG)                 # applied to replicas
+    g, _ = _put(g, [9, 11], [91, 110])         # still pending in logs
+    g = ig.fail(g, 0)
+    addr, found, acc = ig.get(g, jnp.array([7, 9, 11, 12], KD), CFG)
+    np.testing.assert_array_equal(np.asarray(found), [True, True, True, False])
+    np.testing.assert_array_equal(np.asarray(addr)[:3], [70, 91, 110])
+
+
+def test_degraded_delete_visible_in_log():
+    g = ig.create(2048, CFG)
+    g, _ = _put(g, [5], [50])
+    g = ig.apply_async(g, CFG)
+    g, _ = ig.delete(g, jnp.array([5], KD), CFG)   # pending DEL
+    g = ig.fail(g, 0)
+    addr, found, _ = ig.get(g, jnp.array([5], KD), CFG)
+    assert not bool(found[0])
+
+
+def test_recover_primary_rebuilds_hash():
+    g = ig.create(2048, CFG)
+    keys = list(range(100, 300))
+    g, _ = _put(g, keys, [k - 100 for k in keys])
+    g = ig.fail(g, 0)
+    g = ig.recover_primary(g, CFG)
+    assert bool(g.alive[0])
+    addr, found, _ = ig.get(g, jnp.array(keys, KD), CFG)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(addr),
+                                  [k - 100 for k in keys])
+
+
+def test_recover_backup_copies_replica():
+    g = ig.create(2048, CFG)
+    g, _ = _put(g, [1, 2, 3], [10, 20, 30])
+    g = ig.fail(g, 2)                          # backup 1 down
+    g, _ = _put(g, [4], [40])
+    g = ig.recover_backup(g, 1, CFG)
+    assert bool(g.alive.all())
+    g = ig.drain(g, CFG)
+    srt = jax.tree.map(lambda a: a[1], g.sorted)
+    got, found, _ = si.search(srt, jnp.array([1, 2, 3, 4], KD))
+    assert bool(found.all())
+
+
+def test_scan_with_backup_failure():
+    g = ig.create(2048, CFG)
+    g, _ = _put(g, [10, 20, 30], [1, 2, 3])
+    g = ig.fail(g, 1)                          # backup 0 down -> use backup 1
+    (k, a, n), g = ig.scan(g, KD(10), KD(30), 8, CFG)
+    assert int(n) == 3
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["put", "del", "apply"]),
+                          st.integers(0, 40), st.integers(0, 99)),
+                min_size=1, max_size=25))
+def test_group_linearizable_vs_model(ops):
+    """Property: GET/SCAN always reflect every completed write, regardless
+    of how many async applies have happened in between."""
+    g = ig.create(1024, CFG)
+    model: dict[int, int] = {}
+    for kind, k, a in ops:
+        if kind == "put":
+            g, ok = _put(g, [k], [a])
+            if bool(ok[0]):
+                model[k] = a
+        elif kind == "del":
+            g, _ = ig.delete(g, jnp.array([k], KD), CFG)
+            model.pop(k, None)
+        else:
+            g = ig.apply_async(g, CFG)
+    probe = jnp.array(sorted(set(k for _, k, _ in ops)), KD)
+    addr, found, _ = ig.get(g, probe, CFG)
+    for i, k in enumerate(probe.tolist()):
+        assert bool(found[i]) == (k in model), (k, model)
+        if k in model:
+            assert int(addr[i]) == model[k]
+    # scan agrees with the model too
+    (ks, _, n), g = ig.scan(g, KD(0), KD(99), 64, CFG)
+    assert int(n) == len(model)

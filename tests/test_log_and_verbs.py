@@ -1,0 +1,62 @@
+"""Update-log ring semantics + routing-verb building blocks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import log as lg
+from repro.core.hashing import key_dtype
+from repro.core.verbs import route_build
+
+KD = key_dtype()
+
+
+def test_log_append_take_order():
+    log = lg.create(16)
+    k = jnp.arange(1, 6, dtype=KD)
+    a = jnp.arange(5, dtype=jnp.int32)
+    ops = jnp.ones((5,), jnp.int8)
+    log, ok = lg.append(log, k, a, ops)
+    assert bool(ok.all())
+    assert int(lg.pending_count(log)) == 5
+    keys, addrs, o, log = lg.take_pending(log, 3)
+    np.testing.assert_array_equal(np.asarray(keys), [1, 2, 3])
+    assert int(lg.pending_count(log)) == 2
+    keys, addrs, o, log = lg.take_pending(log, 8)
+    np.testing.assert_array_equal(np.asarray(keys)[:2], [4, 5])
+    assert (np.asarray(o)[2:] == 0).all()          # padding marked invalid
+    assert int(lg.pending_count(log)) == 0
+
+
+def test_log_ring_wraps_and_overflow_pushback():
+    log = lg.create(8)
+    for i in range(3):                       # 3 x 4 appends with drains
+        k = jnp.arange(i * 4, i * 4 + 4, dtype=KD)
+        log, ok = lg.append(log, k, k.astype(jnp.int32),
+                            jnp.ones((4,), jnp.int8))
+        assert bool(ok.all())
+        _, _, _, log = lg.take_pending(log, 4)
+    # now overflow: 10 entries into capacity-8 pending window
+    k = jnp.arange(100, 110, dtype=KD)
+    log, ok = lg.append(log, k, k.astype(jnp.int32),
+                        jnp.ones((10,), jnp.int8))
+    assert int(ok.sum()) == 8 and not bool(ok[8:].any())
+    keys, _, o, log = lg.take_pending(log, 8)
+    np.testing.assert_array_equal(np.asarray(keys), np.arange(100, 108))
+
+
+def test_route_build_capacity_and_slots():
+    dest = jnp.array([0, 1, 0, 1, 0, 2], jnp.int32)
+    payload = jnp.arange(6, dtype=jnp.int32) * 10
+    bufs, slot, ok = route_build(dest, {"p": (payload, -1)}, 4, 2)
+    p = np.asarray(bufs["p"]).reshape(4, 2)
+    # dest 0 got entries 0,2 (capacity 2; third dropped)
+    assert set(p[0].tolist()) == {0, 20}
+    assert set(p[1].tolist()) == {10, 30}
+    assert p[2][0] == 50 and p[2][1] == -1
+    assert not bool(ok[4])                   # third dest-0 entry overflowed
+    assert bool(ok[jnp.array([0, 1, 2, 3, 5])].all())
+    # slots point back into the exchange buffer
+    flat = np.asarray(bufs["p"])
+    for i, s in enumerate(np.asarray(slot)):
+        if bool(ok[i]):
+            assert flat[s] == i * 10

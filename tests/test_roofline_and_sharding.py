@@ -1,0 +1,101 @@
+"""Roofline HLO parsing, term math, and partition-rule invariants."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, input_specs, \
+    shape_applicable
+from repro.roofline.analysis import (collective_bytes_from_hlo,
+                                     roofline_terms)
+
+
+def test_collective_parser():
+    hlo = """
+  %ar = bf16[128,256]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = f32[64]{0} all-gather-start(%y)
+  %p = (bf16[8,8]{1,0}, bf16[8,8]{1,0}) collective-permute(%z)
+  %aa = s32[1024]{0} all-to-all(%w)
+  %rs = f32[32,32]{1,0} reduce-scatter(%v)
+  %not_a_coll = f32[999]{0} add(%a, %b)
+"""
+    out = collective_bytes_from_hlo(hlo)
+    b = out["bytes_by_type"]
+    assert b["all-reduce"] == 128 * 256 * 2
+    assert b["all-gather"] == 64 * 4
+    assert b["collective-permute"] == 2 * 8 * 8 * 2
+    assert b["all-to-all"] == 1024 * 4
+    assert b["reduce-scatter"] == 32 * 32 * 4
+    assert out["total_bytes"] == sum(b.values())
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(197e12 * 2.0, 819e9 * 0.5, 50e9 * 1.0)
+    assert t["dominant"] == "compute_s"
+    assert abs(t["compute_s"] - 2.0) < 1e-9
+    assert abs(t["roofline_fraction_compute"] - 1.0) < 1e-9
+    t = roofline_terms(197e12, 819e9 * 10, 0)
+    assert t["dominant"] == "memory_s"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisible_on_production_mesh(arch):
+    """Every sharded dim of every param divides its mesh axes (the
+    guarantee that made the 40-cell dry-run compile)."""
+    from repro.models.transformer import init_params
+    from repro.sharding.partition import param_pspecs
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    cfg = get_config(arch)
+    params_s = jax.eval_shape(lambda k: init_params(cfg, k),
+                              jax.random.PRNGKey(0))
+    specs = param_pspecs(cfg, params_s, FakeMesh())
+
+    def check(leaf, spec):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            sz = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                sz *= FakeMesh.shape[a]
+            assert dim % sz == 0, (arch, leaf.shape, tuple(spec))
+
+    jax.tree.map(check, params_s, specs,
+                 is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+
+
+def test_shape_applicability_rules():
+    full_attn = ["mistral-large-123b", "command-r-35b", "mistral-nemo-12b",
+                 "internvl2-76b", "musicgen-large", "deepseek-v2-lite-16b",
+                 "kimi-k2-1t-a32b"]
+    subq = ["zamba2-7b", "falcon-mamba-7b", "gemma3-27b"]
+    for a in full_attn:
+        ok, why = shape_applicable(get_config(a), SHAPES["long_500k"])
+        assert not ok and "sub-quadratic" in why
+    for a in subq:
+        ok, _ = shape_applicable(get_config(a), SHAPES["long_500k"])
+        assert ok
+    for a in ARCH_IDS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_config(a), SHAPES[s])[0]
+
+
+def test_input_specs_shapes():
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        d = input_specs(cfg, SHAPES["train_4k"])
+        if cfg.frontend == "embed":
+            assert d["embeds"].shape == (256, 4096, cfg.d_model)
+        else:
+            assert d["tokens"].shape == (256, 4096)
+        d = input_specs(cfg, SHAPES["decode_32k"])
+        assert d["pos"].shape == (128,)
+
+
+def test_with_opts_parsing():
+    cfg = get_config("kimi-k2-1t-a32b")
+    c2 = cfg.with_opts("moe_impl=smap,attn_block_skip=true,top_k=4")
+    assert c2.moe_impl == "smap" and c2.attn_block_skip and c2.top_k == 4
+    assert cfg.with_opts("") is cfg

@@ -1,0 +1,83 @@
+"""Sorted index (TPU skiplist) unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sorted_index as si
+from repro.core.hashing import key_dtype
+
+KD = key_dtype()
+
+
+def test_bulk_load_and_search():
+    idx = si.create(1 << 12)
+    keys = jnp.array(sorted(np.random.RandomState(0).choice(
+        10 ** 6, 1000, replace=False)), KD)
+    addrs = jnp.arange(1000, dtype=jnp.int32)
+    idx = si.bulk_load(idx, keys, addrs)
+    got, found, acc = si.search(idx, keys)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(addrs))
+    assert int(acc[0]) == si.directory_levels(1 << 12, 128)
+    _, found_m, _ = si.search(idx, keys + 1)
+    assert not bool(found_m.any())
+
+
+def test_merge_put_overwrite_delete():
+    idx = si.create(256)
+    idx = si.bulk_load(idx, jnp.array([10, 20, 30], KD),
+                       jnp.array([1, 2, 3], jnp.int32))
+    keys = jnp.array([20, 25, 30, 25], KD)
+    addrs = jnp.array([22, 55, -1, 66], jnp.int32)
+    ops = jnp.array([si.OP_PUT, si.OP_PUT, si.OP_DEL, si.OP_PUT], jnp.int8)
+    idx = si.merge(idx, keys, addrs, ops)
+    assert int(idx.size) == 3            # 10, 20(new), 25(last wins)
+    got, found, _ = si.search(idx, jnp.array([10, 20, 25, 30], KD))
+    np.testing.assert_array_equal(np.asarray(found), [True, True, True, False])
+    np.testing.assert_array_equal(np.asarray(got)[:3], [1, 22, 66])
+
+
+def test_range_query():
+    idx = si.create(512)
+    keys = jnp.arange(0, 500, 5, dtype=KD)     # 0,5,...,495
+    idx = si.bulk_load(idx, keys, (keys // 5).astype(jnp.int32))
+    k, a, n = si.range_query(idx, KD(12), KD(52), 16)
+    assert int(n) == 8                                 # 15..50
+    np.testing.assert_array_equal(np.asarray(k)[:8],
+                                  [15, 20, 25, 30, 35, 40, 45, 50])
+    # limit truncation
+    k, a, n = si.range_query(idx, KD(0), KD(499), 16)
+    assert int(n) == 16
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from([1, 2]),     # OP_PUT / OP_DEL
+                          st.integers(0, 60),
+                          st.integers(0, 100)),
+                min_size=1, max_size=40))
+def test_merge_matches_dict_model(entries):
+    idx = si.create(256)
+    model: dict[int, int] = {}
+    # apply in batches of 8 (asynchronous batched apply, like the log)
+    for i in range(0, len(entries), 8):
+        batch = entries[i:i + 8]
+        keys = jnp.array([k for _, k, _ in batch], KD)
+        addrs = jnp.array([a for _, _, a in batch], jnp.int32)
+        ops = jnp.array([o for o, _, _ in batch], jnp.int8)
+        idx = si.merge(idx, keys, addrs, ops)
+        for o, k, a in batch:
+            if o == 1:
+                model[k] = a
+            else:
+                model.pop(k, None)
+    assert int(idx.size) == len(model)
+    if model:
+        probe = jnp.array(sorted(model), KD)
+        got, found, _ = si.search(idx, probe)
+        assert bool(found.all())
+        np.testing.assert_array_equal(
+            np.asarray(got), [model[k] for k in sorted(model)])
+    # sortedness invariant
+    k = np.asarray(idx.keys)
+    assert (np.diff(k) >= 0).all()

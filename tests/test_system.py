@@ -1,0 +1,76 @@
+"""End-to-end system tests: train -> checkpoint -> restore -> serve, and
+the full KV-store lifecycle against a reference model."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeSpec
+from repro.configs.histore import scaled
+from repro.configs.tiny import tiny_config
+from repro.core import index_group as ig
+from repro.core.hashing import key_dtype
+from repro.launch.mesh import make_local_mesh
+from repro.serving.engine import ServingEngine
+from repro.train.trainer import train
+
+KD = key_dtype()
+
+
+def test_train_then_serve_roundtrip(tmp_path):
+    """Train a tiny model, checkpoint, restore, and serve generations with
+    the engine — the full lifecycle a deployment runs."""
+    cfg = tiny_config("musicgen-large")
+    shape = ShapeSpec("tiny", 32, 4, "train")
+    out = train(cfg, make_local_mesh(), shape, steps=8, ckpt_dir=tmp_path,
+                ckpt_every=8, lr=3e-3, log_every=4)
+    params = jax.tree.map(np.asarray, out["params"])
+    eng = ServingEngine(cfg, jax.tree.map(jnp.asarray, params),
+                        batch_slots=2, max_len=64, page_size=8)
+    eng.submit([1, 2, 3], max_new=5)
+    eng.submit([4, 5], max_new=5)
+    eng.run()
+    assert eng.stats["decode_steps"] > 0
+    assert eng.stats["pages_registered"] >= 1
+    assert eng.stats["pages_freed"] >= 1
+
+
+def test_kvstore_lifecycle_vs_model():
+    """Mixed PUT/GET/DELETE/SCAN trace on one index group with failure and
+    recovery in the middle, validated against a dict."""
+    cfg = scaled(log_capacity=1 << 10, async_apply_batch=256)
+    g = ig.create(4096, cfg)
+    model = {}
+    rng = np.random.RandomState(7)
+
+    def put(ks):
+        nonlocal g
+        ks = list(ks)
+        a = rng.randint(0, 1000, len(ks))
+        g, ok = ig.put(g, jnp.asarray(ks, KD), jnp.asarray(a, jnp.int32), cfg)
+        for i, k in enumerate(ks):
+            if bool(ok[i]):
+                model[k] = int(a[i])
+
+    put(rng.choice(10 ** 6, 300, replace=False))
+    # delete a third
+    dels = list(model)[:100]
+    g, _ = ig.delete(g, jnp.asarray(dels, KD), cfg)
+    for k in dels:
+        model.pop(k)
+    # primary failure mid-stream
+    g = ig.fail(g, 0)
+    probe = jnp.asarray(sorted(model)[:64], KD)
+    addr, found, _ = ig.get(g, probe, cfg, primary_alive=False)
+    assert bool(found.all())
+    np.testing.assert_array_equal(
+        np.asarray(addr), [model[int(k)] for k in probe])
+    # recover and continue
+    g = ig.recover_primary(g, cfg)
+    put(rng.choice(10 ** 6, 200, replace=False) + 2 * 10 ** 6)
+    # full scan agrees with the model
+    (ks, _, n), g = ig.scan(g, jnp.asarray(0, KD),
+                            jnp.asarray(np.iinfo(np.int32).max - 1, KD),
+                            1024, cfg)
+    assert int(n) == len(model)
+    got = sorted(np.asarray(ks[:int(n)]).tolist())
+    assert got == sorted(model)

@@ -1,0 +1,64 @@
+"""Assemble the EXPERIMENTS.md tables from results/*.json artifacts."""
+import glob
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def load(d):
+    out = {}
+    for f in sorted(glob.glob(str(ROOT / d / "*.json"))):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"], Path(f).stem.split("__")[-1])] = r
+    return out
+
+
+def fmt_cell(r):
+    t = r["roofline"]
+    return (f"{t['compute_s']:.3f} | {t['memory_s']:.3f} | "
+            f"{t['collective_s']:.3f} | {t['dominant'].replace('_s','')} | "
+            f"{r.get('useful_flops_ratio', 0):.2f} | "
+            f"{r['memory']['peak_estimate_bytes']/1e9:.0f}")
+
+
+def main():
+    base = load("results/dryrun")
+    mp = load("results/dryrun_multipod")
+    perf = load("results/perf")
+
+    print("## table:roofline")
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| useful-flops | HBM GB/dev | multi-pod |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for (a, s, m), r in sorted(base.items()):
+        mpr = mp.get((a, s, "2x16x16"), {})
+        mps = {"ok": "ok", "skipped": "skip"}.get(mpr.get("status"), "?")
+        if r["status"] == "skipped":
+            print(f"| {a} | {s} | — | — | — | skipped (full attention) "
+                  f"| — | — | {mps} |")
+            continue
+        print(f"| {a} | {s} | {fmt_cell(r)} | {mps} |")
+
+    print()
+    print("## table:opt")
+    print("| arch | shape | variant | bound before s | bound after s | "
+          "speedup | dominant after |")
+    print("|---|---|---|---|---|---|---|")
+    for (a, s, tag), r in sorted(perf.items()):
+        if tag not in ("opt", "optstub") or r["status"] != "ok":
+            continue
+        b = base.get((a, s, "16x16"))
+        if not b or b["status"] != "ok":
+            continue
+        tb = b["roofline"]
+        ta = r["roofline"]
+        before = max(tb["compute_s"], tb["memory_s"], tb["collective_s"])
+        after = max(ta["compute_s"], ta["memory_s"], ta["collective_s"])
+        print(f"| {a} | {s} | {r.get('opts','')} | {before:.3f} | "
+              f"{after:.3f} | {before/after:.1f}x | "
+              f"{ta['dominant'].replace('_s','')} |")
+
+
+if __name__ == "__main__":
+    main()
