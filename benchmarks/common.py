@@ -20,9 +20,9 @@ import numpy as np
 
 from repro.configs.histore import scaled
 from repro.core import hash_index as hix
-from repro.core import index_group as ig
 from repro.core import log as lg
 from repro.core import sorted_index as six
+from repro.core.client import HiStoreClient, LocalBackend
 from repro.core.hashing import key_dtype
 
 KD = key_dtype()
@@ -58,32 +58,33 @@ def zipf_indices(n_ops, n_keys, theta=0.9, seed=1):
 # Comparison systems (index-group variants)
 # ---------------------------------------------------------------------------
 class HiStoreSys:
-    """hash primary + 2 sorted replicas (the paper's system)."""
+    """hash primary + 2 sorted replicas (the paper's system), driven
+    through the unified HiStoreClient — the same front door the serving
+    engine and examples use, so benchmark numbers include the real client
+    path (fixed-shape batching, typed results)."""
     name = "histore"
     supports_scan = True
 
     def __init__(self, capacity):
-        self.g = ig.create(capacity, CFG)
+        self.client = HiStoreClient(LocalBackend(capacity, CFG),
+                                    batch_quantum=4096, max_batch=16384)
 
     def load(self, keys, addrs):
-        self.g, _ = ig.put(self.g, keys, addrs, CFG)
-        self.g = ig.drain(self.g, CFG)
+        self.client.put(keys, addrs)
+        self.client.drain()
 
     def put(self, keys, addrs):
-        self.g, ok = ig.put(self.g, keys, addrs, CFG)
-        return ok
+        return self.client.put(keys, addrs).ok
 
     def get(self, keys):
-        # client-side routing: the primary is alive (static hint, as the
-        # paper's client routes one-sided reads to the primary)
-        return ig.get(self.g, keys, CFG, primary_alive=True)
+        # GetResult unpacks positionally as (addrs, found, accesses, ...)
+        return self.client.get(keys)
 
     def scan(self, lo, hi, limit):
-        out, self.g = ig.scan(self.g, lo, hi, limit, CFG)
-        return out
+        return self.client.scan(lo, hi, limit)
 
     def apply_async(self):
-        self.g = ig.apply_async(self.g, CFG)
+        self.client.apply()
 
 
 class AllHashSys:

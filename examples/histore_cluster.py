@@ -6,17 +6,17 @@ if "XLA_FLAGS" not in os.environ:
     PYTHONPATH=src python examples/histore_cluster.py
 
 Each device is the primary of one index group and backup for two
-neighbours.  Shows the one-sided GET (routed all_to_all + owner-side
-gathers), the two-sided PUT with ppermute log replication, SCAN fan-out,
-and a failover.
+neighbours.  The same `HiStoreClient` front door as the single-node
+quickstart, now over the shard_map backend: one-sided GETs (routed
+all_to_all + owner-side gathers), two-sided PUTs with ppermute log
+replication, distributed DELETE tombstones, SCAN fan-out, and a failover.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.histore import scaled
 from repro.core import kvstore as kv
-from repro.core.hashing import key_dtype
+from repro.core.client import DistributedBackend, HiStoreClient
 
 
 def main():
@@ -24,31 +24,32 @@ def main():
     n = len(jax.devices())
     mesh = jax.make_mesh((n,), (kv.AXIS,))
     print(f"cluster: {n} index servers (1 group each, 2 backups)")
-    store = kv.create(mesh, 4096, cfg)
-    ops = kv.make_ops(mesh, cfg, capacity_q=64, scan_limit=64)
-    KD = key_dtype()
+    client = HiStoreClient(
+        DistributedBackend(mesh, cfg, 4096, capacity_q=64, scan_limit=64),
+        batch_quantum=64)
 
-    keys = jnp.asarray(np.random.RandomState(1).choice(10 ** 6, 128,
-                                                       replace=False) + 1, KD)
-    vals = jnp.tile(jnp.arange(128, dtype=jnp.int32)[:, None], (1, 4))
-    store, ok, addrs = ops["put"](store, keys, jnp.zeros(128, jnp.int32), vals)
-    print(f"PUT 128: ok={bool(np.asarray(ok).all())}")
+    keys = np.random.RandomState(1).choice(10 ** 6, 128, replace=False) + 1
+    res = client.put(keys, np.arange(128))
+    print(f"PUT 128: ok={res.all_ok} retries={res.retries}")
 
-    addr, found, acc, val = ops["get"](store, keys[:16])
-    print(f"GET 16: found={bool(np.asarray(found).all())} "
-          f"max_accesses={int(np.asarray(acc).max())} "
-          f"values_ok={bool((np.asarray(val)[:, 0] == np.arange(16)).all())}")
+    g = client.get(keys[:16])
+    print(f"GET 16: found={g.all_found} "
+          f"max_accesses={int(np.asarray(g.accesses).max())} "
+          f"values_ok={bool((np.asarray(g.values)[:, 0] == np.arange(16)).all())}")
 
-    lo = jnp.full((128,), 0, KD)
-    hi = jnp.full((128,), 10 ** 7, KD)
-    sk, sa, store = ops["scan"](store, lo, hi)
-    print(f"SCAN: first={int(np.asarray(sk)[0])} "
-          f"sorted={bool((np.diff(np.asarray(sk)) >= 0).all())}")
+    s = client.scan(0, 10 ** 7)
+    print(f"SCAN: first={int(np.asarray(s.keys)[0])} "
+          f"sorted={bool((np.diff(np.asarray(s.keys[:int(s.count)])) >= 0).all())}")
 
-    store = kv.fail_server(store, 3)
-    addr, found, acc, _ = ops["get"](store, keys)
-    print(f"server 3 DOWN -> GET still found={bool(np.asarray(found).all())}")
-    store = kv.recover_server(store, 3)
+    d = client.delete(keys[:8])
+    g2 = client.get(keys[:8])
+    print(f"DELETE 8: found={bool(d.found.all())} -> GET misses="
+          f"{not bool(g2.found.any())}")
+
+    client.fail_server(3)
+    g3 = client.get(keys[8:])
+    print(f"server 3 DOWN -> GET still found={g3.all_found}")
+    client.recover_server(3)
     print("cluster example OK")
 
 

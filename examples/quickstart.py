@@ -2,49 +2,54 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds one index group (1 hash table + 2 sorted replicas + logs), runs
-PUT / GET / SCAN / DELETE, injects a primary failure, keeps serving, and
-recovers — the paper's §3 in miniature.
+One typed client over one index group (1 hash table + 2 sorted replicas +
+logs): PUT / GET / SCAN / DELETE, a primary failure survived mid-stream,
+and recovery — the paper's §3 in miniature, all through `HiStoreClient`.
 """
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.histore import scaled
-from repro.core import index_group as ig
-from repro.core.hashing import key_dtype
+from repro.core.client import HiStoreClient, LocalBackend
 
 CFG = scaled(log_capacity=1 << 12, async_apply_batch=1024)
-KD = key_dtype()
 
 
 def main():
-    g = ig.create(capacity=4096, cfg=CFG)
+    client = HiStoreClient(LocalBackend(4096, CFG), batch_quantum=64,
+                           apply_every_n_ops=2048)
 
     # PUT a batch (primary log -> backup logs -> hash table, §3.2.2)
-    keys = jnp.asarray(np.random.RandomState(0).choice(10 ** 6, 500,
-                                                       replace=False), KD)
-    addrs = jnp.arange(500, dtype=jnp.int32)
-    g, ok = ig.put(g, keys, addrs, CFG)
-    print(f"PUT 500 keys: ok={bool(ok.all())}")
+    keys = np.random.RandomState(0).choice(10 ** 6, 500, replace=False)
+    res = client.put(keys, np.arange(500))
+    print(f"PUT 500 keys: ok={res.all_ok} retries={res.retries}")
 
-    # GET: one-sided hash probe (1 sub-bucket read each)
-    addr, found, acc = ig.get(g, keys[:8], CFG)
-    print(f"GET hits={found.tolist()} accesses={acc.tolist()}")
+    # GET: one-sided hash probe (1 sub-bucket read each), typed result
+    g = client.get(keys[:8])
+    print(f"GET hits={g.found.tolist()} accesses={g.accesses.tolist()} "
+          f"values={g.values[:, 0].tolist()}")
 
     # SCAN: drains the async log, then walks the sorted replica
-    (sk, sa, n), g = ig.scan(g, jnp.asarray(0, KD),
-                             jnp.asarray(10 ** 6, KD), 10, CFG)
-    print(f"SCAN first {int(n)} keys: {sk[:int(n)].tolist()}")
+    s = client.scan(0, 10 ** 6, limit=10)
+    print(f"SCAN first {int(s.count)} keys: {s.keys[:int(s.count)].tolist()}")
+
+    # DELETE: tombstone through the log; compacts out of the replicas
+    d = client.delete(keys[:4])
+    g = client.get(keys[:8])
+    print(f"DELETE 4: found={d.found.tolist()} -> GET now "
+          f"hits={g.found.tolist()}")
 
     # failure: primary dies; GETs fall back to sorted replica + pending log
-    g = ig.fail(g, 0)
-    addr, found, acc = ig.get(g, keys[:4], CFG)
-    print(f"degraded GET hits={found.tolist()} accesses={acc.tolist()}")
+    client.fail_server(0)
+    g = client.get(keys[4:8])
+    print(f"degraded GET hits={g.found.tolist()} "
+          f"accesses={g.accesses.tolist()}")
 
     # recovery: rebuild the hash table from a sorted replica (§4.3)
-    g = ig.recover_primary(g, CFG)
-    addr, found, acc = ig.get(g, keys[:4], CFG)
-    print(f"post-recovery GET hits={found.tolist()} accesses={acc.tolist()}")
+    client.recover_server(0)
+    g = client.get(keys[4:8])
+    print(f"post-recovery GET hits={g.found.tolist()} "
+          f"accesses={g.accesses.tolist()}")
+    assert g.all_found
     print("quickstart OK")
 
 

@@ -7,5 +7,11 @@ Modules:
   log           — append-only update log with applied-prefix marks
   index_group   — 1 hash + N sorted replicas + logs; consistency; recovery
   kvstore       — distributed store over index groups (see also verbs.py)
+  client        — HiStoreClient: the one typed front door (use this)
+  results       — PutResult/GetResult/DeleteResult/ScanResult
 """
 from repro.core import hash_index, hashing, index_group, log, sorted_index  # noqa: F401
+from repro.core.client import (DistributedBackend, HiStoreClient,  # noqa: F401
+                               LocalBackend)
+from repro.core.results import (DeleteResult, GetResult, PutResult,  # noqa: F401
+                                ScanResult)

@@ -1,0 +1,448 @@
+"""HiStoreClient: one typed front door over the hybrid index.
+
+The paper's client sees a single KV interface (GET/PUT/DELETE/SCAN) no
+matter whether a request lands on the hash table, a skiplist replica, or a
+degraded backup path.  This module is that front door for the repro:
+
+    client = HiStoreClient(LocalBackend(4096, cfg))          # one node
+    client = HiStoreClient(DistributedBackend(mesh, cfg))    # shard_map'd
+
+    res = client.put(keys, values)       # PutResult(ok, addrs, retries)
+    res = client.get(keys)               # GetResult(addrs, found, acc, vals)
+    res = client.delete(keys)            # DeleteResult(ok, found, retries)
+    res = client.scan(lo, hi, limit)     # ScanResult(keys, addrs, count)
+
+Responsibilities the old per-layer surfaces pushed onto every caller:
+
+  * fixed-shape batching — requests are padded to power-of-two batch sizes
+    (and a multiple of the device count for the distributed backend), so
+    the jitted ops stop recompiling per batch size; oversize requests are
+    split into ``max_batch`` chunks;
+  * overflow push-back — capacity overflow (exchange-buffer ok=False, the
+    paper's RPC queue-full) becomes a bounded client-side retry loop with
+    async-apply drains in between, instead of a silently-surfaced flag;
+  * async-apply scheduling — the backups' log->sorted merges run every
+    ``apply_every_n_ops`` mutating ops (the paper's worker threads),
+    instead of callers hand-invoking drains.
+
+Backends implement the small protocol below; see DESIGN.md §Client API for
+the migration table from the old surfaces.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import index_group as ig
+from repro.core import kvstore as kv
+from repro.core import log as lg
+from repro.core.hashing import key_dtype, key_inf, next_pow2
+from repro.core.results import (DeleteResult, GetResult, PutResult,
+                                ScanResult)
+
+I32 = jnp.int32
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Fixed-shape batch ops over one store.  All mutating ops take a
+    ``valid`` lane mask (padding lanes mutate nothing and consume no
+    routing capacity); ``delete`` returns (acked, found) so the client can
+    retry push-back without re-deleting."""
+
+    batch_multiple: int   # padded batch sizes must divide by this
+    value_words: int      # payload width W of values [Q, W]
+
+    def put(self, keys, vals, valid) -> Tuple[jnp.ndarray, jnp.ndarray]: ...
+    def get(self, keys, valid) -> tuple: ...
+    def delete(self, keys, valid) -> Tuple[jnp.ndarray, jnp.ndarray]: ...
+    def scan(self, lo, hi, limit: int) -> tuple: ...
+    def apply_async(self) -> None: ...
+    def drain(self) -> None: ...
+
+
+# ---------------------------------------------------------------------------
+# Local backend: one index group + the node's data shard, jitted ops
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(0,))
+def _local_put(cfg, g, dvals, dfill, keys, vals, valid):
+    dcap = dvals.shape[0]
+    off = jnp.cumsum(valid.astype(I32)) - 1
+    slot = jnp.where(valid, (dfill + off) % dcap, dcap)
+    dvals = dvals.at[slot].set(vals, mode="drop")
+    addrs = jnp.where(valid, slot, -1).astype(I32)
+    g, ok = ig.put(g, keys, addrs, cfg, valid)
+    return g, dvals, dfill + valid.astype(I32).sum(), ok, addrs
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5))
+def _local_get(cfg, g, dvals, keys, valid, primary_alive):
+    addr, found, acc = ig.get(g, keys, cfg, primary_alive=primary_alive)
+    found = found & valid
+    dcap = dvals.shape[0]
+    slot = jnp.where(found & (addr >= 0) & (addr < dcap), addr, dcap)
+    padded = jnp.concatenate(
+        [dvals, jnp.zeros((1,) + dvals.shape[1:], dvals.dtype)])
+    vals = padded[jnp.clip(slot, 0, dcap)]
+    return (jnp.where(found, addr, -1).astype(I32), found,
+            jnp.where(valid, acc, 0), vals, valid)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _local_delete(cfg, g, keys, valid):
+    g, found = ig.delete(g, keys, cfg, valid)
+    return g, found & valid
+
+
+class LocalBackend:
+    """One index group (1 hash + n_backups sorted replicas + logs) plus the
+    value shard a single-node deployment owns.  The client's routing hint:
+    liveness is tracked host-side (the paper's client knows which servers
+    are up), so healthy GETs compile the one-sided hash path only."""
+
+    def __init__(self, capacity: int, cfg, value_words: Optional[int] = None):
+        self.cfg = cfg
+        self.capacity = capacity
+        self.group = ig.create(capacity, cfg)
+        self.value_words = value_words or cfg.value_words
+        self.dvals = jnp.zeros((capacity, self.value_words), I32)
+        self.dfill = jnp.zeros((), I32)
+        self.batch_multiple = 1
+        self._primary_alive = True
+
+    def _ensure_log_room(self, n: int):
+        """Backup logs reject appends when their pending window is full;
+        locally we know the fill exactly, so drain up front instead of
+        bouncing the batch back through the retry loop."""
+        if self.pending_ops() + n > self.cfg.log_capacity:
+            self.drain()
+
+    def put(self, keys, vals, valid):
+        self._ensure_log_room(int(valid.sum()))
+        self.group, self.dvals, self.dfill, ok, addrs = _local_put(
+            self.cfg, self.group, self.dvals, self.dfill, keys, vals, valid)
+        return ok, addrs
+
+    def get(self, keys, valid):
+        hint = True if self._primary_alive else None
+        return _local_get(self.cfg, self.group, self.dvals, keys, valid,
+                          hint)
+
+    def delete(self, keys, valid):
+        self._ensure_log_room(int(valid.sum()))
+        self.group, found = _local_delete(self.cfg, self.group, keys, valid)
+        # room is guaranteed above, so every valid lane is acked this round
+        return valid, found
+
+    def scan(self, lo, hi, limit: int):
+        (k, a, n), self.group = ig.scan(self.group, lo, hi, limit, self.cfg)
+        return k, a, n
+
+    def apply_async(self):
+        self.group = ig.apply_async(self.group, self.cfg)
+
+    def drain(self):
+        self.group = ig.drain(self.group, self.cfg)
+
+    def pending_ops(self) -> int:
+        return int(lg.pending_count(self.group.blogs).max())
+
+    def fail_server(self, server: int = 0):
+        self.group = ig.fail(self.group, server)
+        if server == 0:
+            self._primary_alive = False
+
+    def recover_server(self, server: int = 0):
+        if server == 0:
+            self.group = ig.recover_primary(self.group, self.cfg)
+            self._primary_alive = True
+        else:
+            self.group = ig.recover_backup(self.group, server - 1, self.cfg)
+
+
+# ---------------------------------------------------------------------------
+# Distributed backend: the shard_map'd store (one index group per device)
+# ---------------------------------------------------------------------------
+class DistributedBackend:
+    """Wraps the kvstore shard_map ops: routed two-sided PUT/DELETE with
+    ppermute log replication, one-sided GET, all_gather'd SCAN."""
+
+    def __init__(self, mesh, cfg, capacity_per_group: int = 4096, *,
+                 capacity_q: int = 64, scan_limit: int = 128):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.G = mesh.devices.size
+        self.store = kv.create(mesh, capacity_per_group, cfg)
+        self.ops = kv.make_ops(mesh, cfg, capacity_q=capacity_q,
+                               scan_limit=scan_limit)
+        self.capacity_q = capacity_q
+        self.scan_limit = scan_limit
+        self.batch_multiple = self.G
+        self.value_words = cfg.value_words
+
+    def _ensure_log_room(self, n: int):
+        # global view of the worst backup-log fill: drain up front when a
+        # batch cannot possibly fit, saving retry round-trips (per-lane
+        # overflow is still acked honestly and retried by the client)
+        if self.pending_ops() + n > self.cfg.log_capacity:
+            self.drain()
+
+    def put(self, keys, vals, valid):
+        self._ensure_log_room(int(valid.sum()))
+        self.store, ok, addrs = self.ops["put"](self.store, keys, vals,
+                                                valid)
+        return ok, addrs
+
+    def get(self, keys, valid):
+        addrs, found, acc, vals, routed = self.ops["get"](self.store, keys,
+                                                          valid)
+        return addrs, found & valid, acc, vals, routed & valid
+
+    def delete(self, keys, valid):
+        self._ensure_log_room(int(valid.sum()))
+        self.store, ok, found = self.ops["delete"](self.store, keys, valid)
+        return ok, found & valid
+
+    def scan(self, lo, hi, limit: int):
+        kd = key_dtype()
+        loa = jnp.full((self.G,), lo, kd)
+        hia = jnp.full((self.G,), hi, kd)
+        # the result width is a static shape: compile (and cache, via
+        # make_ops' lru_cache) one scan op per distinct limit so a caller
+        # asking for more than the construction-time default is honored
+        if limit == self.scan_limit:
+            scan_op = self.ops["scan"]
+        else:
+            scan_op = kv.make_ops(self.mesh, self.cfg,
+                                  capacity_q=self.capacity_q,
+                                  scan_limit=limit)["scan"]
+        k, a, self.store = scan_op(self.store, loa, hia)
+        n = (k != key_inf(k.dtype)).sum().astype(I32)
+        return k, a, n
+
+    def apply_async(self):
+        self.store = self.ops["apply"](self.store)
+
+    def drain(self):
+        while self.pending_ops() > 0:
+            self.apply_async()
+
+    def pending_ops(self) -> int:
+        return int(jnp.max(self.store.blog.tail - self.store.blog.applied))
+
+    def fail_server(self, server: int):
+        self.store = kv.fail_server(self.store, server)
+
+    def recover_server(self, server: int):
+        self.store = kv.recover_server(self.store, server)
+
+
+# ---------------------------------------------------------------------------
+# The client
+# ---------------------------------------------------------------------------
+class HiStoreClient:
+    """Typed GET/PUT/DELETE/SCAN over a pluggable backend (see module
+    docstring).  Thread-compatible with eager callers: all state lives in
+    the backend; the client only holds policy."""
+
+    def __init__(self, backend, *, batch_quantum: int = 64,
+                 max_batch: int = 16384, max_retries: int = 8,
+                 apply_every_n_ops: Optional[int] = None):
+        self.backend = backend
+        m = max(getattr(backend, "batch_multiple", 1), 1)
+        self._multiple = m
+        # padded sizes: power-of-two, rounded up to a multiple of the
+        # backend's device count (works for non-power-of-two meshes too)
+        q0 = next_pow2(max(batch_quantum, 1))
+        self.batch_quantum = -(-q0 // m) * m
+        self.max_batch = (-(-max(max_batch, self.batch_quantum)
+                            // self.batch_quantum) * self.batch_quantum)
+        self.max_retries = max_retries
+        self.apply_every_n_ops = apply_every_n_ops
+        self._mutations_since_apply = 0
+        self.stats = {"puts": 0, "gets": 0, "deletes": 0, "scans": 0,
+                      "retries": 0, "applies": 0}
+
+    # -- public ops --------------------------------------------------------
+    def put(self, keys, values=None) -> PutResult:
+        keys = self._as_keys(keys)
+        q = keys.shape[0]
+        if q == 0:
+            return PutResult(jnp.zeros((0,), bool), jnp.zeros((0,), I32), 0)
+        vals = self._as_values(values, q)
+        oks, addrs, retries = [], [], 0
+        for s in range(0, q, self.max_batch):
+            o, a, r = self._put_chunk(keys[s:s + self.max_batch],
+                                      vals[s:s + self.max_batch])
+            oks.append(o)
+            addrs.append(a)
+            retries = max(retries, r)
+        self.stats["puts"] += q
+        self._note_mutations(q)
+        return PutResult(jnp.concatenate(oks), jnp.concatenate(addrs),
+                         retries)
+
+    def get(self, keys) -> GetResult:
+        keys = self._as_keys(keys)
+        q = keys.shape[0]
+        if q == 0:
+            W = getattr(self.backend, "value_words", 1)
+            return GetResult(jnp.zeros((0,), I32), jnp.zeros((0,), bool),
+                             jnp.zeros((0,), I32), jnp.zeros((0, W), I32))
+        outs = [self._get_chunk(keys[s:s + self.max_batch])
+                for s in range(0, q, self.max_batch)]
+        self.stats["gets"] += q
+        return GetResult(*[jnp.concatenate(p) for p in zip(*outs)])
+
+    def delete(self, keys) -> DeleteResult:
+        keys = self._as_keys(keys)
+        q = keys.shape[0]
+        if q == 0:
+            return DeleteResult(jnp.zeros((0,), bool),
+                                jnp.zeros((0,), bool), 0)
+        oks, founds, retries = [], [], 0
+        for s in range(0, q, self.max_batch):
+            o, f, r = self._delete_chunk(keys[s:s + self.max_batch])
+            oks.append(o)
+            founds.append(f)
+            retries = max(retries, r)
+        self.stats["deletes"] += q
+        self._note_mutations(q)
+        return DeleteResult(jnp.concatenate(oks), jnp.concatenate(founds),
+                            retries)
+
+    def scan(self, lo, hi, limit: Optional[int] = None) -> ScanResult:
+        kd = key_dtype()
+        if limit is None:
+            limit = getattr(self.backend, "scan_limit", 128)
+        if limit <= 0:
+            kd_inf = jnp.zeros((0,), kd)
+            return ScanResult(kd_inf, jnp.zeros((0,), I32),
+                              jnp.zeros((), I32))
+        k, a, n = self.backend.scan(jnp.asarray(lo, kd), jnp.asarray(hi, kd),
+                                    limit)
+        self.stats["scans"] += 1
+        lim = min(limit, k.shape[0])
+        return ScanResult(k[:lim], a[:lim],
+                          jnp.minimum(n, lim).astype(I32))
+
+    def apply(self) -> None:
+        """One asynchronous log->sorted merge round on every backup."""
+        self.stats["applies"] += 1
+        self.backend.apply_async()
+
+    def drain(self) -> None:
+        """Apply ALL pending log entries (SCAN serializability barrier)."""
+        self.backend.drain()
+
+    def fail_server(self, server: int) -> None:
+        self.backend.fail_server(server)
+
+    def recover_server(self, server: int) -> None:
+        self.backend.recover_server(server)
+
+    # -- batching / retry internals ---------------------------------------
+    def _as_keys(self, keys):
+        k = jnp.asarray(keys, key_dtype())
+        if k.ndim == 0:
+            k = k[None]
+        return k
+
+    def _as_values(self, values, q):
+        W = getattr(self.backend, "value_words", 1)
+        if values is None:
+            return jnp.zeros((q, W), I32)
+        v = jnp.asarray(values, I32)
+        if v.ndim == 0:
+            v = v[None]
+        if v.ndim == 1:
+            v = jnp.tile(v[:, None], (1, W))
+        return v
+
+    def _padded_len(self, q: int) -> int:
+        p = max(self.batch_quantum, next_pow2(q))
+        p = -(-p // self._multiple) * self._multiple
+        return min(self.max_batch, p)
+
+    def _pad(self, keys):
+        q = keys.shape[0]
+        p = self._padded_len(q)
+        kp = jnp.zeros((p,), keys.dtype).at[:q].set(keys)
+        valid = jnp.zeros((p,), bool).at[:q].set(True)
+        return kp, valid
+
+    def _put_chunk(self, keys, vals):
+        q = keys.shape[0]
+        kp, pending = self._pad(keys)
+        vp = jnp.zeros((kp.shape[0], vals.shape[1]), vals.dtype
+                       ).at[:q].set(vals)
+        ok_all = jnp.zeros_like(pending)
+        addr_all = jnp.full(kp.shape, -1, I32)
+        retries = 0
+        while True:
+            ok, addrs = self.backend.put(kp, vp, pending)
+            newly = pending & ok
+            ok_all = ok_all | newly
+            addr_all = jnp.where(newly, addrs, addr_all)
+            pending = pending & ~ok
+            if not bool(pending.any()) or retries >= self.max_retries:
+                break
+            retries += 1
+            self.stats["retries"] += 1
+            # push-back: make room (log->sorted merges) before resending
+            self.backend.apply_async()
+        return ok_all[:q], addr_all[:q], retries
+
+    def _delete_chunk(self, keys):
+        q = keys.shape[0]
+        kp, pending = self._pad(keys)
+        acked = jnp.zeros_like(pending)
+        found_all = jnp.zeros_like(pending)
+        retries = 0
+        while True:
+            ack, found = self.backend.delete(kp, pending)
+            newly = pending & ack
+            acked = acked | newly
+            found_all = found_all | (newly & found)
+            pending = pending & ~ack
+            if not bool(pending.any()) or retries >= self.max_retries:
+                break
+            retries += 1
+            self.stats["retries"] += 1
+            self.backend.apply_async()
+        return acked[:q], found_all[:q], retries
+
+    def _get_chunk(self, keys):
+        q = keys.shape[0]
+        kp, pending = self._pad(keys)
+        addr_all = jnp.full(kp.shape, -1, I32)
+        found_all = jnp.zeros_like(pending)
+        acc_all = jnp.zeros(kp.shape, I32)
+        vals_all = None
+        retries = 0
+        while True:
+            addrs, found, acc, vals, routed = self.backend.get(kp, pending)
+            if vals_all is None:
+                vals_all = jnp.zeros_like(vals)
+            newly = pending & routed
+            addr_all = jnp.where(newly, addrs, addr_all)
+            found_all = found_all | (newly & found)
+            acc_all = jnp.where(newly, acc, acc_all)
+            vals_all = jnp.where(newly[:, None], vals, vals_all)
+            pending = pending & ~routed
+            if not bool(pending.any()) or retries >= self.max_retries:
+                break
+            retries += 1
+            self.stats["retries"] += 1
+        return addr_all[:q], found_all[:q], acc_all[:q], vals_all[:q]
+
+    def _note_mutations(self, n: int):
+        if not self.apply_every_n_ops:
+            return
+        self._mutations_since_apply += n
+        if self._mutations_since_apply >= self.apply_every_n_ops:
+            self._mutations_since_apply = 0
+            self.apply()

@@ -5,10 +5,12 @@ if "XLA_FLAGS" not in os.environ:
 8-device host mesh (spawned as a subprocess by tests/test_kvstore_dist.py
 so the main pytest process keeps its single-device view).
 
-Checks: routed PUT/GET roundtrip, value payload integrity, SCAN after
+Checks: routed PUT/GET roundtrip, value payload integrity, distributed
+DELETE round-trip (PUT -> DELETE -> GET miss -> SCAN excludes), SCAN after
 async-apply drains, degraded GET under primary failure, degraded PUT via
-temporary primary, replication layout (replica logs land on the right
-devices), overflow push-back.
+temporary primary, overflow push-back absorbed by the client's retry loop.
+The raw shard_map ops are exercised first, then the same protocol through
+HiStoreClient/DistributedBackend (the surface everything else uses).
 """
 import sys
 
@@ -18,6 +20,7 @@ import numpy as np
 
 from repro.configs.histore import scaled
 from repro.core import kvstore as kv
+from repro.core.client import DistributedBackend, HiStoreClient
 from repro.core.hashing import key_dtype
 
 
@@ -35,19 +38,28 @@ def main() -> int:
     keys = jnp.asarray(rng.choice(10 ** 6, Q, replace=False) + 1, KD)
     vals = jnp.tile(jnp.arange(Q, dtype=jnp.int32)[:, None],
                     (1, cfg.value_words))
-    zero_addr = jnp.zeros((Q,), jnp.int32)
+    all_valid = jnp.ones((Q,), bool)
 
     # --- PUT roundtrip ----------------------------------------------------
-    store, ok, addrs = ops["put"](store, keys, zero_addr, vals)
+    store, ok, addrs = ops["put"](store, keys, vals, all_valid)
     assert bool(np.asarray(ok).all()), "put ok"
     # --- GET hits with value payloads --------------------------------------
-    addr, found, acc, val = ops["get"](store, keys)
+    addr, found, acc, val, routed = ops["get"](store, keys, all_valid)
+    assert bool(np.asarray(routed).all()), "get routed"
     assert bool(np.asarray(found).all()), "get found"
     np.testing.assert_array_equal(np.asarray(val)[:, 0], np.arange(Q))
     assert int(np.asarray(acc).max()) <= cfg.max_chain, "one-sided accesses"
     # --- GET misses --------------------------------------------------------
-    _, found_m, _, _ = ops["get"](store, keys + 10 ** 7)
+    _, found_m, _, _, _ = ops["get"](store, keys + 10 ** 7, all_valid)
     assert not bool(np.asarray(found_m).any()), "get miss"
+    # --- valid-mask padding lanes mutate nothing ---------------------------
+    half = jnp.arange(Q) < Q // 2
+    pad_keys = jnp.where(half, keys + 3 * 10 ** 7, keys)
+    store, ok_h, _ = ops["put"](store, pad_keys, vals, half)
+    assert bool(np.asarray(ok_h)[: Q // 2].all()), "masked put ok"
+    _, found_h, _, _, _ = ops["get"](store, keys + 3 * 10 ** 7, all_valid)
+    assert not bool(np.asarray(found_h)[Q // 2:].any()), \
+        "invalid lanes must not be written"
     # --- SCAN (drains logs) -------------------------------------------------
     lo = jnp.full((Q,), 0, KD)
     hi = jnp.full((Q,), 10 ** 7, KD)
@@ -57,29 +69,80 @@ def main() -> int:
     np.testing.assert_array_equal(sk, want)
     print("scan ok")
 
+    # --- distributed DELETE round-trip --------------------------------------
+    del_mask = jnp.arange(Q) < G  # drop one key per device's worth
+    store, ok_d, found_d = ops["delete"](store, keys, del_mask)
+    assert bool(np.asarray(ok_d)[:G].all()), "delete acked"
+    assert bool(np.asarray(found_d)[:G].all()), "delete found"
+    _, found_after, _, _, _ = ops["get"](store, keys, all_valid)
+    fa = np.asarray(found_after)
+    assert not fa[:G].any(), "deleted keys must miss"
+    assert fa[G:].all(), "surviving keys must hit"
+    sk2, _, store = ops["scan"](store, lo, hi)
+    deleted = set(int(k) for k in np.asarray(keys[:G]))
+    assert not (set(np.asarray(sk2).tolist()) & deleted), \
+        "scan must exclude deleted keys"
+    print("delete ok")
+
     # --- failure: primary of device 2 down ---------------------------------
     store = kv.fail_server(store, 2)
-    addr2, found2, acc2, _ = ops["get"](store, keys)
+    addr2, found2, acc2, _, _ = ops["get"](store, keys[G:], all_valid[G:])
     assert bool(np.asarray(found2).all()), "degraded get found"
-    # degraded lookups of group 2 keys cost more accesses (sorted+log path)
-    own = np.asarray(kv.owner_group(keys, G))
-    assert int(np.asarray(acc2)[own == 2].min()) > int(
-        np.asarray(acc2)[own != 2].max() and 0), "degraded acc"
+    # degraded lookups of group-2 keys go through the sorted replica + its
+    # pending log: their access count is exactly the directory depth + 1,
+    # strictly above the single-sub-bucket hash read of healthy groups
+    from repro.core import sorted_index as six
+    degraded_cost = six.directory_levels(4096, cfg.fanout) + 1
+    own = np.asarray(kv.owner_group(keys[G:], G))
+    assert int(np.asarray(acc2)[own == 2].min()) == degraded_cost, \
+        "degraded reads must pay the sorted+log path"
+    assert int(np.asarray(acc2)[own != 2].max()) < degraded_cost, \
+        "healthy reads must stay on the one-sided hash path"
     # --- degraded PUT (temporary primary) ----------------------------------
     nk = jnp.asarray(rng.choice(10 ** 6, 64, replace=False) + 2 * 10 ** 7, KD)
     nv = jnp.tile(jnp.arange(64, dtype=jnp.int32)[:, None],
                   (1, cfg.value_words))
-    store, ok3, _ = ops["put"](store, nk, jnp.zeros((64,), jnp.int32), nv)
+    nvalid = jnp.ones((64,), bool)
+    store, ok3, _ = ops["put"](store, nk, nv, nvalid)
     assert bool(np.asarray(ok3).all()), "degraded put ok"
-    addr3, found3, _, _ = ops["get"](store, nk)
+    addr3, found3, _, _, _ = ops["get"](store, nk, nvalid)
     assert bool(np.asarray(found3).all()), "degraded put visible to get"
     # --- scans still complete under failure ---------------------------------
-    sk2, _, store = ops["scan"](store, lo, hi)
-    np.testing.assert_array_equal(np.asarray(sk2), want)
+    sk3, _, store = ops["scan"](store, lo, hi)
+    np.testing.assert_array_equal(np.asarray(sk3), np.asarray(sk2))
     # --- recovery ------------------------------------------------------------
     store = kv.recover_server(store, 2)
-    addr4, found4, acc4, _ = ops["get"](store, keys)
+    addr4, found4, acc4, _, _ = ops["get"](store, keys[G:], all_valid[G:])
     assert bool(np.asarray(found4).all()), "post-recovery get"
+    print("raw ops ok")
+
+    # ------------------------------------------------------------------
+    # The same protocol through the unified client (what callers use)
+    # ------------------------------------------------------------------
+    client = HiStoreClient(
+        DistributedBackend(mesh, cfg, 4096, capacity_q=2, scan_limit=128),
+        batch_quantum=8 * G, max_retries=32)
+    ck = rng.choice(10 ** 6, 300, replace=False) + 4 * 10 ** 7
+    res = client.put(ck, np.arange(300))
+    # capacity_q=2 (2 slots per sender/destination pair) with ~5 requests
+    # per pair forces exchange overflow -> client-side retry rounds
+    assert res.all_ok, "client put all acked under overflow"
+    assert res.retries > 0, "overflow must have engaged the retry loop"
+    g = client.get(ck)
+    assert g.all_found, "client get"
+    np.testing.assert_array_equal(np.asarray(g.values)[:, 0], np.arange(300))
+    d = client.delete(ck[:50])
+    assert bool(d.ok.all()) and bool(d.found.all()), "client delete"
+    g2 = client.get(ck[:50])
+    assert not bool(g2.found.any()), "client get-after-delete miss"
+    s = client.scan(4 * 10 ** 7, 10 ** 8)
+    got = set(np.asarray(s.keys[: int(s.count)]).tolist())
+    assert not (got & set(int(k) for k in ck[:50])), "client scan excludes"
+    client.fail_server(1)
+    g3 = client.get(ck[50:])
+    assert g3.all_found, "client degraded get"
+    client.recover_server(1)
+    print("client ops ok")
 
     print("DIST-SELFTEST-OK")
     return 0

@@ -99,14 +99,23 @@ def _dedupe_last(keys):
     return live
 
 
-def insert(idx: HashIndex, keys, addrs, cfg):
+def insert(idx: HashIndex, keys, addrs, cfg, valid=None):
     """Batched PUT/UPDATE.  Last-wins within the batch; updates in place if
     the key exists, else appends at fill+rank.  Returns (idx, ok [Q])
     where ok=False means the chain overflowed (caller surfaces the error,
-    mirroring the paper's add-bucket RPC)."""
+    mirroring the paper's add-bucket RPC).  ``valid=False`` lanes are
+    ignored entirely (padding lanes of a fixed-shape batch) and report
+    ok=True."""
     nb, cs = idx.sig.shape
     Q = keys.shape[0]
-    live = _dedupe_last(keys)
+    if valid is None:
+        live = _dedupe_last(keys)
+    else:
+        # invalid lanes must not shadow a valid lane holding the same key
+        # in last-wins dedupe: give them unique placeholder keys (< -1,
+        # outside the application key space) before ranking.
+        ph = -(jnp.arange(Q, dtype=keys.dtype) + 2)
+        live = _dedupe_last(jnp.where(valid, keys, ph)) & valid
     sig, fp = sig_fp_of(keys)
     found, slot_flat, _, b, _ = _locate(idx, keys)
 
@@ -143,10 +152,13 @@ def insert(idx: HashIndex, keys, addrs, cfg):
     return new_idx, ok
 
 
-def delete(idx: HashIndex, keys, cfg):
-    """Batched DELETE: tombstone the slot (reclaimed on rebuild)."""
+def delete(idx: HashIndex, keys, cfg, valid=None):
+    """Batched DELETE: tombstone the slot (reclaimed on rebuild).
+    ``valid=False`` lanes (padding) touch nothing and report found=False."""
     nb, cs = idx.sig.shape
     found, slot_flat, _, _, _ = _locate(idx, keys)
+    if valid is not None:
+        found = found & valid
     tgt = jnp.where(found, slot_flat, BIG)
     sig_flat = idx.sig.reshape(-1).at[tgt].set(TOMBSTONE, mode="drop")
     fp_flat = idx.fp.reshape(-1).at[tgt].set(0, mode="drop")

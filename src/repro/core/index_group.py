@@ -72,20 +72,30 @@ def put(g: IndexGroup, keys, addrs, cfg, valid=None,
         valid = jnp.ones((q,), bool)
     ops = jnp.where(valid, OP_PUT, 0).astype(jnp.int8)
     plog, ok_log = lg.append(g.plog, keys, addrs, ops, valid)
+    # the hash update below is synchronous, so primary-log entries are
+    # applied as soon as the batch commits; advancing the prefix keeps the
+    # ring's pending window from ever exhausting (entries are retained for
+    # recovery/replication, which read positions, not the window).
+    plog = plog._replace(applied=plog.tail)
     if backups_alive is None:
-        blogs, _ = jax.vmap(
+        blogs, bok = jax.vmap(
             lambda l: lg.append(l, keys, addrs, ops, valid))(g.blogs)
+        ok_rep = bok.all(axis=0)
     else:
         blogs = g.blogs
+        ok_rep = jnp.ones_like(valid)
         for r, live in enumerate(backups_alive):
             if not live:
                 continue
             one = jax.tree.map(lambda a: a[r], blogs)
-            one, _ = lg.append(one, keys, addrs, ops, valid)
+            one, okr = lg.append(one, keys, addrs, ops, valid)
+            ok_rep = ok_rep & okr
             blogs = jax.tree.map(lambda f, v, r=r: f.at[r].set(v), blogs, one)
-    new_hash, ok_hash = hi.insert(g.hash, keys, addrs, cfg)
-    # a write is complete only if logged everywhere and indexed
-    ok = ok_log & ok_hash & valid
+    new_hash, ok_hash = hi.insert(g.hash, keys, addrs, cfg, valid)
+    # a write is complete only if logged EVERYWHERE and indexed — a full
+    # backup log rejects the ack, so the caller (client) drains and retries
+    # instead of the replica silently missing the entry
+    ok = ok_log & ok_hash & ok_rep & valid
     return g._replace(hash=new_hash, plog=plog, blogs=blogs), ok
 
 
@@ -96,9 +106,11 @@ def delete(g: IndexGroup, keys, cfg, valid=None) -> tuple:
     ops = jnp.where(valid, OP_DEL, 0).astype(jnp.int8)
     addrs = jnp.full((q,), -1, I32)
     plog, ok_log = lg.append(g.plog, keys, addrs, ops, valid)
-    blogs, _ = jax.vmap(lambda l: lg.append(l, keys, addrs, ops, valid))(g.blogs)
-    new_hash, found = hi.delete(g.hash, keys, cfg)
-    return g._replace(hash=new_hash, plog=plog, blogs=blogs), found & ok_log
+    plog = plog._replace(applied=plog.tail)  # hash delete is synchronous
+    blogs, bok = jax.vmap(lambda l: lg.append(l, keys, addrs, ops, valid))(g.blogs)
+    new_hash, found = hi.delete(g.hash, keys, cfg, valid)
+    return (g._replace(hash=new_hash, plog=plog, blogs=blogs),
+            found & ok_log & bok.all(axis=0))
 
 
 # ---------------------------------------------------------------------------
@@ -216,7 +228,6 @@ def recover_primary(g: IndexGroup, cfg) -> IndexGroup:
 
 def recover_backup(g: IndexGroup, which: int, cfg) -> IndexGroup:
     """Rebuild a sorted replica from the primary's hash table."""
-    keys_needed = False
     # the hash index stores (sig, fp, addr) but not the key itself; the
     # paper rebuilds a skiplist by fetching the hash table *and its keys*
     # from the data items.  In the core layer the authoritative key set

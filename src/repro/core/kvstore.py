@@ -16,11 +16,21 @@ RDMA-verb mapping):
   get    — one-sided: route, owner-side gather-only probe, value gather,
            reverse route.  Primary dead -> the query is routed to a backup
            holder, which consults its pending log + sorted replica.
+  delete — route to owner; owner appends a tombstone to its log, pushes it
+           to both backup logs (ppermute), tombstones the hash slot, acks.
+           The tombstone compacts out of the sorted replicas on apply.
   scan   — backup-side: every device drains and range-queries the replicas
            it holds, results are all_gathered and merged.
   apply_async — one batched log->sorted merge round on every backup.
   fail / recover — failure-mask protocol validation (SPMD devices cannot
            actually vanish; DESIGN.md §Fault tolerance).
+
+All mutating ops take a ``valid`` lane mask so the client can pad request
+batches to fixed shapes (DESIGN.md §Client); invalid lanes are routed
+nowhere, consume no exchange capacity, and mutate nothing.  External
+callers should not call these ops directly — go through
+repro.core.client.HiStoreClient, which adds overflow retry, batch padding
+and the async-apply policy.
 """
 from __future__ import annotations
 
@@ -76,16 +86,8 @@ def create(mesh, capacity_per_group: int, cfg, key_dt=None) -> KVStore:
 def store_sharding(mesh):
     from jax.sharding import NamedSharding
 
-    def spec(path, leaf=None):
-        return NamedSharding(mesh, P(AXIS))  # placeholder; refined below
-
     # group axis position differs: hash/plog/dvals shard dim0; bsorted/blog
     # shard dim1; alive replicated.
-    def mk(tree, dim):
-        return jax.tree.map(lambda _: NamedSharding(
-            mesh, P(*([None] * dim + [AXIS]))), tree)
-
-    dummy_h = hix.HashIndex(0, 0, 0, 0)
     return KVStore(
         hash=hix.HashIndex(*[NamedSharding(mesh, P(AXIS))] * 4),
         plog=lg.UpdateLog(*[NamedSharding(mesh, P(AXIS))] * 5),
@@ -136,13 +138,23 @@ def _ex(tree, val):
     return jax.tree.map(lambda a, v: a.at[0].set(v), tree, val)
 
 
-def _put_body(cfg, G, capacity, store: KVStore, keys, addrs_unused, vals):
-    me = jax.lax.axis_index(AXIS)
+def _route_to_owner(store, keys, valid, G, capacity, extra=None):
+    """Shared routing prologue of the mutating ops: invalid (padding) lanes
+    get an out-of-range destination, so they occupy no exchange capacity
+    and arrive nowhere."""
     dest_g = owner_group(keys, G)
     dest = jax.vmap(lambda g: _first_alive_holder(g, store.alive))(dest_g)
-    bufs, slot, ok_route = route_build(
-        dest, {"k": (keys, 0), "v": (vals, 0), "g": (dest_g, -1)},
-        G, capacity)
+    dest = jnp.where(valid, dest, G)
+    payloads = {"k": (keys, 0), "g": (jnp.where(valid, dest_g, -1), -1)}
+    if extra:
+        payloads.update(extra)
+    return route_build(dest, payloads, G, capacity)
+
+
+def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid):
+    me = jax.lax.axis_index(AXIS)
+    bufs, slot, ok_route = _route_to_owner(
+        store, keys, valid, G, capacity, {"v": (vals, 0)})
     recv = exchange(bufs, AXIS)
     rk, rv, rg = recv["k"], recv["v"], recv["g"]
     valid = rg >= 0
@@ -160,39 +172,16 @@ def _put_body(cfg, G, capacity, store: KVStore, keys, addrs_unused, vals):
     ops = jnp.where(valid & am_primary, six.OP_PUT, 0).astype(jnp.int8)
     plog, ok_p = lg.append(_sq(store.plog), rk, addr, ops,
                            valid & am_primary)
-    new_hash, ok_h = hix.insert(_sq(store.hash), jnp.where(
-        valid & am_primary, rk, -1), addr, cfg)
-    # --- replicate the entries to backup logs (ppermute r+1 hops) -------
-    blog = store.blog
-    for r in range(store.blog.tail.shape[0]):
-        pk = replicate_shift(rk, r + 1, AXIS)
-        pa = replicate_shift(addr, r + 1, AXIS)
-        po = replicate_shift(ops, r + 1, AXIS)
-        one = jax.tree.map(lambda a: a[r, 0], store.blog)
-        one, _ = lg.append(one, pk, pa, po, po > 0)
-        blog = jax.tree.map(lambda full, v, r=r: full.at[r, 0].set(v),
-                            blog, one)
-    # degraded-write path: requests routed to me as BACKUP holder (primary
-    # dead).  I act as temporary primary: append to my backup log for that
-    # group and forward to the *other* replica holder (paper §4.3).
-    for r in range(store.blog.tail.shape[0]):
-        mine_as_backup = valid & (rg == (me - r - 1) % G) & (rg != me)
-        opsb = jnp.where(mine_as_backup, six.OP_PUT, 0).astype(jnp.int8)
-        one = jax.tree.map(lambda a: a[r, 0], blog)
-        one, _ = lg.append(one, rk, addr, opsb, mine_as_backup)
-        blog = jax.tree.map(lambda full, v, r=r: full.at[r, 0].set(v),
-                            blog, one)
-    if store.blog.tail.shape[0] >= 2:
-        # forward replica-0 degraded entries one hop to the replica-1 holder
-        ops0 = jnp.where(valid & (rg == (me - 1) % G) & (rg != me),
-                         six.OP_PUT, 0).astype(jnp.int8)
-        fk = replicate_shift(rk, 1, AXIS)
-        fa = replicate_shift(addr, 1, AXIS)
-        fo = replicate_shift(ops0, 1, AXIS)
-        one = jax.tree.map(lambda a: a[1, 0], blog)
-        one, _ = lg.append(one, fk, fa, fo, fo > 0)
-        blog = jax.tree.map(lambda full, v: full.at[1, 0].set(v), blog, one)
-    ok_req = (valid & ((am_primary & ok_p & ok_h) | ~am_primary)).astype(I32)
+    # the hash update is synchronous, so primary-log entries are applied
+    # the moment the batch commits; advancing the prefix keeps the ring's
+    # pending window from exhausting (entries stay on disk for recovery).
+    plog = plog._replace(applied=plog.tail)
+    new_hash, ok_h = hix.insert(_sq(store.hash), rk, addr, cfg,
+                                valid & am_primary)
+    blog, ok_rep = _replicate_logs(store.blog, rk, addr, ops, valid, rg, me,
+                                   G, six.OP_PUT)
+    ok_req = (valid & ok_rep
+              & ((am_primary & ok_p & ok_h) | ~am_primary)).astype(I32)
     back = route_return({"ok": ok_req, "addr": addr}, slot, AXIS)
     new_store = store._replace(
         hash=_ex(store.hash, new_hash), plog=_ex(store.plog, plog),
@@ -201,10 +190,86 @@ def _put_body(cfg, G, capacity, store: KVStore, keys, addrs_unused, vals):
     return new_store, back["ok"].astype(bool) & ok_route, back["addr"]
 
 
-def _get_body(cfg, G, capacity, store: KVStore, keys):
+def _replicate_logs(blog, rk, addr, ops, valid, rg, me, G, opcode):
+    """Push an owner-side batch of log entries to the backup logs.
+    Returns (blog, ok): ok[i] is False when any backup-log append for
+    owner-lane i was rejected (ring full) — ppermuted back to the owner so
+    the ack can carry the push-back instead of silently losing replicas.
+
+    Healthy path: replicate the primary's entries (``ops``) to the r+1-hop
+    backup holders via ppermute.  Degraded path (paper §4.3): requests
+    routed to me as a BACKUP holder (primary dead) — I act as temporary
+    primary, append to my backup log for that group, and forward
+    replica-0 entries one hop to the replica-1 holder."""
+    R = blog.tail.shape[0]
+    ok = jnp.ones(rk.shape, bool)
+    for r in range(R):
+        pk = replicate_shift(rk, r + 1, AXIS)
+        pa = replicate_shift(addr, r + 1, AXIS)
+        po = replicate_shift(ops, r + 1, AXIS)
+        one = jax.tree.map(lambda a: a[r, 0], blog)
+        one, okr = lg.append(one, pk, pa, po, po > 0)
+        ok = ok & replicate_shift(okr, (G - (r + 1)) % G, AXIS)
+        blog = jax.tree.map(lambda full, v, r=r: full.at[r, 0].set(v),
+                            blog, one)
+    for r in range(R):
+        mine_as_backup = valid & (rg == (me - r - 1) % G) & (rg != me)
+        opsb = jnp.where(mine_as_backup, opcode, 0).astype(jnp.int8)
+        one = jax.tree.map(lambda a: a[r, 0], blog)
+        one, okb = lg.append(one, rk, addr, opsb, mine_as_backup)
+        ok = ok & okb
+        blog = jax.tree.map(lambda full, v, r=r: full.at[r, 0].set(v),
+                            blog, one)
+    if R >= 2:
+        ops0 = jnp.where(valid & (rg == (me - 1) % G) & (rg != me),
+                         opcode, 0).astype(jnp.int8)
+        fk = replicate_shift(rk, 1, AXIS)
+        fa = replicate_shift(addr, 1, AXIS)
+        fo = replicate_shift(ops0, 1, AXIS)
+        one = jax.tree.map(lambda a: a[1, 0], blog)
+        one, okf = lg.append(one, fk, fa, fo, fo > 0)
+        ok = ok & replicate_shift(okf, (G - 1) % G, AXIS)
+        blog = jax.tree.map(lambda full, v: full.at[1, 0].set(v), blog, one)
+    return blog, ok
+
+
+def _delete_body(cfg, G, capacity, store: KVStore, keys, valid):
+    """Distributed DELETE: tombstone through primary log -> backup logs ->
+    hash delete, mirroring _put_body minus the data-shard write.  The
+    tombstones compact out of the sorted replicas at apply time; the data
+    slot is reclaimed on rebuild (the paper's data-server GC)."""
+    me = jax.lax.axis_index(AXIS)
+    bufs, slot, ok_route = _route_to_owner(store, keys, valid, G, capacity)
+    recv = exchange(bufs, AXIS)
+    rk, rg = recv["k"], recv["g"]
+    valid = rg >= 0
+    addr = jnp.full(rk.shape, -1, I32)
+    am_primary = rg == me
+    ops = jnp.where(valid & am_primary, six.OP_DEL, 0).astype(jnp.int8)
+    plog, ok_p = lg.append(_sq(store.plog), rk, addr, ops,
+                           valid & am_primary)
+    plog = plog._replace(applied=plog.tail)
+    new_hash, found = hix.delete(_sq(store.hash), rk, cfg,
+                                 valid & am_primary)
+    blog, ok_rep = _replicate_logs(store.blog, rk, addr, ops, valid, rg, me,
+                                   G, six.OP_DEL)
+    ok_req = (valid & ok_rep
+              & ((am_primary & ok_p) | ~am_primary)).astype(I32)
+    # found is only knowable on the primary path; degraded deletes are
+    # acked blindly (the tombstone wins at apply time either way)
+    found_req = jnp.where(am_primary, found, valid).astype(I32)
+    back = route_return({"ok": ok_req, "found": found_req}, slot, AXIS)
+    new_store = store._replace(hash=_ex(store.hash, new_hash),
+                               plog=_ex(store.plog, plog), blog=blog)
+    return (new_store, back["ok"].astype(bool) & ok_route,
+            back["found"].astype(bool))
+
+
+def _get_body(cfg, G, capacity, store: KVStore, keys, valid):
     me = jax.lax.axis_index(AXIS)
     dest_g = owner_group(keys, G)
     dest = jax.vmap(lambda g: _first_alive_holder(g, store.alive))(dest_g)
+    dest = jnp.where(valid, dest, G)   # padding lanes: no capacity consumed
     bufs, slot, ok_route = route_build(
         dest, {"k": (keys, key_inf(keys.dtype))}, G, capacity)
     recv = exchange(bufs, AXIS)
@@ -251,8 +316,10 @@ def _get_body(cfg, G, capacity, store: KVStore, keys):
     # client reads the value from the data server given the address).
     back = route_return({"addr": addr, "found": found.astype(I32),
                          "acc": acc, "val": vals}, slot, AXIS)
+    # ok_route is reported separately from found: an unrouted lane (queue
+    # full) is a push-back the client retries, not a miss
     return (back["addr"], back["found"].astype(bool) & ok_route,
-            back["acc"], back["val"])
+            back["acc"], back["val"], ok_route)
 
 
 def _apply_body(cfg, batch, store: KVStore):
@@ -299,31 +366,52 @@ def _scan_body(cfg, G, limit, store: KVStore, lo, hi):
 # ---------------------------------------------------------------------------
 # Public API (jit + shard_map wrappers)
 # ---------------------------------------------------------------------------
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across JAX versions: jax.shard_map (>= 0.6, check_vma)
+    with a fallback to jax.experimental.shard_map (0.4.x, check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def _smap(mesh, f, in_specs, out_specs):
-    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs,
-                                 check_vma=False))
+    return jax.jit(_shard_map(f, mesh, in_specs, out_specs))
 
 
 @functools.lru_cache(maxsize=32)
 def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
-    """Build the jitted distributed ops for a mesh."""
+    """Build the jitted distributed ops for a mesh.
+
+    put(st, keys, vals, valid)  -> (st, ok, addrs)
+    get(st, keys, valid)        -> (addrs, found, accesses, vals, routed)
+    delete(st, keys, valid)     -> (st, ok, found)
+    apply(st)                   -> st
+    scan(st, lo, hi)            -> (keys, addrs, st)
+    """
     G = mesh.devices.size
     S = _specs()
 
     put = _smap(mesh,
-                lambda st, k, a, v: _put_body(cfg, G, capacity_q, st, k, a, v),
+                lambda st, k, v, m: _put_body(cfg, G, capacity_q, st, k, v, m),
                 (S, P(AXIS), P(AXIS), P(AXIS)),
                 (S, P(AXIS), P(AXIS)))
-    get = _smap(mesh, lambda st, k: _get_body(cfg, G, capacity_q, st, k),
-                (S, P(AXIS)), (P(AXIS), P(AXIS), P(AXIS), P(AXIS)))
+    get = _smap(mesh, lambda st, k, m: _get_body(cfg, G, capacity_q, st, k, m),
+                (S, P(AXIS), P(AXIS)),
+                (P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)))
+    delete = _smap(mesh,
+                   lambda st, k, m: _delete_body(cfg, G, capacity_q, st, k, m),
+                   (S, P(AXIS), P(AXIS)), (S, P(AXIS), P(AXIS)))
     apply_async = _smap(mesh,
                         lambda st: _apply_body(cfg, cfg.async_apply_batch, st),
-                        (S,), (S,))
+                        (S,), S)
     scan = _smap(mesh, lambda st, lo, hi: _scan_body(cfg, G, scan_limit,
                                                      st, lo, hi),
                  (S, P(AXIS), P(AXIS)), (P(), P(), S))
-    return {"put": put, "get": get, "apply": apply_async, "scan": scan}
+    return {"put": put, "get": get, "delete": delete, "apply": apply_async,
+            "scan": scan}
 
 
 def fail_server(store: KVStore, dev: int) -> KVStore:

@@ -1,0 +1,49 @@
+"""Typed result objects of the unified HiStoreClient API (DESIGN.md
+§Client API).
+
+All array leaves are trimmed to the caller's request length Q — the client
+pads batches to fixed shapes internally, and padding lanes never leak out.
+These are NamedTuples, so they are pytrees (jax.block_until_ready and
+jax.tree.map work on them) and remain positionally compatible with the old
+raw tuples: GetResult unpacks as (addrs, found, accesses, ...) exactly like
+the previous ``index_group.get`` return, and ScanResult as (keys, addrs,
+count) like ``sorted_index.range_query``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class PutResult(NamedTuple):
+    ok: jnp.ndarray       # bool [Q]: acknowledged (logged + indexed)
+    addrs: jnp.ndarray    # int32 [Q]: value address assigned by the store
+    retries: int          # overflow-retry rounds this batch needed
+
+    @property
+    def all_ok(self) -> bool:
+        return bool(self.ok.all())
+
+
+class GetResult(NamedTuple):
+    addrs: jnp.ndarray     # int32 [Q]: value address (-1 on miss)
+    found: jnp.ndarray     # bool [Q]
+    accesses: jnp.ndarray  # int32 [Q]: index-side memory reads (Fig. 3)
+    values: jnp.ndarray    # int32 [Q, value_words]: payload (zeros on miss)
+
+    @property
+    def all_found(self) -> bool:
+        return bool(self.found.all())
+
+
+class DeleteResult(NamedTuple):
+    ok: jnp.ndarray       # bool [Q]: tombstone recorded
+    found: jnp.ndarray    # bool [Q]: key existed in the primary index
+    retries: int
+
+
+class ScanResult(NamedTuple):
+    keys: jnp.ndarray     # [limit] ascending; key_inf-padded past ``count``
+    addrs: jnp.ndarray    # int32 [limit]
+    count: jnp.ndarray    # int32 scalar: live entries in [lo, hi]

@@ -27,6 +27,14 @@ import jax.numpy as jnp
 I32 = jnp.int32
 
 
+def axis_size(axis: str) -> int:
+    """Static mesh-axis size: jax.lax.axis_size where available (>= 0.5),
+    else the classic psum-of-1 idiom (constant-folded, still static)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
 def route_build(dest, payloads: dict, n_dev: int, capacity: int):
     """Pack per-query payload rows into a [n_dev * capacity, ...] send
     buffer bucketed by destination.  Returns (buffers, slot, ok) where
@@ -55,7 +63,7 @@ def exchange(bufs: dict, axis: str):
     """all_to_all a dict of [n_dev * c, ...] buffers (forward or reverse)."""
     out = {}
     for name, arr in bufs.items():
-        n_dev = jax.lax.axis_size(axis)
+        n_dev = axis_size(axis)
         c = arr.shape[0] // n_dev
         out[name] = jax.lax.all_to_all(
             arr.reshape((n_dev, c) + arr.shape[1:]), axis,
@@ -77,6 +85,6 @@ def route_return(result_bufs: dict, slot, axis: str):
 def replicate_shift(x, shift: int, axis: str):
     """collective_permute by +shift along the ring: primary d -> backup
     holder d+shift (the paper's primary->backup log push)."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     perm = [(i, (i + shift) % n) for i in range(n)]
     return jax.lax.ppermute(x, axis, perm)

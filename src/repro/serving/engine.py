@@ -32,16 +32,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.histore import HiStoreConfig, scaled
-from repro.core import hash_index as hix
-from repro.core import index_group as ig
+from repro.core.client import HiStoreClient, LocalBackend
 from repro.core.hashing import key_dtype
 from repro.models.transformer import decode_step, init_cache
 
-import jax as _jax
-
 # key space adapts to the canonical key dtype (int32 in x32 mode):
-PAGE_BITS = 20 if _jax.config.jax_enable_x64 else 12
-_PREFIX_MOD = (1 << 40) if _jax.config.jax_enable_x64 else (1 << 30)
+PAGE_BITS = 20 if jax.config.jax_enable_x64 else 12
+_PREFIX_MOD = (1 << 40) if jax.config.jax_enable_x64 else (1 << 30)
 
 
 def page_key(seq_id: int, page_no: int):
@@ -78,9 +75,13 @@ class ServingEngine:
         self.kd = key_dtype()
         self.store_cfg = store_cfg or scaled(log_capacity=1 << 12,
                                              async_apply_batch=256)
-        # page directory: one index group (the serving-node's group)
+        # page directory: the unified client over the serving-node's index
+        # group; values carry the page address, GETs/PUTs/SCANs are padded
+        # to small fixed batches, async applies run every 64 mutations
         self.n_pages = batch_slots * (max_len // page_size) * 2
-        self.directory = ig.create(max(self.n_pages * 4, 1024), self.store_cfg)
+        self.client = HiStoreClient(
+            LocalBackend(max(self.n_pages * 4, 1024), self.store_cfg),
+            batch_quantum=8, apply_every_n_ops=64)
         self.free_pages = list(range(self.n_pages, 0, -1))
         self.cache = init_cache(cfg, batch_slots, max_len)
         self.slots: list[Optional[Request]] = [None] * batch_slots
@@ -92,16 +93,19 @@ class ServingEngine:
                       "prefix_hits": 0, "pages_registered": 0,
                       "pages_freed": 0, "decode_steps": 0}
 
+    @property
+    def directory(self):
+        """The page-directory index group (introspection / tests)."""
+        return self.client.backend.group
+
     # -- request lifecycle -------------------------------------------------
     def submit(self, prompt: list[int], max_new: int = 16) -> int:
         r = Request(self._rid, list(prompt), max_new)
         self._rid += 1
         # prefix reuse probe: GET on the prompt hash
-        pk = jnp.asarray([prefix_key(prompt)], self.kd)
-        _, found, _ = ig.get(self.directory, pk, self.store_cfg,
-                             primary_alive=True)
+        res = self.client.get([prefix_key(prompt)])
         self.stats["index_gets"] += 1
-        if bool(found[0]):
+        if bool(res.found[0]):
             r.prefix_hit = True
             self.stats["prefix_hits"] += 1
         self.queue.append(r)
@@ -116,10 +120,7 @@ class ServingEngine:
                 r.tokens = []
                 self.slots[i] = r
                 # register the prompt-prefix key for future reuse
-                pk = jnp.asarray([prefix_key(r.prompt)], self.kd)
-                self.directory, _ = ig.put(
-                    self.directory, pk,
-                    jnp.asarray([r.slot], jnp.int32), self.store_cfg)
+                self.client.put([prefix_key(r.prompt)], [r.slot])
                 self.stats["index_puts"] += 1
 
     def _register_page(self, r: Request):
@@ -127,30 +128,33 @@ class ServingEngine:
         if not self.free_pages:
             return
         addr = self.free_pages.pop()
-        k = jnp.asarray([page_key(r.rid, page_no)], self.kd)
-        self.directory, ok = ig.put(self.directory, k,
-                                    jnp.asarray([addr], jnp.int32),
-                                    self.store_cfg)
+        self.client.put([page_key(r.rid, page_no)], [addr])
         self.stats["index_puts"] += 1
         self.stats["pages_registered"] += 1
 
     def release(self, r: Request):
         """Reclaim all of a sequence's pages via a sorted-index range scan
-        (the SCAN the hash table cannot do)."""
-        lo = jnp.asarray(page_key(r.rid, 0), self.kd)
-        hi = jnp.asarray(page_key(r.rid, (1 << PAGE_BITS) - 1), self.kd)
-        (ks, addrs, n), self.directory = ig.scan(
-            self.directory, lo, hi, 64, self.store_cfg)
-        self.stats["index_scans"] += 1
-        n = int(n)
-        freed = [int(a) for a in np.asarray(addrs[:n])]
-        self.free_pages.extend(a for a in freed if a > 0)
-        self.stats["pages_freed"] += n
-        keys_del = ks[:n]
-        if n:
-            self.directory, _ = ig.delete(self.directory,
-                                          jnp.asarray(keys_del),
-                                          self.store_cfg)
+        (the SCAN the hash table cannot do).  The scan limit is derived
+        from the page budget of one sequence and the scan repeats until the
+        range drains, so long sequences cannot leak pages."""
+        max_pages = max(self.max_len // self.page_size, 1)
+        lo = page_key(r.rid, 0)
+        hi = page_key(r.rid, max_pages - 1)
+        while True:
+            res = self.client.scan(lo, hi, max_pages)
+            self.stats["index_scans"] += 1
+            n = int(res.count)
+            if n == 0:
+                break
+            keys = res.keys[:n]
+            # the page address travels in the value payload
+            vals = self.client.get(keys)
+            freed = [int(a) for a in np.asarray(vals.values[:n, 0])]
+            self.free_pages.extend(a for a in freed if a > 0)
+            self.stats["pages_freed"] += n
+            self.client.delete(keys)
+            if n < max_pages:
+                break
 
     # -- decode loop ---------------------------------------------------------
     def _batch_inputs(self):
@@ -191,8 +195,6 @@ class ServingEngine:
 
     def run(self, max_steps: int = 10_000):
         steps = 0
-        finished = []
-        active = True
         while (self.queue or any(self.slots)) and steps < max_steps:
             self.step()
             steps += 1

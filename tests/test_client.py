@@ -1,0 +1,163 @@
+"""HiStoreClient tests: typed results, batch padding, overflow retry,
+distributed DELETE round-trip, and local/distributed backend parity on a
+shared op trace (the 8-device battery lives in dist_selftest.py; here the
+distributed backend runs on the single-device mesh of the pytest process).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.histore import scaled
+from repro.core import kvstore as kv
+from repro.core.client import (DistributedBackend, HiStoreClient,
+                               LocalBackend)
+from repro.core.results import GetResult, PutResult, ScanResult
+
+CFG = scaled(log_capacity=1 << 10, async_apply_batch=256)
+
+
+def _mesh():
+    return jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
+
+
+def _local_client(**kw):
+    kw.setdefault("batch_quantum", 32)
+    return HiStoreClient(LocalBackend(4096, CFG), **kw)
+
+
+def _dist_client(capacity_q=64, **kw):
+    kw.setdefault("batch_quantum", 32)
+    return HiStoreClient(
+        DistributedBackend(_mesh(), CFG, 4096, capacity_q=capacity_q,
+                           scan_limit=128), **kw)
+
+
+def _keys(n, seed=0, base=0):
+    return np.random.RandomState(seed).choice(10 ** 6, n,
+                                              replace=False) + 1 + base
+
+
+def test_typed_results_roundtrip_local():
+    c = _local_client()
+    keys = _keys(100)
+    res = c.put(keys, np.arange(100))
+    assert isinstance(res, PutResult)
+    assert res.ok.shape == (100,) and res.all_ok and res.retries == 0
+    g = c.get(keys)
+    assert isinstance(g, GetResult) and g.all_found
+    np.testing.assert_array_equal(np.asarray(g.values)[:, 0], np.arange(100))
+    s = c.scan(0, 10 ** 7, limit=128)
+    assert isinstance(s, ScanResult)
+    assert int(s.count) == 100
+    np.testing.assert_array_equal(np.asarray(s.keys)[:100], np.sort(keys))
+
+
+def test_batches_pad_and_split_without_shape_leak():
+    c = _local_client(batch_quantum=32, max_batch=64)
+    # every odd size below quantum, above quantum, and above max_batch
+    for n, seed in [(1, 1), (7, 2), (33, 3), (150, 4)]:
+        ks = _keys(n, seed=seed, base=seed * 10 ** 6)
+        r = c.put(ks, np.arange(n))
+        assert r.ok.shape == (n,) and r.all_ok
+        g = c.get(ks)
+        assert g.found.shape == (n,) and g.all_found
+        assert g.values.shape[0] == n
+
+
+def test_overflow_retry_distributed_put_get():
+    """Force a tiny exchange capacity: every put must still eventually ack
+    through the client's push-back retry loop, and reads must see them."""
+    c = _dist_client(capacity_q=4, max_retries=64)
+    keys = _keys(96, seed=5)
+    res = c.put(keys, np.arange(96))
+    assert res.all_ok, "all puts must eventually be acknowledged"
+    assert res.retries > 0, "tiny capacity must engage the retry loop"
+    g = c.get(keys)
+    assert g.all_found
+    np.testing.assert_array_equal(np.asarray(g.values)[:, 0], np.arange(96))
+
+
+def test_distributed_delete_roundtrip():
+    """PUT -> DELETE -> GET miss -> SCAN excludes the key."""
+    c = _dist_client()
+    keys = _keys(80, seed=6)
+    assert c.put(keys, np.arange(80)).all_ok
+    d = c.delete(keys[:20])
+    assert bool(d.ok.all()) and bool(d.found.all())
+    g = c.get(keys[:20])
+    assert not bool(g.found.any()), "deleted keys must miss"
+    g2 = c.get(keys[20:])
+    assert g2.all_found, "survivors must still hit"
+    s = c.scan(0, 10 ** 7)
+    got = set(np.asarray(s.keys[: int(s.count)]).tolist())
+    assert got == set(int(k) for k in keys[20:])
+    # delete of a missing key: acked but not found
+    d2 = c.delete(keys[:5])
+    assert bool(d2.ok.all()) and not bool(d2.found.any())
+
+
+def test_local_distributed_parity_on_shared_trace():
+    """Both backends must agree on found-masks, values, delete founds and
+    scan contents for the same op trace."""
+    clients = [_local_client(), _dist_client()]
+    keys = _keys(120, seed=7)
+    probes = np.concatenate([keys[:30], keys[:30] + 10 ** 7])  # hits+misses
+    outs = []
+    for c in clients:
+        trace = {}
+        trace["put_ok"] = np.asarray(c.put(keys, np.arange(120)).ok)
+        g = c.get(probes)
+        trace["found"] = np.asarray(g.found)
+        trace["vals"] = np.asarray(g.values)[:, 0] * trace["found"]
+        d = c.delete(keys[40:60])
+        trace["del_found"] = np.asarray(d.found)
+        g2 = c.get(keys)
+        trace["found2"] = np.asarray(g2.found)
+        s = c.scan(0, 10 ** 7, limit=128)
+        n = int(s.count)
+        trace["scan_n"] = n
+        trace["scan_keys"] = np.sort(np.asarray(s.keys)[:n])
+        outs.append(trace)
+    a, b = outs
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def test_apply_every_n_ops_policy():
+    c = _local_client(apply_every_n_ops=64)
+    for i in range(4):
+        c.put(_keys(40, seed=10 + i, base=i * 10 ** 6), np.arange(40))
+    # 160 mutations at a 64-op cadence -> at least 2 scheduled applies
+    assert c.stats["applies"] >= 2
+    # applies actually drained into the sorted replicas
+    assert c.backend.pending_ops() < 160
+
+
+def test_serving_release_drains_long_sequences():
+    """Regression for the release page-leak: a sequence with more pages
+    than the old hard-coded SCAN limit of 64 must still be fully
+    reclaimed (the limit now derives from max_len // page_size and the
+    scan repeats until the range drains)."""
+    pytest.importorskip("repro.models.transformer")
+    from repro.configs.tiny import tiny_config
+    from repro.models.transformer import init_params
+    from repro.serving.engine import Request, ServingEngine, page_key
+
+    cfg = tiny_config("musicgen-large")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, batch_slots=1, max_len=1024,
+                        page_size=8)
+    budget = eng.max_len // eng.page_size
+    assert budget > 64  # the old hard-coded limit would leak here
+    rid = 123
+    taken = [eng.free_pages.pop() for _ in range(budget)]
+    free_before = len(eng.free_pages)
+    for i, addr in enumerate(taken):
+        eng.client.put([page_key(rid, i)], [addr])
+    r = Request(rid, [1, 2, 3], 4)
+    eng.release(r)
+    assert len(eng.free_pages) == free_before + budget, "pages leaked"
+    # releasing again reclaims nothing (no double-free)
+    eng.release(r)
+    assert len(eng.free_pages) == free_before + budget

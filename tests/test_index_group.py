@@ -3,7 +3,7 @@ degraded reads and recovery (§3.3, §4.3)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.histore import scaled
 from repro.core.hashing import key_dtype

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# One-command verify: tier-1 tests + example smoke runs.
+#   bash tools/ci.sh            # full
+#   bash tools/ci.sh --fast    # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "== smoke: examples/quickstart.py =="
+  python examples/quickstart.py
+  echo "== smoke: examples/histore_cluster.py (8 host devices) =="
+  python examples/histore_cluster.py
+fi
+
+echo "CI OK"
