@@ -1,6 +1,13 @@
 """Fig. 13 + 14 reproduction: recovery time (rebuild hash from sorted /
 sorted from hash) vs data amount, and degraded performance under primary /
-backup failure (normalised to healthy HiStore)."""
+backup failure (normalised to healthy HiStore).
+
+Two modes: the single-group mode times the index-group rebuild primitives;
+the distributed mode (needs >= 3 devices, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m
+benchmarks.run fig13``) times the full kvstore kill/recover protocol —
+wipe-on-fail, hash-from-replica rebuild, replica re-clone — plus degraded
+GET latency through the client."""
 from __future__ import annotations
 
 import jax
@@ -9,6 +16,8 @@ import numpy as np
 
 from benchmarks.common import CFG, KD, timeit, uniform_keys
 from repro.core import index_group as ig
+from repro.core import kvstore as kv
+from repro.core.client import DistributedBackend, HiStoreClient
 
 
 def run(report, batch=4096):
@@ -56,3 +65,38 @@ def run(report, batch=4096):
                normalized=round(t_put / t_put_bf, 3))
         report("fig14_scan_backup_fail", n=n,
                normalized=round(t_scan / t_scan_bf, 3))
+
+    run_distributed(report)
+
+
+def run_distributed(report, n=20_000):
+    """Distributed kill/recover protocol timings (kvstore layer)."""
+    G = len(jax.devices())
+    if G < 3:
+        report("fig13_dist_recovery", skipped=f"needs >=3 devices, have {G}")
+        return
+    from repro.configs.histore import scaled
+    cfg = scaled(log_capacity=1 << 14, async_apply_batch=4096)
+    mesh = jax.make_mesh((G,), (kv.AXIS,))
+    backend = DistributedBackend(mesh, cfg, max(4096, 4 * n // G),
+                                 capacity_q=256)
+    client = HiStoreClient(backend, batch_quantum=64 * G)
+    keys = uniform_keys(n, seed=37, space=10 ** 8)
+    assert client.put(keys, np.arange(n)).all_ok
+    client.drain()
+
+    probe = keys[: 8 * G]
+    t_get, _ = timeit(lambda: client.backend.get(
+        jnp.asarray(probe, KD), jnp.ones((len(probe),), bool)), iters=3)
+    failed = kv.fail_server(backend.store, 1)
+    t_rec, recovered = timeit(
+        lambda: kv.recover_server(failed, 1, cfg), warmup=1, iters=2)
+    assert all(p["agree"] for p in kv.parity_report(recovered, cfg))
+    backend.store = failed
+    t_get_pf, _ = timeit(lambda: client.backend.get(
+        jnp.asarray(probe, KD), jnp.ones((len(probe),), bool)), iters=3)
+    backend.store = recovered
+    report("fig13_dist_recover_server", n=n, devices=G,
+           seconds=round(t_rec, 4))
+    report("fig14_dist_get_primary_fail", n=n, devices=G,
+           normalized=round(t_get / t_get_pf, 3))

@@ -46,10 +46,18 @@ def main():
     print(f"DELETE 8: found={bool(d.found.all())} -> GET misses="
           f"{not bool(g2.found.any())}")
 
-    client.fail_server(3)
+    client.fail_server(3)          # index state wiped; data shard survives
     g3 = client.get(keys[8:])
     print(f"server 3 DOWN -> GET still found={g3.all_found}")
-    client.recover_server(3)
+    w = client.put(keys + 10 ** 7, np.arange(128))
+    rep = np.asarray(w.replicas)
+    print(f"PUT under failure: ok={w.all_ok} "
+          f"replicas min/max={int(rep.min())}/{int(rep.max())} "
+          f"(reduced replication reported honestly)")
+    client.recover_server(3)       # hash rebuilt from replica, clones resync
+    g4 = client.get(keys[8:])
+    print(f"server 3 RECOVERED -> GET found={g4.all_found} "
+          f"parity={all(p['agree'] for p in kv.parity_report(client.backend.store, cfg))}")
     print("cluster example OK")
 
 

@@ -50,15 +50,19 @@ I32 = jnp.int32
 class Backend(Protocol):
     """Fixed-shape batch ops over one store.  All mutating ops take a
     ``valid`` lane mask (padding lanes mutate nothing and consume no
-    routing capacity); ``delete`` returns (acked, found) so the client can
-    retry push-back without re-deleting."""
+    routing capacity).  ``put`` returns (acked, addrs, replicas) and
+    ``delete`` (acked, found, replicas) so the client can retry push-back
+    without re-writing and report replication honestly; ``get`` returns
+    (addrs, found, accesses, vals, routed)."""
 
     batch_multiple: int   # padded batch sizes must divide by this
     value_words: int      # payload width W of values [Q, W]
 
-    def put(self, keys, vals, valid) -> Tuple[jnp.ndarray, jnp.ndarray]: ...
+    def put(self, keys, vals, valid) -> Tuple[
+        jnp.ndarray, jnp.ndarray, jnp.ndarray]: ...
     def get(self, keys, valid) -> tuple: ...
-    def delete(self, keys, valid) -> Tuple[jnp.ndarray, jnp.ndarray]: ...
+    def delete(self, keys, valid) -> Tuple[
+        jnp.ndarray, jnp.ndarray, jnp.ndarray]: ...
     def scan(self, lo, hi, limit: int) -> tuple: ...
     def apply_async(self) -> None: ...
     def drain(self) -> None: ...
@@ -67,14 +71,14 @@ class Backend(Protocol):
 # ---------------------------------------------------------------------------
 # Local backend: one index group + the node's data shard, jitted ops
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnums=(0,))
-def _local_put(cfg, g, dvals, dfill, keys, vals, valid):
+@functools.partial(jax.jit, static_argnums=(0, 7))
+def _local_put(cfg, g, dvals, dfill, keys, vals, valid, backups_alive):
     dcap = dvals.shape[0]
     off = jnp.cumsum(valid.astype(I32)) - 1
     slot = jnp.where(valid, (dfill + off) % dcap, dcap)
     dvals = dvals.at[slot].set(vals, mode="drop")
     addrs = jnp.where(valid, slot, -1).astype(I32)
-    g, ok = ig.put(g, keys, addrs, cfg, valid)
+    g, ok = ig.put(g, keys, addrs, cfg, valid, backups_alive=backups_alive)
     return g, dvals, dfill + valid.astype(I32).sum(), ok, addrs
 
 
@@ -91,9 +95,10 @@ def _local_get(cfg, g, dvals, keys, valid, primary_alive):
             jnp.where(valid, acc, 0), vals, valid)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def _local_delete(cfg, g, keys, valid):
-    g, found = ig.delete(g, keys, cfg, valid)
+@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+def _local_delete(cfg, g, keys, valid, backups_alive, primary_alive):
+    g, found = ig.delete(g, keys, cfg, valid, backups_alive=backups_alive,
+                         primary_alive=primary_alive)
     return g, found & valid
 
 
@@ -111,20 +116,29 @@ class LocalBackend:
         self.dvals = jnp.zeros((capacity, self.value_words), I32)
         self.dfill = jnp.zeros((), I32)
         self.batch_multiple = 1
+        self.max_mutation_batch = cfg.log_capacity
         self._primary_alive = True
+        self._backups_alive = [True] * cfg.n_backups
+        self._pending_bound = 0   # host-side upper bound on log pending
 
     def _ensure_log_room(self, n: int):
         """Backup logs reject appends when their pending window is full;
-        locally we know the fill exactly, so drain up front instead of
-        bouncing the batch back through the retry loop."""
-        if self.pending_ops() + n > self.cfg.log_capacity:
+        the client caps mutation chunks at log_capacity, so draining up
+        front guarantees the whole batch fits (no bounced acks).  The
+        host-side bound avoids a device sync per mutation; it only ever
+        over-estimates, so at worst we drain early."""
+        if self._pending_bound + n > self.cfg.log_capacity:
             self.drain()
 
     def put(self, keys, vals, valid):
-        self._ensure_log_room(int(valid.sum()))
+        n = int(valid.sum())
+        self._ensure_log_room(n)
+        self._pending_bound += n
+        ba = tuple(self._backups_alive)
         self.group, self.dvals, self.dfill, ok, addrs = _local_put(
-            self.cfg, self.group, self.dvals, self.dfill, keys, vals, valid)
-        return ok, addrs
+            self.cfg, self.group, self.dvals, self.dfill, keys, vals, valid,
+            ba)
+        return ok, addrs, ok.astype(I32) * sum(ba)
 
     def get(self, keys, valid):
         hint = True if self._primary_alive else None
@@ -132,20 +146,30 @@ class LocalBackend:
                           hint)
 
     def delete(self, keys, valid):
-        self._ensure_log_room(int(valid.sum()))
-        self.group, found = _local_delete(self.cfg, self.group, keys, valid)
-        # room is guaranteed above, so every valid lane is acked this round
-        return valid, found
+        n = int(valid.sum())
+        self._ensure_log_room(n)
+        self._pending_bound += n
+        ba = tuple(self._backups_alive)
+        hint = True if self._primary_alive else None
+        self.group, found = _local_delete(self.cfg, self.group, keys, valid,
+                                          ba, hint)
+        # room is guaranteed above (chunks capped at log_capacity + the
+        # up-front drain), so every valid lane is acked this round
+        return valid, found, valid.astype(I32) * sum(ba)
 
     def scan(self, lo, hi, limit: int):
         (k, a, n), self.group = ig.scan(self.group, lo, hi, limit, self.cfg)
+        self._pending_bound = 0          # scan drained the logs
         return k, a, n
 
     def apply_async(self):
         self.group = ig.apply_async(self.group, self.cfg)
+        self._pending_bound = max(
+            0, self._pending_bound - self.cfg.async_apply_batch)
 
     def drain(self):
         self.group = ig.drain(self.group, self.cfg)
+        self._pending_bound = 0
 
     def pending_ops(self) -> int:
         return int(lg.pending_count(self.group.blogs).max())
@@ -154,6 +178,8 @@ class LocalBackend:
         self.group = ig.fail(self.group, server)
         if server == 0:
             self._primary_alive = False
+        else:
+            self._backups_alive[server - 1] = False
 
     def recover_server(self, server: int = 0):
         if server == 0:
@@ -161,6 +187,7 @@ class LocalBackend:
             self._primary_alive = True
         else:
             self.group = ig.recover_backup(self.group, server - 1, self.cfg)
+            self._backups_alive[server - 1] = True
 
 
 # ---------------------------------------------------------------------------
@@ -182,29 +209,51 @@ class DistributedBackend:
         self.scan_limit = scan_limit
         self.batch_multiple = self.G
         self.value_words = cfg.value_words
+        self.max_mutation_batch = cfg.log_capacity
+        self._dead: set[int] = set()   # host-side liveness view
+        self._pending_bound = 0        # host-side upper bound, no dev sync
 
     def _ensure_log_room(self, n: int):
-        # global view of the worst backup-log fill: drain up front when a
-        # batch cannot possibly fit, saving retry round-trips (per-lane
-        # overflow is still acked honestly and retried by the client)
-        if self.pending_ops() + n > self.cfg.log_capacity:
+        # drain up front when a batch might not fit the worst backup log
+        # (chunks are capped at log_capacity, so after a drain the whole
+        # batch is guaranteed to land; per-lane exchange overflow is still
+        # acked honestly and retried by the client)
+        if self._pending_bound + n > self.cfg.log_capacity:
             self.drain()
 
     def put(self, keys, vals, valid):
-        self._ensure_log_room(int(valid.sum()))
-        self.store, ok, addrs = self.ops["put"](self.store, keys, vals,
-                                                valid)
-        return ok, addrs
+        n = int(valid.sum())
+        self._ensure_log_room(n)
+        self._pending_bound += n
+        self.store, ok, addrs, nrep = self.ops["put"](self.store, keys,
+                                                      vals, valid)
+        return ok, addrs, nrep
 
     def get(self, keys, valid):
-        addrs, found, acc, vals, routed = self.ops["get"](self.store, keys,
-                                                          valid)
-        return addrs, found & valid, acc, vals, routed & valid
+        addrs, found, acc, vals, routed, val_ok = self.ops["get"](
+            self.store, keys, valid)
+        found = found & valid
+        # second hop (paper: the client reads the value from the data
+        # server given the address): values written on another shard
+        # during a degraded write are fetched by address; a fetch-overflow
+        # lane re-enters the client's retry loop as un-routed
+        need = found & ~val_ok
+        if bool(need.any()):
+            fvals, fok = self.ops["fetch"](self.store, addrs, need)
+            vals = jnp.where(need[:, None], fvals, vals)
+            routed = routed & (~need | fok)
+        return addrs, found, acc, vals, routed & valid
 
     def delete(self, keys, valid):
-        self._ensure_log_room(int(valid.sum()))
-        self.store, ok, found = self.ops["delete"](self.store, keys, valid)
-        return ok, found & valid
+        n = int(valid.sum())
+        self._ensure_log_room(n)
+        self._pending_bound += n
+        # healthy cluster -> probe-free variant (all requests land on true
+        # primaries); any masked-dead server -> the degraded variant that
+        # answers found at temporary primaries via the replica probe
+        op = self.ops["delete_degraded" if self._dead else "delete"]
+        self.store, ok, found, nrep = op(self.store, keys, valid)
+        return ok, found & valid, nrep
 
     def scan(self, lo, hi, limit: int):
         kd = key_dtype()
@@ -221,23 +270,31 @@ class DistributedBackend:
                                   scan_limit=limit)["scan"]
         k, a, self.store = scan_op(self.store, loa, hia)
         n = (k != key_inf(k.dtype)).sum().astype(I32)
+        self._pending_bound = 0          # scan drained the logs
         return k, a, n
 
     def apply_async(self):
         self.store = self.ops["apply"](self.store)
+        self._pending_bound = max(
+            0, self._pending_bound - self.cfg.async_apply_batch)
 
     def drain(self):
         while self.pending_ops() > 0:
             self.apply_async()
+        self._pending_bound = 0
 
     def pending_ops(self) -> int:
         return int(jnp.max(self.store.blog.tail - self.store.blog.applied))
 
     def fail_server(self, server: int):
-        self.store = kv.fail_server(self.store, server)
+        # wiping needs a surviving copy to exist; a 1-device mesh folds
+        # every replica onto the failing device, so only mask there
+        self.store = kv.fail_server(self.store, server, wipe=self.G > 1)
+        self._dead.add(server)
 
     def recover_server(self, server: int):
-        self.store = kv.recover_server(self.store, server)
+        self.store = kv.recover_server(self.store, server, self.cfg)
+        self._dead.discard(server)
 
 
 # ---------------------------------------------------------------------------
@@ -260,6 +317,13 @@ class HiStoreClient:
         self.batch_quantum = -(-q0 // m) * m
         self.max_batch = (-(-max(max_batch, self.batch_quantum)
                             // self.batch_quantum) * self.batch_quantum)
+        # mutation chunks must fit the backup-log ring after a drain, or
+        # the backends' room guarantee (and the acks) would be a lie
+        cap = getattr(backend, "max_mutation_batch", None)
+        if cap:
+            cap = max(self.batch_quantum,
+                      cap // self.batch_quantum * self.batch_quantum)
+            self.max_batch = min(self.max_batch, cap)
         self.max_retries = max_retries
         self.apply_every_n_ops = apply_every_n_ops
         self._mutations_since_apply = 0
@@ -271,19 +335,21 @@ class HiStoreClient:
         keys = self._as_keys(keys)
         q = keys.shape[0]
         if q == 0:
-            return PutResult(jnp.zeros((0,), bool), jnp.zeros((0,), I32), 0)
+            return PutResult(jnp.zeros((0,), bool), jnp.zeros((0,), I32), 0,
+                             jnp.zeros((0,), I32))
         vals = self._as_values(values, q)
-        oks, addrs, retries = [], [], 0
+        oks, addrs, reps, retries = [], [], [], 0
         for s in range(0, q, self.max_batch):
-            o, a, r = self._put_chunk(keys[s:s + self.max_batch],
-                                      vals[s:s + self.max_batch])
+            o, a, rep, r = self._put_chunk(keys[s:s + self.max_batch],
+                                           vals[s:s + self.max_batch])
             oks.append(o)
             addrs.append(a)
+            reps.append(rep)
             retries = max(retries, r)
         self.stats["puts"] += q
         self._note_mutations(q)
         return PutResult(jnp.concatenate(oks), jnp.concatenate(addrs),
-                         retries)
+                         retries, jnp.concatenate(reps))
 
     def get(self, keys) -> GetResult:
         keys = self._as_keys(keys)
@@ -291,7 +357,8 @@ class HiStoreClient:
         if q == 0:
             W = getattr(self.backend, "value_words", 1)
             return GetResult(jnp.zeros((0,), I32), jnp.zeros((0,), bool),
-                             jnp.zeros((0,), I32), jnp.zeros((0, W), I32))
+                             jnp.zeros((0,), I32), jnp.zeros((0, W), I32),
+                             jnp.zeros((0,), bool))
         outs = [self._get_chunk(keys[s:s + self.max_batch])
                 for s in range(0, q, self.max_batch)]
         self.stats["gets"] += q
@@ -302,17 +369,19 @@ class HiStoreClient:
         q = keys.shape[0]
         if q == 0:
             return DeleteResult(jnp.zeros((0,), bool),
-                                jnp.zeros((0,), bool), 0)
-        oks, founds, retries = [], [], 0
+                                jnp.zeros((0,), bool), 0,
+                                jnp.zeros((0,), I32))
+        oks, founds, reps, retries = [], [], [], 0
         for s in range(0, q, self.max_batch):
-            o, f, r = self._delete_chunk(keys[s:s + self.max_batch])
+            o, f, rep, r = self._delete_chunk(keys[s:s + self.max_batch])
             oks.append(o)
             founds.append(f)
+            reps.append(rep)
             retries = max(retries, r)
         self.stats["deletes"] += q
         self._note_mutations(q)
         return DeleteResult(jnp.concatenate(oks), jnp.concatenate(founds),
-                            retries)
+                            retries, jnp.concatenate(reps))
 
     def scan(self, lo, hi, limit: Optional[int] = None) -> ScanResult:
         kd = key_dtype()
@@ -381,12 +450,14 @@ class HiStoreClient:
                        ).at[:q].set(vals)
         ok_all = jnp.zeros_like(pending)
         addr_all = jnp.full(kp.shape, -1, I32)
+        rep_all = jnp.zeros(kp.shape, I32)
         retries = 0
         while True:
-            ok, addrs = self.backend.put(kp, vp, pending)
+            ok, addrs, nrep = self.backend.put(kp, vp, pending)
             newly = pending & ok
             ok_all = ok_all | newly
             addr_all = jnp.where(newly, addrs, addr_all)
+            rep_all = jnp.where(newly, nrep, rep_all)
             pending = pending & ~ok
             if not bool(pending.any()) or retries >= self.max_retries:
                 break
@@ -394,26 +465,28 @@ class HiStoreClient:
             self.stats["retries"] += 1
             # push-back: make room (log->sorted merges) before resending
             self.backend.apply_async()
-        return ok_all[:q], addr_all[:q], retries
+        return ok_all[:q], addr_all[:q], rep_all[:q], retries
 
     def _delete_chunk(self, keys):
         q = keys.shape[0]
         kp, pending = self._pad(keys)
         acked = jnp.zeros_like(pending)
         found_all = jnp.zeros_like(pending)
+        rep_all = jnp.zeros(kp.shape, I32)
         retries = 0
         while True:
-            ack, found = self.backend.delete(kp, pending)
+            ack, found, nrep = self.backend.delete(kp, pending)
             newly = pending & ack
             acked = acked | newly
             found_all = found_all | (newly & found)
+            rep_all = jnp.where(newly, nrep, rep_all)
             pending = pending & ~ack
             if not bool(pending.any()) or retries >= self.max_retries:
                 break
             retries += 1
             self.stats["retries"] += 1
             self.backend.apply_async()
-        return acked[:q], found_all[:q], retries
+        return acked[:q], found_all[:q], rep_all[:q], retries
 
     def _get_chunk(self, keys):
         q = keys.shape[0]
@@ -437,7 +510,10 @@ class HiStoreClient:
                 break
             retries += 1
             self.stats["retries"] += 1
-        return addr_all[:q], found_all[:q], acc_all[:q], vals_all[:q]
+        # lanes still pending exhausted the retry budget: reported as
+        # un-routed so push-back is distinguishable from a genuine miss
+        return (addr_all[:q], found_all[:q], acc_all[:q], vals_all[:q],
+                (~pending)[:q])
 
     def _note_mutations(self, n: int):
         if not self.apply_every_n_ops:

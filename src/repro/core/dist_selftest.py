@@ -41,23 +41,26 @@ def main() -> int:
     all_valid = jnp.ones((Q,), bool)
 
     # --- PUT roundtrip ----------------------------------------------------
-    store, ok, addrs = ops["put"](store, keys, vals, all_valid)
+    store, ok, addrs, nrep = ops["put"](store, keys, vals, all_valid)
     assert bool(np.asarray(ok).all()), "put ok"
+    assert bool((np.asarray(nrep) == cfg.n_backups).all()), \
+        "healthy puts must reach every replica log"
     # --- GET hits with value payloads --------------------------------------
-    addr, found, acc, val, routed = ops["get"](store, keys, all_valid)
+    addr, found, acc, val, routed, vok = ops["get"](store, keys, all_valid)
     assert bool(np.asarray(routed).all()), "get routed"
     assert bool(np.asarray(found).all()), "get found"
+    assert bool(np.asarray(vok).all()), "healthy values are owner-local"
     np.testing.assert_array_equal(np.asarray(val)[:, 0], np.arange(Q))
     assert int(np.asarray(acc).max()) <= cfg.max_chain, "one-sided accesses"
     # --- GET misses --------------------------------------------------------
-    _, found_m, _, _, _ = ops["get"](store, keys + 10 ** 7, all_valid)
+    _, found_m, _, _, _, _ = ops["get"](store, keys + 10 ** 7, all_valid)
     assert not bool(np.asarray(found_m).any()), "get miss"
     # --- valid-mask padding lanes mutate nothing ---------------------------
     half = jnp.arange(Q) < Q // 2
     pad_keys = jnp.where(half, keys + 3 * 10 ** 7, keys)
-    store, ok_h, _ = ops["put"](store, pad_keys, vals, half)
+    store, ok_h, _, _ = ops["put"](store, pad_keys, vals, half)
     assert bool(np.asarray(ok_h)[: Q // 2].all()), "masked put ok"
-    _, found_h, _, _, _ = ops["get"](store, keys + 3 * 10 ** 7, all_valid)
+    _, found_h, _, _, _, _ = ops["get"](store, keys + 3 * 10 ** 7, all_valid)
     assert not bool(np.asarray(found_h)[Q // 2:].any()), \
         "invalid lanes must not be written"
     # --- SCAN (drains logs) -------------------------------------------------
@@ -71,10 +74,10 @@ def main() -> int:
 
     # --- distributed DELETE round-trip --------------------------------------
     del_mask = jnp.arange(Q) < G  # drop one key per device's worth
-    store, ok_d, found_d = ops["delete"](store, keys, del_mask)
+    store, ok_d, found_d, _ = ops["delete"](store, keys, del_mask)
     assert bool(np.asarray(ok_d)[:G].all()), "delete acked"
     assert bool(np.asarray(found_d)[:G].all()), "delete found"
-    _, found_after, _, _, _ = ops["get"](store, keys, all_valid)
+    _, found_after, _, _, _, _ = ops["get"](store, keys, all_valid)
     fa = np.asarray(found_after)
     assert not fa[:G].any(), "deleted keys must miss"
     assert fa[G:].all(), "surviving keys must hit"
@@ -84,9 +87,11 @@ def main() -> int:
         "scan must exclude deleted keys"
     print("delete ok")
 
-    # --- failure: primary of device 2 down ---------------------------------
+    # --- failure: server 2 down (index state WIPED — must rebuild) ---------
     store = kv.fail_server(store, 2)
-    addr2, found2, acc2, _, _ = ops["get"](store, keys[G:], all_valid[G:])
+    assert int(store.hash.fill[2].sum()) == 0, "dead hash must be wiped"
+    addr2, found2, acc2, _, _, _ = ops["get"](store, keys[G:],
+                                              all_valid[G:])
     assert bool(np.asarray(found2).all()), "degraded get found"
     # degraded lookups of group-2 keys go through the sorted replica + its
     # pending log: their access count is exactly the directory depth + 1,
@@ -103,17 +108,32 @@ def main() -> int:
     nv = jnp.tile(jnp.arange(64, dtype=jnp.int32)[:, None],
                   (1, cfg.value_words))
     nvalid = jnp.ones((64,), bool)
-    store, ok3, _ = ops["put"](store, nk, nv, nvalid)
+    store, ok3, _, nrep3 = ops["put"](store, nk, nv, nvalid)
     assert bool(np.asarray(ok3).all()), "degraded put ok"
-    addr3, found3, _, _, _ = ops["get"](store, nk, nvalid)
+    # groups whose replica holder (or temporary primary chain) includes the
+    # dead device report honestly-reduced replication
+    own3 = np.asarray(kv.owner_group(nk, G))
+    nrep3 = np.asarray(nrep3)
+    hit = np.isin(own3, [0, 1])   # dev 2 holds replica 1 of g0, replica 0 of g1
+    assert (nrep3[hit] == cfg.n_backups - 1).all(), \
+        "writes touching the dead holder must report reduced replication"
+    assert (nrep3[own3 == 2] == cfg.n_backups).all(), \
+        "temporary primary still reaches both surviving replica logs"
+    assert (nrep3[~hit & (own3 != 2)] == cfg.n_backups).all(), \
+        "unaffected groups keep full replication"
+    addr3, found3, _, _, _, _ = ops["get"](store, nk, nvalid)
     assert bool(np.asarray(found3).all()), "degraded put visible to get"
     # --- scans still complete under failure ---------------------------------
     sk3, _, store = ops["scan"](store, lo, hi)
     np.testing.assert_array_equal(np.asarray(sk3), np.asarray(sk2))
-    # --- recovery ------------------------------------------------------------
-    store = kv.recover_server(store, 2)
-    addr4, found4, acc4, _, _ = ops["get"](store, keys[G:], all_valid[G:])
+    # --- recovery: rebuild hash from replica, re-clone replicas -------------
+    store = kv.recover_server(store, 2, cfg)
+    assert int(store.hash.fill[2].sum()) > 0, "recovery must rebuild hash"
+    addr4, found4, acc4, _, _, _ = ops["get"](store, keys[G:],
+                                              all_valid[G:])
     assert bool(np.asarray(found4).all()), "post-recovery get"
+    assert all(p["agree"] for p in kv.parity_report(store, cfg)), \
+        "hash/sorted parity must hold after recovery"
     print("raw ops ok")
 
     # ------------------------------------------------------------------
@@ -141,7 +161,27 @@ def main() -> int:
     client.fail_server(1)
     g3 = client.get(ck[50:])
     assert g3.all_found, "client degraded get"
+    np.testing.assert_array_equal(np.asarray(g3.values)[:, 0],
+                                  np.arange(300)[50:],
+                                  "degraded reads fetch values by address")
+    # writes during the failure: reduced replication is reported honestly
+    wk = rng.choice(10 ** 6, 200, replace=False) + 6 * 10 ** 7
+    w = client.put(wk, np.arange(200))
+    assert w.all_ok
+    wown = np.asarray(kv.owner_group(jnp.asarray(wk, KD), G))
+    wrep = np.asarray(w.replicas)
+    whit = np.isin(wown, [7, 0])  # dev 1 holds replica 0 of g0, replica 1 of g7
+    assert (wrep[whit] == cfg.n_backups - 1).all(), "reduced replication"
+    assert (wrep[~whit & (wown != 1)] == cfg.n_backups).all()
     client.recover_server(1)
+    g4 = client.get(np.concatenate([ck[50:], wk]))
+    assert g4.all_found, "post-recovery client get"
+    np.testing.assert_array_equal(
+        np.asarray(g4.values)[:, 0],
+        np.concatenate([np.arange(300)[50:], np.arange(200)]))
+    assert all(p["agree"]
+               for p in kv.parity_report(client.backend.store, cfg)), \
+        "client-side recovery must restore parity"
     print("client ops ok")
 
     print("DIST-SELFTEST-OK")

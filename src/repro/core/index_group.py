@@ -57,6 +57,27 @@ def create(capacity: int, cfg) -> IndexGroup:
 # ---------------------------------------------------------------------------
 # Writes
 # ---------------------------------------------------------------------------
+def _append_live_blogs(blogs, keys, addrs, ops, valid,
+                       backups_alive: tuple | None):
+    """Replicate a batch to the backup logs.  ``backups_alive=None`` means
+    all-alive (vmapped); otherwise dead backups are skipped — the paper's
+    degraded write path — and recovery re-syncs them from a live replica.
+    Returns (blogs, ok_rep)."""
+    if backups_alive is None:
+        blogs, bok = jax.vmap(
+            lambda l: lg.append(l, keys, addrs, ops, valid))(blogs)
+        return blogs, bok.all(axis=0)
+    ok_rep = jnp.ones_like(valid)
+    for r, live in enumerate(backups_alive):
+        if not live:
+            continue
+        one = jax.tree.map(lambda a: a[r], blogs)
+        one, okr = lg.append(one, keys, addrs, ops, valid)
+        ok_rep = ok_rep & okr
+        blogs = jax.tree.map(lambda f, v, r=r: f.at[r].set(v), blogs, one)
+    return blogs, ok_rep
+
+
 def put(g: IndexGroup, keys, addrs, cfg, valid=None,
         backups_alive: tuple | None = None) -> tuple:
     """PUT/UPDATE batch.  Mirrors the paper's ordering: primary log ->
@@ -77,20 +98,8 @@ def put(g: IndexGroup, keys, addrs, cfg, valid=None,
     # ring's pending window from ever exhausting (entries are retained for
     # recovery/replication, which read positions, not the window).
     plog = plog._replace(applied=plog.tail)
-    if backups_alive is None:
-        blogs, bok = jax.vmap(
-            lambda l: lg.append(l, keys, addrs, ops, valid))(g.blogs)
-        ok_rep = bok.all(axis=0)
-    else:
-        blogs = g.blogs
-        ok_rep = jnp.ones_like(valid)
-        for r, live in enumerate(backups_alive):
-            if not live:
-                continue
-            one = jax.tree.map(lambda a: a[r], blogs)
-            one, okr = lg.append(one, keys, addrs, ops, valid)
-            ok_rep = ok_rep & okr
-            blogs = jax.tree.map(lambda f, v, r=r: f.at[r].set(v), blogs, one)
+    blogs, ok_rep = _append_live_blogs(g.blogs, keys, addrs, ops, valid,
+                                       backups_alive)
     new_hash, ok_hash = hi.insert(g.hash, keys, addrs, cfg, valid)
     # a write is complete only if logged EVERYWHERE and indexed — a full
     # backup log rejects the ack, so the caller (client) drains and retries
@@ -99,18 +108,35 @@ def put(g: IndexGroup, keys, addrs, cfg, valid=None,
     return g._replace(hash=new_hash, plog=plog, blogs=blogs), ok
 
 
-def delete(g: IndexGroup, keys, cfg, valid=None) -> tuple:
+def delete(g: IndexGroup, keys, cfg, valid=None,
+           backups_alive: tuple | None = None,
+           primary_alive: bool | None = None) -> tuple:
+    """DELETE batch.  ``primary_alive`` is the same STATIC routing hint as
+    GET's: True compiles the hash-only path; False/None also run the
+    replica probe so ``found`` stays honest while the primary is down."""
     q = keys.shape[0]
     if valid is None:
         valid = jnp.ones((q,), bool)
     ops = jnp.where(valid, OP_DEL, 0).astype(jnp.int8)
     addrs = jnp.full((q,), -1, I32)
+    if primary_alive is not True:
+        # existence check BEFORE this batch's tombstones land: with the
+        # primary down, found comes from the replica + pending log (honest
+        # degraded report, same as the distributed temporary-primary path)
+        _, found_d, _ = replica_probe(g, keys, cfg)
     plog, ok_log = lg.append(g.plog, keys, addrs, ops, valid)
     plog = plog._replace(applied=plog.tail)  # hash delete is synchronous
-    blogs, bok = jax.vmap(lambda l: lg.append(l, keys, addrs, ops, valid))(g.blogs)
-    new_hash, found = hi.delete(g.hash, keys, cfg, valid)
+    blogs, ok_rep = _append_live_blogs(g.blogs, keys, addrs, ops, valid,
+                                       backups_alive)
+    new_hash, found_h = hi.delete(g.hash, keys, cfg, valid)
+    if primary_alive is True:
+        found = found_h
+    elif primary_alive is False:
+        found = found_d & valid
+    else:
+        found = jnp.where(g.alive[0], found_h, found_d & valid)
     return (g._replace(hash=new_hash, plog=plog, blogs=blogs),
-            found & ok_log & bok.all(axis=0))
+            found & ok_log & ok_rep)
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +173,20 @@ def drain(g: IndexGroup, cfg, max_rounds: int | None = None) -> IndexGroup:
 # ---------------------------------------------------------------------------
 # Reads
 # ---------------------------------------------------------------------------
+def replica_probe(g: IndexGroup, keys, cfg):
+    """Degraded lookup via the first live sorted replica: pending log
+    entries are consulted first (newest wins), then the sorted index.
+    Returns (addr, found, n_accesses)."""
+    rep = jnp.argmax(g.alive[1:])                # first live backup
+    srt = jax.tree.map(lambda a: a[rep], g.sorted)
+    blog = jax.tree.map(lambda a: a[rep], g.blogs)
+    addr_s, found_s, acc_s = si.search(srt, keys, cfg.fanout)
+    hit, op, praw = lg.pending_lookup(blog, keys)
+    addr_d = jnp.where(hit, jnp.where(op == OP_PUT, praw, -1), addr_s)
+    found_d = jnp.where(hit, op == OP_PUT, found_s)
+    return addr_d, found_d, acc_s + 1
+
+
 def get(g: IndexGroup, keys, cfg, *, primary_alive: bool | None = None):
     """GET batch.  Primary alive: one-sided hash probe.  Primary down:
     degraded read from the first live sorted replica — pending log entries
@@ -160,35 +200,13 @@ def get(g: IndexGroup, keys, cfg, *, primary_alive: bool | None = None):
     if primary_alive is True:
         return hi.lookup(g.hash, keys, cfg)
     addr_h, found_h, acc_h = hi.lookup(g.hash, keys, cfg)
-
-    # degraded path via replica 0/1 (vectorised; selected by alive mask)
-    rep = jnp.argmax(g.alive[1:])                # first live backup
-    srt = jax.tree.map(lambda a: a[rep], g.sorted)
-    blog = jax.tree.map(lambda a: a[rep], g.blogs)
-    addr_s, found_s, acc_s = si.search(srt, keys, cfg.fanout)
-    # pending log scan (newest wins): entries [applied, tail)
-    cap = blog.keys.shape[0]
-    sl = jnp.arange(cap)
-    seq = blog.applied + sl                      # scan window in order
-    idx = seq % cap
-    pend_valid = seq < blog.tail
-    pk = jnp.where(pend_valid, blog.keys[idx], key_inf(blog.keys.dtype))
-    po = jnp.where(pend_valid, blog.ops[idx], 0)
-    pa = blog.addrs[idx]
-    m = pk[None, :] == keys[:, None]             # [Q, cap]
-    any_m = m.any(axis=1)
-    last = (cap - 1) - jnp.argmax(m[:, ::-1], axis=1)
-    hit_op = jnp.where(any_m, po[last], 0)
-    hit_addr = jnp.where(any_m & (hit_op == OP_PUT), pa[last], -1)
-    addr_d = jnp.where(any_m, hit_addr, addr_s)
-    found_d = jnp.where(any_m, hit_op == OP_PUT, found_s)
-
+    addr_d, found_d, acc_d = replica_probe(g, keys, cfg)
     if primary_alive is False:
-        return addr_d, found_d, acc_s + 1
+        return addr_d, found_d, acc_d
     primary_ok = g.alive[0]
     addr = jnp.where(primary_ok, addr_h, addr_d)
     found = jnp.where(primary_ok, found_h, found_d)
-    acc = jnp.where(primary_ok, acc_h, acc_s + 1)
+    acc = jnp.where(primary_ok, acc_h, acc_d)
     return addr, found, acc
 
 
@@ -205,8 +223,36 @@ def scan(g: IndexGroup, lo, hi_key, limit: int, cfg):
 # ---------------------------------------------------------------------------
 # Failures & recovery (§4.3)
 # ---------------------------------------------------------------------------
-def fail(g: IndexGroup, server: int) -> IndexGroup:
-    return g._replace(alive=g.alive.at[server].set(False))
+def fail(g: IndexGroup, server: int, wipe: bool = True) -> IndexGroup:
+    """Mask a server dead.  ``wipe`` (default) also destroys the index
+    state it held — hash + primary log for server 0, the sorted replica +
+    backup log for server 1+r — so recovery must genuinely rebuild from
+    surviving copies rather than resurrect masked state."""
+    g = g._replace(alive=g.alive.at[server].set(False))
+    if not wipe:
+        return g
+    if server == 0:
+        h, p = g.hash, g.plog
+        return g._replace(
+            hash=hi.HashIndex(sig=jnp.zeros_like(h.sig),
+                              fp=jnp.zeros_like(h.fp),
+                              addr=jnp.full_like(h.addr, -1),
+                              fill=jnp.zeros_like(h.fill)),
+            plog=lg.UpdateLog(keys=jnp.zeros_like(p.keys),
+                              addrs=jnp.full_like(p.addrs, -1),
+                              ops=jnp.zeros_like(p.ops),
+                              tail=jnp.zeros_like(p.tail),
+                              applied=jnp.zeros_like(p.applied)))
+    r = server - 1
+    s, b = g.sorted, g.blogs
+    return g._replace(
+        sorted=si.SortedIndex(
+            keys=s.keys.at[r].set(key_inf(s.keys.dtype)),
+            addrs=s.addrs.at[r].set(-1), size=s.size.at[r].set(0)),
+        blogs=lg.UpdateLog(
+            keys=b.keys.at[r].set(0), addrs=b.addrs.at[r].set(-1),
+            ops=b.ops.at[r].set(0), tail=b.tail.at[r].set(0),
+            applied=b.applied.at[r].set(0)))
 
 
 def recover_primary(g: IndexGroup, cfg) -> IndexGroup:
@@ -216,13 +262,9 @@ def recover_primary(g: IndexGroup, cfg) -> IndexGroup:
     srt = jax.tree.map(lambda a: a[rep], g.sorted)
     keys, addrs, valid = si.items(srt)
     fresh = hi.create(srt.keys.shape[0], cfg)
-    # insert only valid items: invalid keys hash to garbage buckets but are
-    # masked by routing them to an out-of-range bucket via valid gating
-    # placeholders: unique NEGATIVE keys (application keys are >= 0)
-    junk = -(jnp.arange(keys.shape[0], dtype=keys.dtype) + 2)
-    safe_keys = jnp.where(valid, keys, junk)
-    new_hash, _ = hi.insert(fresh, safe_keys, jnp.where(valid, addrs, -1), cfg)
-    new_hash, _ = hi.delete(new_hash, jnp.where(valid, -1, junk), cfg)
+    # the valid mask keeps empty sorted-array slots out of the table
+    # entirely (no appended-then-tombstoned junk eating chain headroom)
+    new_hash, _ = hi.insert(fresh, keys, addrs, cfg, valid)
     return g._replace(hash=new_hash, alive=g.alive.at[0].set(True))
 
 

@@ -11,19 +11,26 @@ Topology (one group per device; cfg.groups_per_device generalises):
 Ops (all shard_map'd over the 1-D "kv" mesh axis; see verbs.py for the
 RDMA-verb mapping):
   put    — route to owner; owner stores the value on its data shard,
-           appends its log, pushes the entries to both backup logs
-           (ppermute), updates the hash table, acks.
+           appends its log, pushes the entries to the LIVE backup logs
+           (ppermute; dead holders are skipped), updates the hash table,
+           acks with the replica count actually written.
   get    — one-sided: route, owner-side gather-only probe, value gather,
            reverse route.  Primary dead -> the query is routed to a backup
-           holder, which consults its pending log + sorted replica.
+           holder, which consults its pending log + sorted replica; values
+           stored on another shard are flagged for a second-hop fetch.
+  fetch  — second-hop value read: route by address to the owning data
+           shard (data servers are a separate failure domain, paper §2).
   delete — route to owner; owner appends a tombstone to its log, pushes it
-           to both backup logs (ppermute), tombstones the hash slot, acks.
+           to the live backup logs (ppermute), tombstones the hash slot,
+           acks (degraded found answered from the replica + pending log).
            The tombstone compacts out of the sorted replicas on apply.
-  scan   — backup-side: every device drains and range-queries the replicas
-           it holds, results are all_gathered and merged.
+  scan   — backup-side: every device fully drains and range-queries the
+           replicas it holds, results are all_gathered and merged.
   apply_async — one batched log->sorted merge round on every backup.
-  fail / recover — failure-mask protocol validation (SPMD devices cannot
-           actually vanish; DESIGN.md §Fault tolerance).
+  fail_server / recover_server / parity_report — host-side failure
+           control plane: fail WIPES the device's index state, recover
+           rebuilds the hash from a drained sorted replica and re-clones
+           lost replicas from survivors (DESIGN.md §Fault tolerance).
 
 All mutating ops take a ``valid`` lane mask so the client can pad request
 batches to fixed shapes (DESIGN.md §Client); invalid lanes are routed
@@ -178,23 +185,32 @@ def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid):
     plog = plog._replace(applied=plog.tail)
     new_hash, ok_h = hix.insert(_sq(store.hash), rk, addr, cfg,
                                 valid & am_primary)
-    blog, ok_rep = _replicate_logs(store.blog, rk, addr, ops, valid, rg, me,
-                                   G, six.OP_PUT)
+    blog, ok_rep, nrep = _replicate_logs(store.blog, store.alive, rk, addr,
+                                         ops, valid, rg, me, G, six.OP_PUT)
     ok_req = (valid & ok_rep
               & ((am_primary & ok_p & ok_h) | ~am_primary)).astype(I32)
-    back = route_return({"ok": ok_req, "addr": addr}, slot, AXIS)
+    back = route_return({"ok": ok_req, "addr": addr, "rep": nrep}, slot,
+                        AXIS)
     new_store = store._replace(
         hash=_ex(store.hash, new_hash), plog=_ex(store.plog, plog),
         blog=blog, dvals=store.dvals.at[0].set(dvals),
         dfill=store.dfill.at[0].set(new_dfill))
-    return new_store, back["ok"].astype(bool) & ok_route, back["addr"]
+    return (new_store, back["ok"].astype(bool) & ok_route, back["addr"],
+            back["rep"])
 
 
-def _replicate_logs(blog, rk, addr, ops, valid, rg, me, G, opcode):
+def _replicate_logs(blog, alive, rk, addr, ops, valid, rg, me, G, opcode):
     """Push an owner-side batch of log entries to the backup logs.
-    Returns (blog, ok): ok[i] is False when any backup-log append for
-    owner-lane i was rejected (ring full) — ppermuted back to the owner so
-    the ack can carry the push-back instead of silently losing replicas.
+    Returns (blog, ok, nrep):
+
+      ok[i]   — False when a backup-log append for owner-lane i was
+                rejected by a LIVE backup (ring full) — ppermuted back to
+                the owner so the ack can carry the push-back instead of
+                silently losing replicas.
+      nrep[i] — how many replica logs actually recorded the entry.  Dead
+                backups are skipped (the paper's observation that PUT
+                speeds up under a backup failure), so nrep < n_backups is
+                the honest report of reduced replication.
 
     Healthy path: replicate the primary's entries (``ops``) to the r+1-hop
     backup holders via ppermute.  Degraded path (paper §4.3): requests
@@ -203,13 +219,18 @@ def _replicate_logs(blog, rk, addr, ops, valid, rg, me, G, opcode):
     replica-0 entries one hop to the replica-1 holder."""
     R = blog.tail.shape[0]
     ok = jnp.ones(rk.shape, bool)
+    nrep = jnp.zeros(rk.shape, I32)
+    alive_me = alive[me]
     for r in range(R):
         pk = replicate_shift(rk, r + 1, AXIS)
         pa = replicate_shift(addr, r + 1, AXIS)
         po = replicate_shift(ops, r + 1, AXIS)
+        should = (po > 0) & alive_me          # dead holders skip the append
         one = jax.tree.map(lambda a: a[r, 0], blog)
-        one, okr = lg.append(one, pk, pa, po, po > 0)
+        one, okr = lg.append(one, pk, pa, po, should)
         ok = ok & replicate_shift(okr, (G - (r + 1)) % G, AXIS)
+        nrep = nrep + replicate_shift(
+            (should & okr).astype(I32), (G - (r + 1)) % G, AXIS)
         blog = jax.tree.map(lambda full, v, r=r: full.at[r, 0].set(v),
                             blog, one)
     for r in range(R):
@@ -218,6 +239,7 @@ def _replicate_logs(blog, rk, addr, ops, valid, rg, me, G, opcode):
         one = jax.tree.map(lambda a: a[r, 0], blog)
         one, okb = lg.append(one, rk, addr, opsb, mine_as_backup)
         ok = ok & okb
+        nrep = nrep + (mine_as_backup & okb).astype(I32)
         blog = jax.tree.map(lambda full, v, r=r: full.at[r, 0].set(v),
                             blog, one)
     if R >= 2:
@@ -226,18 +248,49 @@ def _replicate_logs(blog, rk, addr, ops, valid, rg, me, G, opcode):
         fk = replicate_shift(rk, 1, AXIS)
         fa = replicate_shift(addr, 1, AXIS)
         fo = replicate_shift(ops0, 1, AXIS)
+        fshould = (fo > 0) & alive_me
         one = jax.tree.map(lambda a: a[1, 0], blog)
-        one, okf = lg.append(one, fk, fa, fo, fo > 0)
+        one, okf = lg.append(one, fk, fa, fo, fshould)
         ok = ok & replicate_shift(okf, (G - 1) % G, AXIS)
+        nrep = nrep + replicate_shift(
+            (fshould & okf).astype(I32), (G - 1) % G, AXIS)
         blog = jax.tree.map(lambda full, v: full.at[1, 0].set(v), blog, one)
-    return blog, ok
+    return blog, ok, nrep
 
 
-def _delete_body(cfg, G, capacity, store: KVStore, keys, valid):
+def _backup_probe(cfg, store: KVStore, rk, me, G):
+    """Degraded lookup at a backup holder: for each replica slot I hold,
+    consult its PENDING log first (newest wins), then the sorted replica.
+    Lane i is answered by replica r iff I hold replica r of lane i's owner
+    group.  Returns (addr, found, n_accesses)."""
+    addr_b = jnp.full(rk.shape, -1, I32)
+    found_b = jnp.zeros(rk.shape, bool)
+    acc_b = jnp.zeros(rk.shape, I32)
+    for r in range(store.blog.tail.shape[0]):
+        srt = jax.tree.map(lambda a: a[r, 0], store.bsorted)
+        blog = jax.tree.map(lambda a: a[r, 0], store.blog)
+        a_s, f_s, c_s = six.search(srt, rk, cfg.fanout)
+        hit, op, praw = lg.pending_lookup(blog, rk)
+        a_r = jnp.where(hit, jnp.where(op == six.OP_PUT, praw, -1), a_s)
+        f_r = jnp.where(hit, op == six.OP_PUT, f_s)
+        sel = (me - r - 1) % G == owner_group(rk, G)
+        addr_b = jnp.where(sel, a_r, addr_b)
+        found_b = jnp.where(sel, f_r, found_b)
+        acc_b = jnp.where(sel, c_s + 1, acc_b)
+    return addr_b, found_b, acc_b
+
+
+def _delete_body(cfg, G, capacity, store: KVStore, keys, valid,
+                 degraded: bool):
     """Distributed DELETE: tombstone through primary log -> backup logs ->
     hash delete, mirroring _put_body minus the data-shard write.  The
     tombstones compact out of the sorted replicas at apply time; the data
-    slot is reclaimed on rebuild (the paper's data-server GC)."""
+    slot is reclaimed on rebuild (the paper's data-server GC).
+
+    ``degraded`` is the compile-time analogue of the local layer's static
+    primary_alive hint: with every server alive all requests land on true
+    primaries, so the healthy variant skips the replica probe entirely;
+    the backend picks the variant from its host-side liveness view."""
     me = jax.lax.axis_index(AXIS)
     bufs, slot, ok_route = _route_to_owner(store, keys, valid, G, capacity)
     recv = exchange(bufs, AXIS)
@@ -245,24 +298,30 @@ def _delete_body(cfg, G, capacity, store: KVStore, keys, valid):
     valid = rg >= 0
     addr = jnp.full(rk.shape, -1, I32)
     am_primary = rg == me
+    if degraded:
+        # existence check BEFORE this batch's tombstones land: the
+        # temporary primary consults its replica + pending log, so DELETE
+        # reports found honestly even while the true primary is down
+        _, found_b, _ = _backup_probe(cfg, store, rk, me, G)
+    else:
+        found_b = jnp.zeros(rk.shape, bool)   # no degraded lanes exist
     ops = jnp.where(valid & am_primary, six.OP_DEL, 0).astype(jnp.int8)
     plog, ok_p = lg.append(_sq(store.plog), rk, addr, ops,
                            valid & am_primary)
     plog = plog._replace(applied=plog.tail)
     new_hash, found = hix.delete(_sq(store.hash), rk, cfg,
                                  valid & am_primary)
-    blog, ok_rep = _replicate_logs(store.blog, rk, addr, ops, valid, rg, me,
-                                   G, six.OP_DEL)
+    blog, ok_rep, nrep = _replicate_logs(store.blog, store.alive, rk, addr,
+                                         ops, valid, rg, me, G, six.OP_DEL)
     ok_req = (valid & ok_rep
               & ((am_primary & ok_p) | ~am_primary)).astype(I32)
-    # found is only knowable on the primary path; degraded deletes are
-    # acked blindly (the tombstone wins at apply time either way)
-    found_req = jnp.where(am_primary, found, valid).astype(I32)
-    back = route_return({"ok": ok_req, "found": found_req}, slot, AXIS)
+    found_req = jnp.where(am_primary, found, found_b & valid).astype(I32)
+    back = route_return({"ok": ok_req, "found": found_req, "rep": nrep},
+                        slot, AXIS)
     new_store = store._replace(hash=_ex(store.hash, new_hash),
                                plog=_ex(store.plog, plog), blog=blog)
     return (new_store, back["ok"].astype(bool) & ok_route,
-            back["found"].astype(bool))
+            back["found"].astype(bool), back["rep"])
 
 
 def _get_body(cfg, G, capacity, store: KVStore, keys, valid):
@@ -277,49 +336,49 @@ def _get_body(cfg, G, capacity, store: KVStore, keys, valid):
     # --- primary path: one-sided probe (gathers only) -------------------
     addr_p, found_p, acc_p = hix.lookup(_sq(store.hash), rk, cfg)
     # --- backup path: pending log + sorted replica (per replica slot) ---
-    addr_b = jnp.full_like(addr_p, -1)
-    found_b = jnp.zeros_like(found_p)
-    acc_b = jnp.zeros_like(acc_p)
-    for r in range(store.blog.tail.shape[0]):
-        srt = jax.tree.map(lambda a: a[r, 0], store.bsorted)
-        blog = jax.tree.map(lambda a: a[r, 0], store.blog)
-        a_s, f_s, c_s = six.search(srt, rk, cfg.fanout)
-        cap_l = blog.keys.shape[0]
-        seq = blog.applied + jnp.arange(cap_l)
-        idx = seq % cap_l
-        pv = seq < blog.tail
-        pk = jnp.where(pv, blog.keys[idx], key_inf(blog.keys.dtype))
-        m = pk[None, :] == rk[:, None]
-        any_m = m.any(axis=1)
-        last = (cap_l - 1) - jnp.argmax(m[:, ::-1], axis=1)
-        hit_op = jnp.where(any_m, blog.ops[idx][last], 0)
-        hit_addr = jnp.where(any_m & (hit_op == six.OP_PUT),
-                             blog.addrs[idx][last], -1)
-        a_r = jnp.where(any_m, hit_addr, a_s)
-        f_r = jnp.where(any_m, hit_op == six.OP_PUT, f_s)
-        sel = (me - r - 1) % G == owner_group(rk, G)
-        addr_b = jnp.where(sel & ~(found_b > 0), a_r, addr_b)
-        found_b = jnp.where(sel, f_r, found_b)
-        acc_b = jnp.where(sel, c_s + 1, acc_b)
+    addr_b, found_b, acc_b = _backup_probe(cfg, store, rk, me, G)
     am_primary = owner_group(rk, G) == me
     addr = jnp.where(am_primary, addr_p, addr_b)
     found = jnp.where(am_primary, found_p, found_b)
     acc = jnp.where(am_primary, acc_p, acc_b)
     # --- value gather: one-sided read from the LOCAL data shard ---------
     dcap = store.dvals.shape[1]
-    local_slot = jnp.where(found & (addr // dcap == me), addr % dcap, dcap)
+    val_ok = found & (addr // dcap == me)
+    local_slot = jnp.where(val_ok, addr % dcap, dcap)
     vals = jnp.concatenate(
         [store.dvals[0], jnp.zeros((1,) + store.dvals.shape[2:], I32)]
     )[jnp.clip(local_slot, 0, dcap)]
-    # remote addr (value written on a different shard during degraded
-    # writes): fetch skipped — flagged for a second-hop read (paper: the
-    # client reads the value from the data server given the address).
+    # remote addr (value written on a different shard during a degraded
+    # write): flagged val_ok=False for a second-hop _fetch_body read
+    # (paper: the client reads the value from the data server given the
+    # address).
     back = route_return({"addr": addr, "found": found.astype(I32),
-                         "acc": acc, "val": vals}, slot, AXIS)
+                         "acc": acc, "val": vals,
+                         "vok": val_ok.astype(I32)}, slot, AXIS)
     # ok_route is reported separately from found: an unrouted lane (queue
     # full) is a push-back the client retries, not a miss
     return (back["addr"], back["found"].astype(bool) & ok_route,
-            back["acc"], back["val"], ok_route)
+            back["acc"], back["val"], ok_route,
+            back["vok"].astype(bool))
+
+
+def _fetch_body(G, capacity, store: KVStore, addrs, valid):
+    """Second-hop value read: route each request to the data shard that
+    owns its address (addr // dcap) and gather the value — the paper's
+    client-side one-sided READ from the data server.  The data servers are
+    a separate failure domain from the index servers (paper §2), so a
+    fetch is answered even when the device's INDEX state is masked dead."""
+    dcap = store.dvals.shape[1]
+    dest = jnp.where(valid & (addrs >= 0), addrs // dcap, G)
+    bufs, slot, ok_route = route_build(dest, {"a": (addrs, -1)}, G, capacity)
+    recv = exchange(bufs, AXIS)
+    ra = recv["a"]
+    lslot = jnp.where(ra >= 0, ra % dcap, dcap)
+    vals = jnp.concatenate(
+        [store.dvals[0], jnp.zeros((1,) + store.dvals.shape[2:], I32)]
+    )[jnp.clip(lslot, 0, dcap)]
+    back = route_return({"val": vals}, slot, AXIS)
+    return back["val"], ok_route
 
 
 def _apply_body(cfg, batch, store: KVStore):
@@ -338,10 +397,21 @@ def _apply_body(cfg, batch, store: KVStore):
 
 def _scan_body(cfg, G, limit, store: KVStore, lo, hi):
     me = jax.lax.axis_index(AXIS)
-    # drain my replicas, then range-query the ones I should serve
-    st = store
-    for _ in range(4):
-        st = _apply_body(cfg, cfg.async_apply_batch, st)
+    # drain my replicas, then range-query the ones I should serve.  The
+    # ring bounds pending entries by log_capacity, so the round bound
+    # guarantees a COMPLETE drain (SCAN serializability); the while_loop
+    # exits as soon as this device's logs are empty, so a mostly-drained
+    # store pays one merge round, not log_capacity/batch of them.  (No
+    # collectives in the body, so per-device trip counts are safe.)
+    rounds = max(1, -(-cfg.log_capacity // cfg.async_apply_batch))
+
+    def _pending(st):
+        return jnp.max(st.blog.tail - st.blog.applied)
+
+    st, _ = jax.lax.while_loop(
+        lambda c: (c[1] < rounds) & (_pending(c[0]) > 0),
+        lambda c: (_apply_body(cfg, cfg.async_apply_batch, c[0]), c[1] + 1),
+        (store, jnp.int32(0)))
     outs_k, outs_a = [], []
     for r in range(store.blog.tail.shape[0]):
         srt = jax.tree.map(lambda a: a[r, 0], st.bsorted)
@@ -366,28 +436,23 @@ def _scan_body(cfg, G, limit, store: KVStore, lo, hi):
 # ---------------------------------------------------------------------------
 # Public API (jit + shard_map wrappers)
 # ---------------------------------------------------------------------------
-def _shard_map(f, mesh, in_specs, out_specs):
-    """shard_map across JAX versions: jax.shard_map (>= 0.6, check_vma)
-    with a fallback to jax.experimental.shard_map (0.4.x, check_rep)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map as _sm
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False)
-
-
 def _smap(mesh, f, in_specs, out_specs):
-    return jax.jit(_shard_map(f, mesh, in_specs, out_specs))
+    from repro.sharding.smap import shard_map
+    return jax.jit(shard_map(f, mesh, in_specs, out_specs))
 
 
 @functools.lru_cache(maxsize=32)
 def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
     """Build the jitted distributed ops for a mesh.
 
-    put(st, keys, vals, valid)  -> (st, ok, addrs)
-    get(st, keys, valid)        -> (addrs, found, accesses, vals, routed)
-    delete(st, keys, valid)     -> (st, ok, found)
+    put(st, keys, vals, valid)  -> (st, ok, addrs, nrep)
+    get(st, keys, valid)        -> (addrs, found, accesses, vals, routed,
+                                    val_ok)
+    fetch(st, addrs, valid)     -> (vals, routed)   second-hop value read
+    delete(st, keys, valid)     -> (st, ok, found, nrep)
+    delete_degraded(...)        -> as delete, plus the replica probe that
+                                   answers found at a temporary primary
+                                   (use while any server is masked dead)
     apply(st)                   -> st
     scan(st, lo, hi)            -> (keys, addrs, st)
     """
@@ -397,26 +462,178 @@ def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
     put = _smap(mesh,
                 lambda st, k, v, m: _put_body(cfg, G, capacity_q, st, k, v, m),
                 (S, P(AXIS), P(AXIS), P(AXIS)),
-                (S, P(AXIS), P(AXIS)))
+                (S, P(AXIS), P(AXIS), P(AXIS)))
     get = _smap(mesh, lambda st, k, m: _get_body(cfg, G, capacity_q, st, k, m),
                 (S, P(AXIS), P(AXIS)),
-                (P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)))
-    delete = _smap(mesh,
-                   lambda st, k, m: _delete_body(cfg, G, capacity_q, st, k, m),
-                   (S, P(AXIS), P(AXIS)), (S, P(AXIS), P(AXIS)))
+                (P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)))
+    fetch = _smap(mesh,
+                  lambda st, a, m: _fetch_body(G, capacity_q, st, a, m),
+                  (S, P(AXIS), P(AXIS)), (P(AXIS), P(AXIS)))
+    delete, delete_degraded = (
+        _smap(mesh,
+              lambda st, k, m, d=d: _delete_body(cfg, G, capacity_q,
+                                                 st, k, m, d),
+              (S, P(AXIS), P(AXIS)),
+              (S, P(AXIS), P(AXIS), P(AXIS)))
+        for d in (False, True))
     apply_async = _smap(mesh,
                         lambda st: _apply_body(cfg, cfg.async_apply_batch, st),
                         (S,), S)
     scan = _smap(mesh, lambda st, lo, hi: _scan_body(cfg, G, scan_limit,
                                                      st, lo, hi),
                  (S, P(AXIS), P(AXIS)), (P(), P(), S))
-    return {"put": put, "get": get, "delete": delete, "apply": apply_async,
+    return {"put": put, "get": get, "fetch": fetch, "delete": delete,
+            "delete_degraded": delete_degraded, "apply": apply_async,
             "scan": scan}
 
 
-def fail_server(store: KVStore, dev: int) -> KVStore:
-    return store._replace(alive=store.alive.at[dev].set(False))
+# ---------------------------------------------------------------------------
+# Failure & recovery protocol (paper §4.3, host-side control plane)
+# ---------------------------------------------------------------------------
+def fail_server(store: KVStore, dev: int, wipe: bool = True) -> KVStore:
+    """Mask device ``dev``'s INDEX server dead.  ``wipe`` (default) also
+    destroys the index state it held — the hash table + primary log of
+    group ``dev`` and every sorted replica + backup log hosted on ``dev``
+    — so recovery MUST rebuild from surviving copies (the honest failure
+    model; the data shard survives: data servers are a separate failure
+    domain, paper §2)."""
+    store = store._replace(alive=store.alive.at[dev].set(False))
+    if not wipe:
+        return store
+    INF = key_inf(store.bsorted.keys.dtype)
+    h, p, s, b = store.hash, store.plog, store.bsorted, store.blog
+    return store._replace(
+        hash=hix.HashIndex(
+            sig=h.sig.at[dev].set(0), fp=h.fp.at[dev].set(0),
+            addr=h.addr.at[dev].set(-1), fill=h.fill.at[dev].set(0)),
+        plog=lg.UpdateLog(
+            keys=p.keys.at[dev].set(0), addrs=p.addrs.at[dev].set(-1),
+            ops=p.ops.at[dev].set(0), tail=p.tail.at[dev].set(0),
+            applied=p.applied.at[dev].set(0)),
+        bsorted=six.SortedIndex(
+            keys=s.keys.at[:, dev].set(INF),
+            addrs=s.addrs.at[:, dev].set(-1),
+            size=s.size.at[:, dev].set(0)),
+        blog=lg.UpdateLog(
+            keys=b.keys.at[:, dev].set(0), addrs=b.addrs.at[:, dev].set(-1),
+            ops=b.ops.at[:, dev].set(0), tail=b.tail.at[:, dev].set(0),
+            applied=b.applied.at[:, dev].set(0)))
 
 
-def recover_server(store: KVStore, dev: int) -> KVStore:
+def _drain_one(srt, blog, cfg):
+    """Eagerly apply ALL pending entries of one (sorted, log) pair."""
+    while int(lg.pending_count(blog)) > 0:
+        keys, addrs, ops, blog = lg.take_pending(blog, cfg.async_apply_batch)
+        srt = six.merge(srt, keys, addrs, ops)
+    return srt, blog
+
+
+def _set_slice(tree, val, idx):
+    return jax.tree.map(lambda f, v: f.at[idx].set(v), tree, val)
+
+
+def recover_server(store: KVStore, dev: int, cfg) -> KVStore:
+    """Recover device ``dev``'s index server from surviving copies
+    (host-side control plane; eager, not shard_map'd):
+
+      1. rebuild group ``dev``'s hash table from the first live sorted
+         replica of that group (drained first), exactly the paper's
+         hash-from-skiplist rebuild;
+      2. re-clone every sorted replica + backup log ``dev`` hosts from the
+         surviving copy of the same group (skiplist-from-replica rebuild);
+      3. mark ``dev`` alive again.
+
+    Requires at least one live holder per lost structure (single-failure
+    tolerance with n_backups=2; simultaneous multi-failure rebuild beyond
+    that is an open item — see ROADMAP)."""
+    import numpy as np
+
+    G = int(store.alive.shape[0])
+    R = int(store.blog.tail.shape[0])
+    alive = np.asarray(store.alive)
+    if bool(alive[dev]):
+        return store
+    if G == 1:
+        # single-server store: nothing was wiped (no surviving copy could
+        # exist), recovery is just the liveness flip
+        return store._replace(alive=store.alive.at[dev].set(True))
+
+    def first_live_holder(group, exclude):
+        for r in range(R):
+            h = (group + r + 1) % G
+            if h != exclude and alive[h]:
+                return r, h
+        return None
+
+    # -- 1. hash-from-sorted-replica rebuild for group ``dev`` ------------
+    src = first_live_holder(dev, dev)
+    if src is None:
+        raise ValueError(
+            f"group {dev}: no live replica holder to rebuild from")
+    r, h = src
+    srt = jax.tree.map(lambda a: a[r, h], store.bsorted)
+    blog = jax.tree.map(lambda a: a[r, h], store.blog)
+    srt, blog = _drain_one(srt, blog, cfg)
+    store = store._replace(bsorted=_set_slice(store.bsorted, srt, (r, h)),
+                           blog=_set_slice(store.blog, blog, (r, h)))
+    keys, addrs, valid = six.items(srt)
+    hs = jax.tree.map(lambda a: a[dev], store.hash)
+    fresh = hix.HashIndex(sig=jnp.zeros_like(hs.sig),
+                          fp=jnp.zeros_like(hs.fp),
+                          addr=jnp.full_like(hs.addr, -1),
+                          fill=jnp.zeros_like(hs.fill))
+    # the valid mask keeps empty sorted-array slots out of the table
+    # entirely (no appended-then-tombstoned junk eating chain headroom)
+    new_hash, _ = hix.insert(fresh, keys, addrs, cfg, valid)
+    store = store._replace(hash=_set_slice(store.hash, new_hash, dev),
+                           plog=_set_slice(
+                               store.plog,
+                               lg.create(store.plog.keys.shape[1],
+                                         store.plog.keys.dtype), dev))
+    # -- 2. sorted-replica re-clone for each group hosted on ``dev`` ------
+    for r2 in range(R):
+        g = (dev - r2 - 1) % G
+        src2 = first_live_holder(g, dev)
+        if src2 is None:
+            continue   # no surviving copy: loss beyond tolerance
+        r3, h3 = src2
+        s_srt = jax.tree.map(lambda a: a[r3, h3], store.bsorted)
+        s_blog = jax.tree.map(lambda a: a[r3, h3], store.blog)
+        s_srt, s_blog = _drain_one(s_srt, s_blog, cfg)
+        store = store._replace(
+            bsorted=_set_slice(_set_slice(store.bsorted, s_srt, (r3, h3)),
+                               s_srt, (r2, dev)),
+            blog=_set_slice(_set_slice(store.blog, s_blog, (r3, h3)),
+                            s_blog, (r2, dev)))
     return store._replace(alive=store.alive.at[dev].set(True))
+
+
+def parity_report(store: KVStore, cfg) -> list:
+    """Hash/sorted parity audit (test/debug helper, eager).  For every
+    group g and replica r: drain a COPY of the replica, then check the
+    replica's live item count equals the hash table's, every replica key
+    is found in the hash, and the addresses agree.  Returns a list of
+    per-(group, replica) dicts with an ``agree`` bool."""
+    import numpy as np
+
+    G = int(store.alive.shape[0])
+    R = int(store.blog.tail.shape[0])
+    out = []
+    for g in range(G):
+        hs = jax.tree.map(lambda a: a[g], store.hash)
+        n_hash = int(hix.n_items(hs))
+        for r in range(R):
+            h = (g + r + 1) % G
+            srt = jax.tree.map(lambda a: a[r, h], store.bsorted)
+            blog = jax.tree.map(lambda a: a[r, h], store.blog)
+            srt, _ = _drain_one(srt, blog, cfg)
+            keys, addrs, valid = six.items(srt)
+            n_sorted = int(valid.sum())
+            a_h, f_h, _ = hix.lookup(hs, keys, cfg)
+            found_ok = bool(np.asarray(f_h | ~valid).all())
+            addr_ok = bool(np.asarray((a_h == addrs) | ~valid).all())
+            out.append({"group": g, "replica": r, "holder": h,
+                        "n_hash": n_hash, "n_sorted": n_sorted,
+                        "agree": (n_hash == n_sorted) and found_ok
+                        and addr_ok})
+    return out

@@ -13,7 +13,7 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from repro.core.hashing import key_dtype
+from repro.core.hashing import key_dtype, key_inf
 
 I32 = jnp.int32
 
@@ -59,6 +59,25 @@ def append(log: UpdateLog, keys, addrs, ops, valid=None) -> tuple:
 
 def pending_count(log: UpdateLog):
     return log.tail - log.applied
+
+
+def pending_lookup(log: UpdateLog, keys):
+    """Newest-wins lookup over the pending window [applied, tail) — the
+    degraded-read primitive (a backup holder consults its log before the
+    sorted replica).  Returns (hit [Q] bool, op [Q], addr [Q]): op/addr
+    are the LAST pending entry for each hit key; the caller interprets op
+    (PUT -> addr wins, DEL -> deleted)."""
+    cap = log.keys.shape[0]
+    seq = log.applied + jnp.arange(cap)          # window in append order
+    idx = seq % cap
+    pv = seq < log.tail
+    pk = jnp.where(pv, log.keys[idx], key_inf(log.keys.dtype))
+    m = pk[None, :] == keys[:, None]             # [Q, cap]
+    hit = m.any(axis=1)
+    last = (cap - 1) - jnp.argmax(m[:, ::-1], axis=1)
+    op = jnp.where(hit, log.ops[idx][last], 0)
+    addr = log.addrs[idx][last]
+    return hit, op, addr
 
 
 def take_pending(log: UpdateLog, batch: int):

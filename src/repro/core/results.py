@@ -11,7 +11,7 @@ count) like ``sorted_index.range_query``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
@@ -20,6 +20,9 @@ class PutResult(NamedTuple):
     ok: jnp.ndarray       # bool [Q]: acknowledged (logged + indexed)
     addrs: jnp.ndarray    # int32 [Q]: value address assigned by the store
     retries: int          # overflow-retry rounds this batch needed
+    replicas: Optional[jnp.ndarray] = None
+    # int32 [Q]: replica logs that recorded the entry; < n_backups is the
+    # honest report of reduced replication under a backup failure (§4.3)
 
     @property
     def all_ok(self) -> bool:
@@ -31,6 +34,9 @@ class GetResult(NamedTuple):
     found: jnp.ndarray     # bool [Q]
     accesses: jnp.ndarray  # int32 [Q]: index-side memory reads (Fig. 3)
     values: jnp.ndarray    # int32 [Q, value_words]: payload (zeros on miss)
+    routed: Optional[jnp.ndarray] = None
+    # bool [Q]: the request reached its server within max_retries; a
+    # False lane is exchange push-back, NOT an authoritative miss
 
     @property
     def all_found(self) -> bool:
@@ -39,8 +45,10 @@ class GetResult(NamedTuple):
 
 class DeleteResult(NamedTuple):
     ok: jnp.ndarray       # bool [Q]: tombstone recorded
-    found: jnp.ndarray    # bool [Q]: key existed in the primary index
+    found: jnp.ndarray    # bool [Q]: key existed in the primary index (or,
+                          # degraded, in the temporary primary's replica)
     retries: int
+    replicas: Optional[jnp.ndarray] = None   # as PutResult.replicas
 
 
 class ScanResult(NamedTuple):

@@ -24,15 +24,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.sharding.smap import axis_size  # noqa: F401  (re-export)
+
 I32 = jnp.int32
-
-
-def axis_size(axis: str) -> int:
-    """Static mesh-axis size: jax.lax.axis_size where available (>= 0.5),
-    else the classic psum-of-1 idiom (constant-folded, still static)."""
-    if hasattr(jax.lax, "axis_size"):
-        return jax.lax.axis_size(axis)
-    return jax.lax.psum(1, axis)
 
 
 def route_build(dest, payloads: dict, n_dev: int, capacity: int):

@@ -98,16 +98,16 @@ def _sharded_cache_update(k_cache, v_cache, pos_buf, k_new, v_new, pos):
         pb = pb.at[bidx, li].set(ps, mode="drop")
         return ck, cv, pb
 
-    fn = _jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(dp_spec, "model", None, None),
-                  P(dp_spec, "model", None, None),
-                  P(dp_spec, "model"),
-                  P(dp_spec, None, None), P(dp_spec, None, None), P(dp_spec)),
-        out_specs=(P(dp_spec, "model", None, None),
-                   P(dp_spec, "model", None, None),
-                   P(dp_spec, "model")),
-        check_vma=False)
+    from repro.sharding.smap import shard_map
+    fn = shard_map(
+        body, mesh,
+        (P(dp_spec, "model", None, None),
+         P(dp_spec, "model", None, None),
+         P(dp_spec, "model"),
+         P(dp_spec, None, None), P(dp_spec, None, None), P(dp_spec)),
+        (P(dp_spec, "model", None, None),
+         P(dp_spec, "model", None, None),
+         P(dp_spec, "model")))
     return fn(k_cache, v_cache, pos_buf, k_new, v_new, pos)
 
 

@@ -160,12 +160,12 @@ def _dispatch_smap(cfg, params, xf, eidx, gate):
         out = jnp.zeros((Tl, D), x_l.dtype).at[t_s].add(contrib)
         return jax.lax.psum(out, "model")
 
-    fn = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(dp_spec, None), P(dp_spec, None), P(dp_spec, None),
-                  P("model", None, None), P("model", None, None),
-                  P("model", None, None)),
-        out_specs=P(dp_spec, None),
-        check_vma=False)
+    from repro.sharding.smap import shard_map
+    fn = shard_map(
+        body, mesh,
+        (P(dp_spec, None), P(dp_spec, None), P(dp_spec, None),
+         P("model", None, None), P("model", None, None),
+         P("model", None, None)),
+        P(dp_spec, None))
     return fn(xf, eidx, gate.astype(xf.dtype),
               params["e_wi"], params["e_wg"], params["e_wo"])

@@ -37,7 +37,8 @@ def ef_state(params):
 def dp_allreduce_compressed(grads, err, axis: str):
     """Inside shard_map over the data axis: error-feedback int8 all-reduce.
     Returns (mean grads fp32, new error state)."""
-    n = jax.lax.axis_size(axis)
+    from repro.sharding.smap import axis_size
+    n = axis_size(axis)
 
     def one(g, e):
         gf = g.astype(F32) + e

@@ -1,0 +1,28 @@
+"""Cross-version shard_map.
+
+jax >= 0.6 exposes ``jax.shard_map`` (with ``check_vma``); 0.4.x only has
+``jax.experimental.shard_map.shard_map`` (with ``check_rep``).  Every
+shard_map call site in the repo goes through this helper so the whole tree
+runs on either line (the 0.4.37 container included).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis: str) -> int:
+    """Static mesh-axis size inside shard_map: jax.lax.axis_size where
+    available (>= 0.5), else the classic psum-of-1 idiom (constant-folded,
+    still static)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)

@@ -90,10 +90,9 @@ def check_compressed_dp():
         out, ne = dp_allreduce_compressed({"g": g[0]}, {"g": e[0]}, "data")
         return out["g"][None], ne["g"][None]
 
-    fn = jax.jit(jax.shard_map(body, mesh=mesh,
-                               in_specs=(P("data"), P("data")),
-                               out_specs=(P("data"), P("data")),
-                               check_vma=False))
+    from repro.sharding.smap import shard_map
+    fn = jax.jit(shard_map(body, mesh, (P("data"), P("data")),
+                           (P("data"), P("data"))))
     out, _ = fn(g_shards, err)
     ref = np.asarray(g_shards).mean(0)
     got = np.asarray(out)[0]

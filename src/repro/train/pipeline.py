@@ -61,9 +61,8 @@ def pipeline_apply(stage_fn, params_stacked, x_microbatches, mesh):
         outs = jax.lax.psum(jnp.where(me == S - 1, outs, 0.0), AXIS)
         return outs
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(P(AXIS), P()), out_specs=P(),
-                       check_vma=False)
+    from repro.sharding.smap import shard_map
+    fn = shard_map(body, mesh, (P(AXIS), P()), P())
     return fn(params_stacked, x_microbatches)
 
 

@@ -86,6 +86,11 @@ def train(cfg, mesh, shape: ShapeSpec, *, steps: int, ckpt_dir=None,
     t0 = time.time()
     for step in range(start, steps):
         if fail_at is not None and step == fail_at:
+            if ckpt:
+                # flush the async writer: the injected failure models a
+                # crash AFTER the last checkpoint is durable, so restart
+                # tests don't race the background save thread
+                ckpt.wait()
             raise RuntimeError(f"injected failure at step {step}")
         batch = make_batch(ds, step, mesh, ispecs, dtype=cfg.param_dtype)
         params, opt, metrics = step_fn(params, opt, batch)

@@ -1,0 +1,89 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+"""Distributed fault-injection differential battery (8 host devices).
+
+Spawned as a subprocess by tests/test_fault_injection.py (the dry-run
+rule: only multi-device entrypoints force a host device count).  For each
+seeded workload mix, the same op trace + fault schedule is replayed
+through HiStoreClient/DistributedBackend and the plain-Python oracle:
+
+  healthy segment -> fail device d (index state WIPED; keys owned by
+  group d enter the primary-dead phase, keys of groups d-1/d-2 the
+  backup-dead phase) -> degraded segment -> recover (hash rebuilt from a
+  sorted replica, replicas re-cloned) -> post-recovery segment
+
+Every GET/SCAN/DELETE observation must match the fault-oblivious oracle
+result-for-result, recovery must restore hash/sorted parity on the failed
+shard, and writes during the failure must report reduced replication.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.histore import scaled
+from repro.core import kvstore as kv
+from repro.core.client import DistributedBackend, HiStoreClient
+from repro.core.hashing import key_dtype
+
+from oracle import Oracle, assert_equivalent, gen_ops, replay, splice_faults
+
+CFG = scaled(log_capacity=512, async_apply_batch=128)
+N_EVENTS = 12
+
+
+def run_mix(mesh, mix: str, seed: int, dead_dev: int) -> None:
+    G = mesh.devices.size
+    ops = gen_ops(seed, mix, n_events=N_EVENTS, batch=3 * G)
+    trace = splice_faults(ops, [(N_EVENTS // 3, "fail", dead_dev),
+                                (2 * N_EVENTS // 3, "recover", dead_dev)])
+    client = HiStoreClient(
+        DistributedBackend(mesh, CFG, 4096, capacity_q=64, scan_limit=128),
+        batch_quantum=4 * G, max_retries=32)
+    oracle = Oracle(value_words=CFG.value_words)
+    assert_equivalent(replay(client, trace), replay(oracle, trace),
+                      label=f"dist8/{mix}/seed{seed}")
+    store = client.backend.store
+    assert all(p["agree"] for p in kv.parity_report(store, CFG)), \
+        f"{mix}: recovery must restore hash/sorted parity"
+
+    # reduced replication is reported honestly while a holder is dead
+    client.fail_server(dead_dev)
+    wk = np.random.RandomState(seed + 999).choice(
+        10 ** 6, 8 * G, replace=False) + 7 * 10 ** 7
+    w = client.put(wk, np.arange(8 * G))
+    assert w.all_ok
+    own = np.asarray(kv.owner_group(jax.numpy.asarray(wk, key_dtype()), G))
+    rep = np.asarray(w.replicas)
+    hit = np.isin(own, [(dead_dev - 1) % G, (dead_dev - 2) % G])
+    assert (rep[hit] == CFG.n_backups - 1).all(), \
+        f"{mix}: dead-holder groups must report n_backups-1"
+    assert (rep[~hit & (own != dead_dev)] == CFG.n_backups).all(), \
+        f"{mix}: unaffected groups must keep full replication"
+    client.recover_server(dead_dev)
+    g = client.get(wk)
+    assert g.all_found
+    np.testing.assert_array_equal(np.asarray(g.values)[:, 0],
+                                  np.arange(8 * G))
+    assert all(p["agree"] for p in kv.parity_report(client.backend.store,
+                                                    CFG))
+    print(f"mix {mix} seed {seed} (dead dev {dead_dev}) ok", flush=True)
+
+
+def main() -> int:
+    mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
+    for mix, seed, dead in [("uniform", 11, 2), ("zipfian", 22, 5),
+                            ("scan_heavy", 33, 7),
+                            ("delete_heavy", 44, 3)]:
+        run_mix(mesh, mix, seed, dead)
+    print("FAULT-SELFTEST-OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

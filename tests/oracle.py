@@ -1,0 +1,208 @@
+"""Differential-testing oracle for the HiStore client surface.
+
+A plain-Python reference model (dict + sorted list) that consumes the same
+Put/Get/Delete/Scan trace as a real backend, plus:
+
+  * ``gen_ops``      — seeded trace generator with workload mixes
+                       (uniform / zipfian / scan_heavy / delete_heavy);
+  * ``splice_faults``— deterministic fault schedule: kill/recover events
+                       inserted at trace offsets;
+  * ``replay``       — drive any client-shaped system through a trace,
+                       recording normalized observations;
+  * ``assert_equivalent`` — result-for-result comparison of two replays.
+
+The oracle is FAULT-OBLIVIOUS: kill/recover events are no-ops for it.
+That is the point — HiStore's availability claim (paper §4.3) is that
+GET/SCAN/DELETE answers are indistinguishable from a healthy store in the
+degraded and post-recovery phases, so the reference model never needs to
+know a failure happened.
+
+Used by tests/test_fault_injection.py (in-process, LocalBackend and the
+single-device DistributedBackend) and tests/fault_selftest.py (8-device
+subprocess battery).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.results import (DeleteResult, GetResult, PutResult,
+                                ScanResult)
+
+MIXES = {
+    #                 put   get   delete scan
+    "uniform":      (0.45, 0.35, 0.10, 0.10),
+    "zipfian":      (0.45, 0.35, 0.10, 0.10),
+    "scan_heavy":   (0.35, 0.20, 0.10, 0.35),
+    "delete_heavy": (0.35, 0.20, 0.35, 0.10),
+}
+
+
+class Oracle:
+    """dict + sorted-list reference model with the HiStoreClient result
+    API, so ``replay`` can drive it interchangeably with a real client."""
+
+    def __init__(self, value_words: int = 4):
+        self.model: dict[int, int] = {}
+        self.value_words = value_words
+
+    def put(self, keys, values) -> PutResult:
+        keys = np.asarray(keys)
+        values = np.asarray(values)
+        for k, v in zip(keys.tolist(), values.tolist()):
+            self.model[int(k)] = int(v)
+        q = keys.shape[0]
+        return PutResult(np.ones((q,), bool), np.full((q,), -1, np.int32),
+                         0, None)
+
+    def get(self, keys) -> GetResult:
+        keys = np.asarray(keys)
+        q = keys.shape[0]
+        found = np.array([int(k) in self.model for k in keys], bool)
+        vals = np.zeros((q, self.value_words), np.int32)
+        for i, k in enumerate(keys.tolist()):
+            if int(k) in self.model:
+                vals[i, :] = self.model[int(k)]
+        return GetResult(np.full((q,), -1, np.int32), found,
+                         np.zeros((q,), np.int32), vals)
+
+    def delete(self, keys) -> DeleteResult:
+        keys = np.asarray(keys)
+        found = []
+        for k in keys.tolist():
+            found.append(int(k) in self.model)
+            self.model.pop(int(k), None)
+        return DeleteResult(np.ones((keys.shape[0],), bool),
+                            np.array(found, bool), 0, None)
+
+    def scan(self, lo, hi, limit: int) -> ScanResult:
+        ks = sorted(k for k in self.model if int(lo) <= k <= int(hi))[:limit]
+        return ScanResult(np.array(ks, np.int64),
+                          np.full((len(ks),), -1, np.int32),
+                          np.int32(len(ks)))
+
+    # fault events are no-ops: the model IS the always-healthy truth
+    def fail_server(self, server: int) -> None:
+        pass
+
+    def recover_server(self, server: int) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Trace generation
+# ---------------------------------------------------------------------------
+def _draw_keys(rng, pool, batch, universe, mix, hit_rate=0.7):
+    """A batch of keys: mostly re-reads of written keys (hits), the rest
+    fresh draws (probable misses); zipfian skews toward hot ranks."""
+    out = []
+    for _ in range(batch):
+        if pool and rng.rand() < hit_rate:
+            out.append(pool[rng.randint(len(pool))])
+        elif mix == "zipfian":
+            rank = int(rng.zipf(1.3))
+            out.append(1 + (rank * 48271) % universe)
+        else:
+            out.append(1 + int(rng.randint(universe)))
+    return np.array(out, np.int64)
+
+
+def gen_ops(seed: int, mix: str = "uniform", n_events: int = 12,
+            batch: int = 24, universe: int = 10 ** 6,
+            scan_limit: int = 128) -> list:
+    """Deterministic op trace for one workload mix.  Every batch op uses
+    the same ``batch`` size so jitted backends compile each op once.
+    Events: ("put", keys, vals) / ("get", keys) / ("delete", keys) /
+    ("scan", lo, hi, limit)."""
+    assert mix in MIXES, f"unknown mix {mix!r}"
+    p_put, p_get, p_del, p_scan = MIXES[mix]
+    rng = np.random.RandomState(seed)
+    pool: list[int] = []
+    events = []
+    for i in range(n_events):
+        kind = rng.choice(["put", "get", "delete", "scan"],
+                          p=[p_put, p_get, p_del, p_scan])
+        if i == 0:
+            kind = "put"            # something to read back
+        if kind == "put":
+            keys = _draw_keys(rng, pool, batch, universe, mix)
+            vals = rng.randint(1, 1 << 20, batch).astype(np.int64)
+            pool.extend(int(k) for k in keys)
+            pool = pool[-5000:]
+            events.append(("put", keys, vals))
+        elif kind == "get":
+            events.append(("get", _draw_keys(rng, pool, batch, universe,
+                                             mix)))
+        elif kind == "delete":
+            # sequential oracle semantics vs batched backend semantics
+            # diverge on duplicate keys within one batch: dedupe here
+            keys = _draw_keys(rng, pool, batch, universe, mix)
+            _, first = np.unique(keys, return_index=True)
+            events.append(("delete", keys[np.sort(first)]))
+        else:
+            lo = int(rng.randint(universe))
+            hi = min(universe, lo + int(rng.randint(1, universe // 2)))
+            events.append(("scan", lo, hi, scan_limit))
+    return events
+
+
+def splice_faults(events: list, schedule: list) -> list:
+    """Insert ("fail", server) / ("recover", server) events at trace
+    offsets.  ``schedule``: [(offset, kind, server), ...]; offsets index
+    the ORIGINAL op trace, so a schedule is portable across backends."""
+    out = list(events)
+    for off, kind, server in sorted(schedule, reverse=True):
+        assert kind in ("fail", "recover")
+        out.insert(off, (kind, server))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Replay + comparison
+# ---------------------------------------------------------------------------
+def replay(system, trace: list) -> list:
+    """Drive a client-shaped system through a trace.  Returns one
+    normalized observation per event (plain Python, comparable with ==):
+
+      put    -> ("put", ok...)
+      get    -> ("get", found..., value-if-found...)
+      delete -> ("delete", ok..., found...)
+      scan   -> ("scan", count, keys...)
+      fail / recover -> echoed marker
+    """
+    obs = []
+    for ev in trace:
+        kind = ev[0]
+        if kind == "put":
+            r = system.put(ev[1], ev[2])
+            obs.append(("put", tuple(np.asarray(r.ok).tolist())))
+        elif kind == "get":
+            r = system.get(ev[1])
+            f = np.asarray(r.found).astype(bool)
+            v = np.asarray(r.values)[:, 0] * f
+            obs.append(("get", tuple(f.tolist()), tuple(int(x) for x in v)))
+        elif kind == "delete":
+            r = system.delete(ev[1])
+            obs.append(("delete", tuple(np.asarray(r.ok).tolist()),
+                        tuple(np.asarray(r.found).astype(bool).tolist())))
+        elif kind == "scan":
+            r = system.scan(ev[1], ev[2], ev[3])
+            n = int(r.count)
+            obs.append(("scan", n,
+                        tuple(int(k) for k in np.asarray(r.keys)[:n])))
+        elif kind == "fail":
+            system.fail_server(ev[1])
+            obs.append(("fail", ev[1]))
+        elif kind == "recover":
+            system.recover_server(ev[1])
+            obs.append(("recover", ev[1]))
+        else:  # pragma: no cover
+            raise ValueError(f"unknown event {kind!r}")
+    return obs
+
+
+def assert_equivalent(obs_a: list, obs_b: list, label: str = "") -> None:
+    """Result-for-result equality of two replays of the same trace."""
+    assert len(obs_a) == len(obs_b), (len(obs_a), len(obs_b))
+    for i, (a, b) in enumerate(zip(obs_a, obs_b)):
+        assert a == b, (
+            f"{label} diverged at event {i} ({a[0]}):\n  A={a}\n  B={b}")

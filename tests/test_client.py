@@ -69,49 +69,54 @@ def test_overflow_retry_distributed_put_get():
     """Force a tiny exchange capacity: every put must still eventually ack
     through the client's push-back retry loop, and reads must see them."""
     c = _dist_client(capacity_q=4, max_retries=64)
-    keys = _keys(96, seed=5)
-    res = c.put(keys, np.arange(96))
+    keys = _keys(64, seed=5)
+    res = c.put(keys, np.arange(64))
     assert res.all_ok, "all puts must eventually be acknowledged"
     assert res.retries > 0, "tiny capacity must engage the retry loop"
     g = c.get(keys)
     assert g.all_found
-    np.testing.assert_array_equal(np.asarray(g.values)[:, 0], np.arange(96))
+    np.testing.assert_array_equal(np.asarray(g.values)[:, 0], np.arange(64))
 
 
 def test_distributed_delete_roundtrip():
     """PUT -> DELETE -> GET miss -> SCAN excludes the key."""
     c = _dist_client()
-    keys = _keys(80, seed=6)
-    assert c.put(keys, np.arange(80)).all_ok
-    d = c.delete(keys[:20])
+    keys = _keys(64, seed=6)
+    assert c.put(keys, np.arange(64)).all_ok
+    d = c.delete(keys[:16])
     assert bool(d.ok.all()) and bool(d.found.all())
-    g = c.get(keys[:20])
+    g = c.get(keys[:16])
     assert not bool(g.found.any()), "deleted keys must miss"
-    g2 = c.get(keys[20:])
+    g2 = c.get(keys[16:])
     assert g2.all_found, "survivors must still hit"
     s = c.scan(0, 10 ** 7)
     got = set(np.asarray(s.keys[: int(s.count)]).tolist())
-    assert got == set(int(k) for k in keys[20:])
+    assert got == set(int(k) for k in keys[16:])
     # delete of a missing key: acked but not found
     d2 = c.delete(keys[:5])
     assert bool(d2.ok.all()) and not bool(d2.found.any())
 
 
 def test_local_distributed_parity_on_shared_trace():
-    """Both backends must agree on found-masks, values, delete founds and
-    scan contents for the same op trace."""
+    """Both backends must agree on found-masks, values, delete founds,
+    replication counts and scan contents for the same op trace.  (The
+    trace is deliberately small — one put/get/delete/scan round each; the
+    heavy randomized coverage lives in tests/test_fault_injection.py.)"""
     clients = [_local_client(), _dist_client()]
-    keys = _keys(120, seed=7)
-    probes = np.concatenate([keys[:30], keys[:30] + 10 ** 7])  # hits+misses
+    keys = _keys(64, seed=7)
+    probes = np.concatenate([keys[:16], keys[:16] + 10 ** 7])  # hits+misses
     outs = []
     for c in clients:
         trace = {}
-        trace["put_ok"] = np.asarray(c.put(keys, np.arange(120)).ok)
+        r = c.put(keys, np.arange(64))
+        trace["put_ok"] = np.asarray(r.ok)
+        trace["put_rep"] = np.asarray(r.replicas)
         g = c.get(probes)
         trace["found"] = np.asarray(g.found)
         trace["vals"] = np.asarray(g.values)[:, 0] * trace["found"]
-        d = c.delete(keys[40:60])
+        d = c.delete(keys[20:36])
         trace["del_found"] = np.asarray(d.found)
+        trace["del_rep"] = np.asarray(d.replicas)
         g2 = c.get(keys)
         trace["found2"] = np.asarray(g2.found)
         s = c.scan(0, 10 ** 7, limit=128)
@@ -122,6 +127,7 @@ def test_local_distributed_parity_on_shared_trace():
     a, b = outs
     for k in a:
         np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    assert (a["put_rep"] == CFG.n_backups).all()
 
 
 def test_apply_every_n_ops_policy():

@@ -5,9 +5,12 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 ROOT = Path(__file__).resolve().parents[1]
 
 
+@pytest.mark.slow
 def test_elastic_pipeline_compression():
     env = dict(os.environ,
                PYTHONPATH=str(ROOT / "src"),

@@ -1,0 +1,132 @@
+"""Trace-driven differential fault-injection tests (paper §4.3).
+
+The same seeded op trace + deterministic fault schedule is replayed
+through a real backend and the plain-Python oracle (tests/oracle.py); the
+store must be indistinguishable from an always-healthy reference across
+the healthy, primary-dead, backup-dead and post-recovery phases, and
+recovery must restore hash/sorted parity on the failed shard.
+
+Three rigs:
+  * LocalBackend, in-process — full fault schedule (primary + backup
+    kill/recover) against the one index group;
+  * DistributedBackend on this process's single-device mesh — healthy
+    differential (routing / exchange / fetch paths; a 1-device mesh folds
+    every replica onto the failing server, so faults are not meaningful);
+  * the 8-device subprocess battery (tests/fault_selftest.py) — the real
+    distributed kill/recover protocol, marked ``slow``.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.histore import scaled
+from repro.core import hash_index as hi
+from repro.core import index_group as ig
+from repro.core import kvstore as kv
+from repro.core import sorted_index as si
+from repro.core.client import (DistributedBackend, HiStoreClient,
+                               LocalBackend)
+
+from oracle import Oracle, assert_equivalent, gen_ops, replay, splice_faults
+
+ROOT = Path(__file__).resolve().parents[1]
+CFG = scaled(log_capacity=1 << 10, async_apply_batch=256)
+N_EVENTS = 16
+
+
+def _local_parity_ok(backend: LocalBackend) -> bool:
+    """After a drain, every sorted replica must hold exactly the hash
+    table's live items, with agreeing addresses."""
+    g = ig.drain(backend.group, backend.cfg)
+    n_hash = int(hi.n_items(g.hash))
+    for r in range(backend.cfg.n_backups):
+        srt = jax.tree.map(lambda a: a[r], g.sorted)
+        keys, addrs, valid = si.items(srt)
+        if int(valid.sum()) != n_hash:
+            return False
+        a_h, f_h, _ = hi.lookup(g.hash, keys, backend.cfg)
+        if not bool(np.asarray(f_h | ~valid).all()):
+            return False
+        if not bool(np.asarray((a_h == addrs) | ~valid).all()):
+            return False
+    return True
+
+
+@pytest.mark.parametrize("mix,seed", [("uniform", 1), ("zipfian", 2),
+                                      ("scan_heavy", 3),
+                                      ("delete_heavy", 4)])
+def test_local_vs_oracle_under_faults(mix, seed):
+    """Full kill/recover schedule on the local group: primary dies (wiped)
+    mid-trace and is rebuilt from a replica, then a backup dies and is
+    re-cloned.  Every observation must match the fault-oblivious oracle."""
+    ops = gen_ops(seed, mix, n_events=N_EVENTS, batch=16)
+    schedule = [
+        (N_EVENTS // 4, "fail", 0),          # primary down (hash wiped)
+        (N_EVENTS // 2, "recover", 0),       # hash rebuilt from replica
+        (5 * N_EVENTS // 8, "fail", 1),      # backup 0 down (replica wiped)
+        (7 * N_EVENTS // 8, "recover", 1),   # replica re-cloned
+    ]
+    trace = splice_faults(ops, schedule)
+    backend = LocalBackend(4096, CFG)
+    client = HiStoreClient(backend, batch_quantum=16)
+    oracle = Oracle(value_words=CFG.value_words)
+    assert_equivalent(replay(client, trace), replay(oracle, trace),
+                      label=f"local/{mix}")
+    assert _local_parity_ok(backend), \
+        "recovery must restore hash/sorted parity"
+
+
+@pytest.mark.parametrize("mix,seed", [("uniform", 5), ("zipfian", 6),
+                                      ("delete_heavy", 7)])
+def test_dist_single_device_vs_oracle(mix, seed):
+    """The shard_map'd store on this process's 1-device mesh must be
+    trace-equivalent to the oracle (healthy phases: routing, exchange,
+    value fetch, scan drain)."""
+    mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
+    trace = gen_ops(seed, mix, n_events=N_EVENTS, batch=16)
+    client = HiStoreClient(
+        DistributedBackend(mesh, CFG, 4096, capacity_q=64, scan_limit=128),
+        batch_quantum=16, max_retries=32)
+    oracle = Oracle(value_words=CFG.value_words)
+    assert_equivalent(replay(client, trace), replay(oracle, trace),
+                      label=f"dist1/{mix}")
+    assert all(p["agree"]
+               for p in kv.parity_report(client.backend.store, CFG))
+
+
+def test_local_replication_reported_honestly():
+    """PUT/DELETE report n_backups replicas healthy, fewer when a backup
+    is masked dead, and full replication again after recovery."""
+    backend = LocalBackend(2048, CFG)
+    client = HiStoreClient(backend, batch_quantum=16)
+    keys = np.arange(1, 17)
+    assert bool((client.put(keys, keys).replicas == CFG.n_backups).all())
+    client.fail_server(1)                     # backup 0 down
+    r = client.put(keys + 100, keys)
+    assert bool((r.replicas == CFG.n_backups - 1).all())
+    d = client.delete(keys[:4])
+    assert bool((d.replicas == CFG.n_backups - 1).all())
+    client.recover_server(1)
+    assert bool(
+        (client.put(keys + 200, keys).replicas == CFG.n_backups).all())
+    assert _local_parity_ok(backend)
+
+
+@pytest.mark.slow
+def test_fault_injection_distributed_8dev():
+    """The real distributed kill/recover protocol, differentially checked
+    against the oracle on an 8-device host mesh (subprocess)."""
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [str(ROOT / "src"), str(ROOT / "tests")]),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests/fault_selftest.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "FAULT-SELFTEST-OK" in proc.stdout

@@ -114,6 +114,98 @@ def test_scan_with_backup_failure():
     assert int(n) == 3
 
 
+def test_fail_wipes_primary_state():
+    """fail(0) models real loss: the hash table and primary log are gone,
+    not merely masked (benchmarks time a genuine rebuild, §4.3)."""
+    from repro.core import hash_index as hi
+    g = ig.create(2048, CFG)
+    g, _ = _put(g, [1, 2, 3], [10, 20, 30])
+    assert int(hi.n_items(g.hash)) == 3
+    g = ig.fail(g, 0)
+    assert not bool(g.alive[0])
+    assert int(hi.n_items(g.hash)) == 0
+    assert int(lg.pending_count(g.plog)) == 0
+
+
+def test_get_static_liveness_hints_agree():
+    """The primary_alive=True/False/None compilations of GET must return
+    the same answers once the replicas are drained (the hints only pick
+    which path compiles, never what it answers)."""
+    g = ig.create(2048, CFG)
+    g, _ = _put(g, [5, 6, 7], [50, 60, 70])
+    g = ig.drain(g, CFG)
+    probe = jnp.array([5, 6, 7, 8], KD)
+    a_t, f_t, _ = ig.get(g, probe, CFG, primary_alive=True)
+    a_n, f_n, _ = ig.get(g, probe, CFG, primary_alive=None)
+    a_f, f_f, _ = ig.get(g, probe, CFG, primary_alive=False)
+    np.testing.assert_array_equal(np.asarray(f_t), np.asarray(f_n))
+    np.testing.assert_array_equal(np.asarray(f_t), np.asarray(f_f))
+    np.testing.assert_array_equal(np.asarray(a_t), np.asarray(a_n))
+    np.testing.assert_array_equal(np.asarray(a_t), np.asarray(a_f))
+
+
+def test_put_skips_dead_backup_and_recovery_resyncs():
+    """put(backups_alive=...) must leave the dead backup's log untouched
+    (the paper's PUT speed-up under backup failure) and recover_backup
+    must re-sync the replica from the survivor."""
+    g = ig.create(2048, CFG)
+    g, _ = _put(g, [1, 2, 3], [10, 20, 30])
+    g = ig.drain(g, CFG)
+    g = ig.fail(g, 1)                       # backup 0 down (wiped)
+    g, ok = ig.put(g, jnp.array([4], KD), jnp.array([40], jnp.int32), CFG,
+                   backups_alive=(False, True))
+    assert bool(ok.all())
+    assert int(lg.pending_count(
+        jax.tree.map(lambda a: a[0], g.blogs))) == 0, "dead log untouched"
+    assert int(lg.pending_count(
+        jax.tree.map(lambda a: a[1], g.blogs))) == 1
+    g = ig.recover_backup(g, 0, CFG)
+    assert bool(g.alive.all())
+    g = ig.drain(g, CFG)
+    srt = jax.tree.map(lambda a: a[0], g.sorted)
+    _, found, _ = si.search(srt, jnp.array([1, 2, 3, 4], KD))
+    assert bool(found.all()), "re-cloned replica must hold every write"
+
+
+def test_degraded_write_delete_recover_primary_roundtrip():
+    """Writes and deletes during a primary outage: served from the replica
+    + pending log while down (with honest DELETE found), then fully
+    present in the rebuilt hash after recover_primary."""
+    g = ig.create(2048, CFG)
+    g, _ = _put(g, [1, 2], [10, 20])
+    g = ig.fail(g, 0)
+    g, _ = _put(g, [3], [30])               # write during the outage
+    g, found = ig.delete(g, jnp.array([1, 9], KD), CFG)
+    np.testing.assert_array_equal(np.asarray(found), [True, False])
+    addr, found, _ = ig.get(g, jnp.array([1, 2, 3], KD), CFG,
+                            primary_alive=False)
+    np.testing.assert_array_equal(np.asarray(found), [False, True, True])
+    g = ig.recover_primary(g, CFG)
+    assert bool(g.alive[0])
+    addr, found, _ = ig.get(g, jnp.array([1, 2, 3], KD), CFG,
+                            primary_alive=True)
+    np.testing.assert_array_equal(np.asarray(found), [False, True, True])
+    np.testing.assert_array_equal(np.asarray(addr)[1:], [20, 30])
+
+
+def test_delete_with_dead_backups_recovers_consistent():
+    """delete(backups_alive=...) skips the dead log; after recovery and a
+    drain both replicas agree the key is gone."""
+    g = ig.create(2048, CFG)
+    g, _ = _put(g, [7, 8], [70, 80])
+    g = ig.drain(g, CFG)
+    g = ig.fail(g, 2)                       # backup 1 down
+    g, found = ig.delete(g, jnp.array([7], KD), CFG,
+                         backups_alive=(True, False))
+    assert bool(found[0])
+    g = ig.recover_backup(g, 1, CFG)
+    g = ig.drain(g, CFG)
+    for r in range(CFG.n_backups):
+        srt = jax.tree.map(lambda a: a[r], g.sorted)
+        _, f, _ = si.search(srt, jnp.array([7, 8], KD))
+        np.testing.assert_array_equal(np.asarray(f), [False, True])
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.lists(st.tuples(st.sampled_from(["put", "del", "apply"]),
                           st.integers(0, 40), st.integers(0, 99)),

@@ -11,9 +11,12 @@ import subprocess
 import sys
 from pathlib import Path
 
+import pytest
+
 ROOT = Path(__file__).resolve().parents[1]
 
 
+@pytest.mark.slow
 def test_distributed_kvstore_protocol():
     env = dict(os.environ,
                PYTHONPATH=str(ROOT / "src"),

@@ -51,6 +51,121 @@ def test_range_query():
     assert int(n) == 16
 
 
+# ---------------------------------------------------------------------------
+# Property checks.  The _check_* helpers hold the actual properties so the
+# fixed-example smoke tests below exercise the same logic when hypothesis
+# is not installed (the @given tests then skip via _hypothesis_compat).
+# ---------------------------------------------------------------------------
+def _check_last_writer_wins(entries):
+    """One merge batch with duplicate keys: the LAST occurrence of each
+    key must win (arrival order = log order)."""
+    idx = si.create(256)
+    keys = jnp.array([k for k, _ in entries], KD)
+    addrs = jnp.array([a for _, a in entries], jnp.int32)
+    ops = jnp.full((len(entries),), si.OP_PUT, jnp.int8)
+    idx = si.merge(idx, keys, addrs, ops)
+    model = {}
+    for k, a in entries:
+        model[k] = a
+    assert int(idx.size) == len(model)
+    probe = jnp.array(sorted(model), KD)
+    got, found, _ = si.search(idx, probe)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(got),
+                                  [model[k] for k in sorted(model)])
+
+
+def _check_delete_compaction(puts, dels):
+    """DELETE entries compact away: deleted keys vanish, the packed array
+    keeps live entries in a sorted prefix with INF padding after."""
+    idx = si.create(256)
+    idx = si.merge(idx, jnp.array(puts, KD),
+                   jnp.arange(len(puts), dtype=jnp.int32),
+                   jnp.full((len(puts),), si.OP_PUT, jnp.int8))
+    idx = si.merge(idx, jnp.array(dels, KD),
+                   jnp.full((len(dels),), -1, jnp.int32),
+                   jnp.full((len(dels),), si.OP_DEL, jnp.int8))
+    live = sorted(set(puts) - set(dels))
+    assert int(idx.size) == len(live)
+    k = np.asarray(idx.keys)
+    INF = np.iinfo(k.dtype).max
+    np.testing.assert_array_equal(k[: len(live)], live)
+    assert (k[len(live):] == INF).all(), "compaction must pack the prefix"
+    if dels:
+        _, found_d, _ = si.search(idx, jnp.array(sorted(set(dels)), KD))
+        assert not bool(found_d.any())
+
+
+def _check_search_agrees_with_searchsorted(keys, probes):
+    """The hierarchical directory must agree with jnp.searchsorted over
+    the same packed array: found iff present, addr = position's addr."""
+    keys = sorted(set(keys))
+    idx = si.create(1 << 10)
+    idx = si.bulk_load(idx, jnp.array(keys, KD),
+                       jnp.arange(len(keys), dtype=jnp.int32))
+    probe = jnp.array(probes, KD)
+    got, found, _ = si.search(idx, probe)
+    pos = np.asarray(jnp.searchsorted(idx.keys, probe))
+    karr = np.asarray(idx.keys)
+    ref_found = (pos < len(keys)) & (karr[np.minimum(pos, len(karr) - 1)]
+                                     == np.asarray(probe))
+    np.testing.assert_array_equal(np.asarray(found), ref_found)
+    np.testing.assert_array_equal(np.asarray(got)[ref_found],
+                                  pos[ref_found])
+
+
+def _check_range_query_matches_model(keys, lo, hi, limit):
+    keys = sorted(set(keys))
+    idx = si.create(512)
+    idx = si.bulk_load(idx, jnp.array(keys, KD),
+                       jnp.arange(len(keys), dtype=jnp.int32))
+    k, a, n = si.range_query(idx, KD(lo), KD(hi), limit)
+    ref = [x for x in keys if lo <= x <= hi][:limit]
+    assert int(n) == len(ref)
+    np.testing.assert_array_equal(np.asarray(k)[: len(ref)], ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 60), st.integers(0, 100)),
+                min_size=1, max_size=40))
+def test_prop_merge_last_writer_wins(entries):
+    _check_last_writer_wins(entries)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 80), min_size=1, max_size=40),
+       st.lists(st.integers(0, 80), min_size=0, max_size=40))
+def test_prop_merge_delete_compaction(puts, dels):
+    _check_delete_compaction(puts, dels)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 10 ** 6), min_size=1, max_size=200),
+       st.lists(st.integers(0, 10 ** 6), min_size=1, max_size=64))
+def test_prop_search_agrees_with_searchsorted(keys, probes):
+    # probe a mix of present and absent keys
+    _check_search_agrees_with_searchsorted(keys, probes + keys[:8])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 500), min_size=1, max_size=60),
+       st.integers(0, 500), st.integers(0, 500), st.integers(1, 32))
+def test_prop_range_query_matches_model(keys, a, b, limit):
+    _check_range_query_matches_model(keys, min(a, b), max(a, b), limit)
+
+
+def test_property_smokes_fixed_examples():
+    """Run the property bodies on fixed adversarial examples so the
+    invariants are exercised even without hypothesis installed."""
+    _check_last_writer_wins([(5, 1), (5, 2), (3, 9), (5, 7), (3, 0)])
+    _check_delete_compaction([1, 2, 3, 4, 5], [2, 4, 9])
+    _check_delete_compaction([7], [7])
+    _check_search_agrees_with_searchsorted(
+        list(range(0, 1000, 7)), [0, 1, 7, 693, 994, 10 ** 6])
+    _check_range_query_matches_model(list(range(0, 500, 5)), 12, 52, 16)
+    _check_range_query_matches_model([3], 0, 500, 2)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.lists(st.tuples(st.sampled_from([1, 2]),     # OP_PUT / OP_DEL
                           st.integers(0, 60),

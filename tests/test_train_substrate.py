@@ -45,18 +45,26 @@ def test_train_loss_goes_down_and_restart_resumes(tmp_path):
     from repro.train.trainer import train
     cfg = tiny_config("musicgen-large")
     mesh = make_local_mesh()
-    # crash at step 6 after a checkpoint at step 4
+    # crash at step 3 after a checkpoint at step 2.  The resume point is
+    # deliberately EARLY: at lr=3e-3 the tiny model hits the synthetic
+    # data's entropy floor (~3.0) within ~4 steps, after which per-step
+    # losses are noise around the floor — the seed version resumed at
+    # step 4 and compared two single post-floor samples, which failed
+    # nondeterministically.  Resuming at step 2 (pre-floor, loss ~3.6)
+    # leaves genuine headroom to descend.
     with pytest.raises(RuntimeError, match="injected failure"):
-        train(cfg, mesh, SHAPE, steps=10, ckpt_dir=tmp_path, ckpt_every=4,
-              lr=3e-3, fail_at=6, log_every=1)
-    assert latest_step(tmp_path) == 4
+        train(cfg, mesh, SHAPE, steps=10, ckpt_dir=tmp_path, ckpt_every=2,
+              lr=3e-3, fail_at=3, log_every=1)
+    assert latest_step(tmp_path) == 2
     out = train(cfg, mesh, SHAPE, steps=14, ckpt_dir=tmp_path, ckpt_every=4,
                 lr=3e-3, log_every=1)
     hist = out["history"]
-    assert hist[0]["step"] == 4            # resumed, not restarted
-    first, last = hist[0]["loss"], hist[-1]["loss"]
-    assert np.isfinite(first) and np.isfinite(last)
-    assert last < first, (first, last)     # loss decreases on synthetic data
+    assert hist[0]["step"] == 2            # resumed, not restarted
+    losses = [h["loss"] for h in hist]
+    assert all(np.isfinite(l) for l in losses), losses
+    # progress = the best post-resume loss beats the resume point (a
+    # single last-step sample is noise-dominated at the floor)
+    assert min(losses[1:]) < losses[0], losses
 
 
 def test_compression_error_feedback_converges():

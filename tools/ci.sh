@@ -1,20 +1,23 @@
 #!/usr/bin/env bash
-# One-command verify: tier-1 tests + example smoke runs.
-#   bash tools/ci.sh            # full
-#   bash tools/ci.sh --fast    # tests only
+# One-command verify.
+#   bash tools/ci.sh            # fast tier: tests minus the slow markers
+#   bash tools/ci.sh --all      # everything: full pytest + example smokes
+#   bash tools/ci.sh --fast     # alias of the default (kept for muscle memory)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
-python -m pytest -q
-
-if [[ "${1:-}" != "--fast" ]]; then
+if [[ "${1:-}" == "--all" ]]; then
+  echo "== tier-1: pytest (full) =="
+  python -m pytest -q
   echo "== smoke: examples/quickstart.py =="
   python examples/quickstart.py
   echo "== smoke: examples/histore_cluster.py (8 host devices) =="
   python examples/histore_cluster.py
+else
+  echo "== tier-1: pytest (fast tier; --all for the multi-minute batteries) =="
+  python -m pytest -q -m "not slow"
 fi
 
 echo "CI OK"
