@@ -2,13 +2,25 @@
 sorted from hash) vs data amount, and degraded performance under primary /
 backup failure (normalised to healthy HiStore).
 
-Two modes: the single-group mode times the index-group rebuild primitives;
-the distributed mode (needs >= 3 devices, e.g.
+Three modes: the single-group mode times the index-group rebuild
+primitives; the distributed mode (needs >= 3 devices, e.g.
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m
 benchmarks.run fig13``) times the full kvstore kill/recover protocol —
 wipe-on-fail, hash-from-replica rebuild, replica re-clone — plus degraded
-GET latency through the client."""
+GET latency through the client; the value-migration mode times the data
+plane: degraded-GET latency while values are stranded off-home (2-hop,
+``GetResult.hops == 2``) vs post-migration latency (1-hop), the
+migration pass itself, and GC slot-reuse throughput (put+delete churn
+past the shard capacity that the seed's ring cursor could not survive).
+
+Standalone for CI smoke runs (tools/ci.sh --bench-smoke):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      python -m benchmarks.fig13_recovery --smoke --json out.json
+"""
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +29,8 @@ import numpy as np
 from benchmarks.common import CFG, KD, timeit, uniform_keys
 from repro.core import index_group as ig
 from repro.core import kvstore as kv
-from repro.core.client import DistributedBackend, HiStoreClient
+from repro.core.client import (DistributedBackend, HiStoreClient,
+                               LocalBackend)
 
 
 def run(report, batch=4096):
@@ -100,3 +113,108 @@ def run_distributed(report, n=20_000):
            seconds=round(t_rec, 4))
     report("fig14_dist_get_primary_fail", n=n, devices=G,
            normalized=round(t_get / t_get_pf, 3))
+
+    run_value_migration(report, n=n)
+
+
+def run_value_migration(report, n=20_000):
+    """Value-plane timings: degraded-GET (2-hop fetch) vs post-migration
+    (1-hop) latency, the background migration pass, and GC slot-reuse
+    throughput."""
+    G = len(jax.devices())
+    if G < 3:
+        report("fig13_value_migration",
+               skipped=f"needs >=3 devices, have {G}")
+        _gc_slot_reuse(report)
+        return
+    from repro.configs.histore import scaled
+    cfg = scaled(log_capacity=1 << 14, async_apply_batch=4096)
+    mesh = jax.make_mesh((G,), (kv.AXIS,))
+    backend = DistributedBackend(mesh, cfg, max(4096, 4 * n // G),
+                                 capacity_q=256)
+    # knob off: measure the 2-hop phase migration normally elides
+    client = HiStoreClient(backend, batch_quantum=64 * G,
+                           migrate_on_recover=False)
+    keys = uniform_keys(n, seed=41, space=10 ** 8)
+    assert client.put(keys, np.arange(n)).all_ok
+    client.drain()
+    dead = 1
+    own = np.asarray(kv.owner_group(jnp.asarray(keys, KD), G))
+    dk = keys[own == dead]
+    client.fail_server(dead)
+    # degraded overwrites strand the values on the temporary primary
+    assert client.put(dk, np.arange(len(dk)) + 1).all_ok
+    client.recover_server(dead)
+    probe = dk[: min(len(dk), 16 * G)]
+    t2, r2 = timeit(lambda: client.get(probe), iters=3)
+    hops2 = float(np.asarray(r2.hops).mean())
+    t0 = time.perf_counter()
+    moved = client.migrate()
+    t_mig = time.perf_counter() - t0
+    t1, r1 = timeit(lambda: client.get(probe), iters=3)
+    hops1 = float(np.asarray(r1.hops).mean())
+    report("fig13_degraded_get_second_hop", n=n, devices=G,
+           us_per_op=t2 / len(probe) * 1e6, mean_hops=round(hops2, 3))
+    report("fig13_post_migration_get", n=n, devices=G,
+           us_per_op=t1 / len(probe) * 1e6, mean_hops=round(hops1, 3))
+    report("fig13_value_migration", n=n, devices=G, moved=moved,
+           seconds=round(t_mig, 4),
+           speedup_2hop_vs_1hop=round(t2 / t1, 3))
+    _gc_slot_reuse(report)
+
+
+def _gc_slot_reuse(report, capacity=2048, batch=512, cycles=10):
+    """Allocator throughput under churn: put+delete cycles whose
+    cumulative allocations exceed the shard capacity several times over —
+    the workload the seed's monotone ring cursor wrap-corrupted on."""
+    from repro.configs.histore import scaled
+    cfg = scaled(log_capacity=1 << 14, async_apply_batch=4096)
+    client = HiStoreClient(LocalBackend(capacity, cfg), batch_quantum=batch)
+    warm = uniform_keys(batch, seed=43)
+    client.put(warm, np.arange(batch))
+    client.delete(warm)
+    t0 = time.perf_counter()
+    for i in range(cycles):
+        kk = uniform_keys(batch, seed=100 + i)
+        assert client.put(kk, np.arange(batch)).all_ok
+        assert bool(client.delete(kk).ok.all())
+    dt = time.perf_counter() - t0
+    report("fig13_gc_slot_reuse", capacity=capacity,
+           cumulative_allocs=(cycles + 1) * batch,
+           us_per_op=dt / (2 * cycles * batch) * 1e6,
+           ops_per_sec=int(2 * cycles * batch / dt))
+
+
+def main(argv=None) -> int:
+    """Standalone entry (CI bench smoke): run the distributed recovery +
+    value-migration benches for a few steps and dump JSON."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write collected rows as JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help="distributed-mode only, small n (CI tier)")
+    args = ap.parse_args(argv)
+    rows = []
+
+    def report(name, **kw):
+        rows.append({"name": name, **kw})
+        print(name, kw, flush=True)
+
+    if args.smoke:
+        run_distributed(report, n=4_000)
+    else:
+        run(report)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2, default=str)
+        print(f"wrote {args.json} ({len(rows)} rows)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main(sys.argv[1:]))

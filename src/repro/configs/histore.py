@@ -27,6 +27,10 @@ class HiStoreConfig:
     log_capacity: int = 1 << 16    # per-group append-only log entries
     # value store ----------------------------------------------------------
     value_words: int = 4           # 32 B values = 4 x int64 words
+    n_value_replicas: int = 1      # mirror copies of each data shard; data
+                                   # servers are their own failure domain
+                                   # (paper §2), so value replication is
+                                   # independent of n_backups
     # distribution ---------------------------------------------------------
     groups_per_device: int = 1
     # batching -------------------------------------------------------------

@@ -20,10 +20,15 @@ Responsibilities the old per-layer surfaces pushed onto every caller:
     split into ``max_batch`` chunks;
   * overflow push-back — capacity overflow (exchange-buffer ok=False, the
     paper's RPC queue-full) becomes a bounded client-side retry loop with
-    async-apply drains in between, instead of a silently-surfaced flag;
+    async-apply + GC-flush drains in between, instead of a
+    silently-surfaced flag;
   * async-apply scheduling — the backups' log->sorted merges run every
     ``apply_every_n_ops`` mutating ops (the paper's worker threads),
-    instead of callers hand-invoking drains.
+    instead of callers hand-invoking drains;
+  * migration policy — ``migrate_on_recover`` (default on) runs the
+    background value migration after every recovery, restoring one-RTT
+    GETs (``GetResult.hops`` back to 1); turn it off to measure the
+    second-hop fetch cost the paper's data plane would otherwise pay.
 
 Backends implement the small protocol below; see DESIGN.md §Client API for
 the migration table from the old surfaces.
@@ -36,6 +41,7 @@ from typing import Optional, Protocol, Tuple, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro.core import data_plane as dpl
 from repro.core import index_group as ig
 from repro.core import kvstore as kv
 from repro.core import log as lg
@@ -53,7 +59,7 @@ class Backend(Protocol):
     routing capacity).  ``put`` returns (acked, addrs, replicas) and
     ``delete`` (acked, found, replicas) so the client can retry push-back
     without re-writing and report replication honestly; ``get`` returns
-    (addrs, found, accesses, vals, routed)."""
+    (addrs, found, accesses, vals, routed, hops)."""
 
     batch_multiple: int   # padded batch sizes must divide by this
     value_words: int      # payload width W of values [Q, W]
@@ -71,15 +77,30 @@ class Backend(Protocol):
 # ---------------------------------------------------------------------------
 # Local backend: one index group + the node's data shard, jitted ops
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnums=(0, 7))
-def _local_put(cfg, g, dvals, dfill, keys, vals, valid, backups_alive):
-    dcap = dvals.shape[0]
-    off = jnp.cumsum(valid.astype(I32)) - 1
-    slot = jnp.where(valid, (dfill + off) % dcap, dcap)
-    dvals = dvals.at[slot].set(vals, mode="drop")
-    addrs = jnp.where(valid, slot, -1).astype(I32)
-    g, ok = ig.put(g, keys, addrs, cfg, valid, backups_alive=backups_alive)
-    return g, dvals, dfill + valid.astype(I32).sum(), ok, addrs
+@functools.partial(jax.jit, static_argnums=(0, 7, 8))
+def _local_put(cfg, g, vals, used, keys, vs, valid, backups_alive,
+               primary_alive):
+    dcap = vals.shape[0]
+    # one slot per key per batch (last writer wins, like the hash insert);
+    # overwrites update their old slot in place — the data-server GC —
+    # so the shard reuses capacity instead of wrapping onto live slots
+    winner = dpl.winner_mask(keys, valid)
+    old_a, old_f = ig.owner_addr_probe(g, keys, cfg, primary_alive)
+    inplace = winner & old_f & (old_a >= 0) & (old_a < dcap)
+    used, slot, aok = dpl.alloc(used, winner & ~inplace)
+    wslot = jnp.where(inplace, old_a, jnp.where(aok, slot, dcap))
+    wmask = inplace | aok
+    vals = vals.at[jnp.where(wmask, wslot, dcap)].set(vs, mode="drop")
+    addr_lane = jnp.where(wmask, wslot, -1).astype(I32)
+    addrs = dpl.spread_winner_addr(keys, valid, winner, addr_lane)
+    landed = valid & (addrs >= 0)   # shard full -> un-acked, client retries
+    g, ok, nrep = ig.put(g, keys, addrs, cfg, landed,
+                         backups_alive=backups_alive, with_nrep=True)
+    # un-acked fresh allocations roll back ONLY when no backup log
+    # recorded the entry (same nrep == 0 rule as the distributed body: a
+    # slot a replica log references must never return to the allocator)
+    used = dpl.free_slots(used, slot, aok & ~ok & (nrep == 0))
+    return g, vals, used, ok & landed, addrs, nrep
 
 
 @functools.partial(jax.jit, static_argnums=(0, 5))
@@ -92,29 +113,40 @@ def _local_get(cfg, g, dvals, keys, valid, primary_alive):
         [dvals, jnp.zeros((1,) + dvals.shape[1:], dvals.dtype)])
     vals = padded[jnp.clip(slot, 0, dcap)]
     return (jnp.where(found, addr, -1).astype(I32), found,
-            jnp.where(valid, acc, 0), vals, valid)
+            jnp.where(valid, acc, 0), vals, valid,
+            valid.astype(I32))      # single shard: every read is one hop
 
 
-@functools.partial(jax.jit, static_argnums=(0, 4, 5))
-def _local_delete(cfg, g, keys, valid, backups_alive, primary_alive):
+@functools.partial(jax.jit, static_argnums=(0, 5, 6))
+def _local_delete(cfg, g, used, keys, valid, backups_alive, primary_alive):
+    # data-server GC: a committed DELETE frees its value slot (the
+    # returned found is already gated on the log acks; winner-deduped so
+    # a double-delete within one batch frees exactly once)
+    winner = dpl.winner_mask(keys, valid)
+    old_a, old_f = ig.owner_addr_probe(g, keys, cfg, primary_alive)
+    dcap = used.shape[0]
     g, found = ig.delete(g, keys, cfg, valid, backups_alive=backups_alive,
                          primary_alive=primary_alive)
-    return g, found & valid
+    freed = winner & found & old_f & (old_a >= 0) & (old_a < dcap)
+    used = dpl.free_slots(used, old_a, freed)
+    return g, used, found & valid
 
 
 class LocalBackend:
     """One index group (1 hash + n_backups sorted replicas + logs) plus the
-    value shard a single-node deployment owns.  The client's routing hint:
-    liveness is tracked host-side (the paper's client knows which servers
-    are up), so healthy GETs compile the one-sided hash path only."""
+    value shard a single-node deployment owns — slot-allocated and GC'd by
+    the data plane's bitmap (data_plane.alloc/free_slots).  The client's
+    routing hint: liveness is tracked host-side (the paper's client knows
+    which servers are up), so healthy GETs compile the one-sided hash path
+    only."""
 
     def __init__(self, capacity: int, cfg, value_words: Optional[int] = None):
         self.cfg = cfg
         self.capacity = capacity
         self.group = ig.create(capacity, cfg)
         self.value_words = value_words or cfg.value_words
-        self.dvals = jnp.zeros((capacity, self.value_words), I32)
-        self.dfill = jnp.zeros((), I32)
+        self.vals = jnp.zeros((capacity, self.value_words), I32)
+        self.used = jnp.zeros((capacity,), bool)
         self.batch_multiple = 1
         self.max_mutation_batch = cfg.log_capacity
         self._primary_alive = True
@@ -135,14 +167,15 @@ class LocalBackend:
         self._ensure_log_room(n)
         self._pending_bound += n
         ba = tuple(self._backups_alive)
-        self.group, self.dvals, self.dfill, ok, addrs = _local_put(
-            self.cfg, self.group, self.dvals, self.dfill, keys, vals, valid,
-            ba)
-        return ok, addrs, ok.astype(I32) * sum(ba)
+        hint = True if self._primary_alive else None
+        self.group, self.vals, self.used, ok, addrs, nrep = _local_put(
+            self.cfg, self.group, self.vals, self.used, keys, vals, valid,
+            ba, hint)
+        return ok, addrs, nrep
 
     def get(self, keys, valid):
         hint = True if self._primary_alive else None
-        return _local_get(self.cfg, self.group, self.dvals, keys, valid,
+        return _local_get(self.cfg, self.group, self.vals, keys, valid,
                           hint)
 
     def delete(self, keys, valid):
@@ -151,8 +184,8 @@ class LocalBackend:
         self._pending_bound += n
         ba = tuple(self._backups_alive)
         hint = True if self._primary_alive else None
-        self.group, found = _local_delete(self.cfg, self.group, keys, valid,
-                                          ba, hint)
+        self.group, self.used, found = _local_delete(
+            self.cfg, self.group, self.used, keys, valid, ba, hint)
         # room is guaranteed above (chunks capped at log_capacity + the
         # up-front drain), so every valid lane is acked this round
         return valid, found, valid.astype(I32) * sum(ba)
@@ -173,6 +206,17 @@ class LocalBackend:
 
     def pending_ops(self) -> int:
         return int(lg.pending_count(self.group.blogs).max())
+
+    def migrate_values(self) -> int:
+        return 0   # one shard: every value is already home
+
+    def fail_data_server(self, server: int = 0):
+        raise NotImplementedError(
+            "LocalBackend owns a single unreplicated value shard — no "
+            "surviving copy could exist; data-server failures are "
+            "modelled by DistributedBackend (cfg.n_value_replicas)")
+
+    recover_data_server = fail_data_server
 
     def fail_server(self, server: int = 0):
         self.group = ig.fail(self.group, server)
@@ -195,7 +239,8 @@ class LocalBackend:
 # ---------------------------------------------------------------------------
 class DistributedBackend:
     """Wraps the kvstore shard_map ops: routed two-sided PUT/DELETE with
-    ppermute log replication, one-sided GET, all_gather'd SCAN."""
+    ppermute log replication, one-sided GET with second-hop fetch,
+    all_gather'd SCAN, plus the value plane's GC flush and migration."""
 
     def __init__(self, mesh, cfg, capacity_per_group: int = 4096, *,
                  capacity_q: int = 64, scan_limit: int = 128):
@@ -210,7 +255,8 @@ class DistributedBackend:
         self.batch_multiple = self.G
         self.value_words = cfg.value_words
         self.max_mutation_batch = cfg.log_capacity
-        self._dead: set[int] = set()   # host-side liveness view
+        self._dead: set[int] = set()        # index servers masked dead
+        self._data_dead: set[int] = set()   # data servers masked dead
         self._pending_bound = 0        # host-side upper bound, no dev sync
 
     def _ensure_log_room(self, n: int):
@@ -221,18 +267,25 @@ class DistributedBackend:
         if self._pending_bound + n > self.cfg.log_capacity:
             self.drain()
 
+    def _degraded(self) -> bool:
+        return bool(self._dead or self._data_dead)
+
     def put(self, keys, vals, valid):
         n = int(valid.sum())
         self._ensure_log_room(n)
         self._pending_bound += n
-        self.store, ok, addrs, nrep = self.ops["put"](self.store, keys,
-                                                      vals, valid)
+        # healthy cluster -> the lean variant; any masked-dead server ->
+        # the variant with the old-slot replica probe (frees stay exact at
+        # temporary primaries) and the off-dead-shard value displacement
+        op = self.ops["put_degraded" if self._degraded() else "put"]
+        self.store, ok, addrs, nrep = op(self.store, keys, vals, valid)
         return ok, addrs, nrep
 
     def get(self, keys, valid):
         addrs, found, acc, vals, routed, val_ok = self.ops["get"](
             self.store, keys, valid)
         found = found & valid
+        hops = valid.astype(I32)
         # second hop (paper: the client reads the value from the data
         # server given the address): values written on another shard
         # during a degraded write are fetched by address; a fetch-overflow
@@ -242,7 +295,8 @@ class DistributedBackend:
             fvals, fok = self.ops["fetch"](self.store, addrs, need)
             vals = jnp.where(need[:, None], fvals, vals)
             routed = routed & (~need | fok)
-        return addrs, found, acc, vals, routed & valid
+            hops = hops + need.astype(I32)
+        return addrs, found, acc, vals, routed & valid, hops
 
     def delete(self, keys, valid):
         n = int(valid.sum())
@@ -251,7 +305,7 @@ class DistributedBackend:
         # healthy cluster -> probe-free variant (all requests land on true
         # primaries); any masked-dead server -> the degraded variant that
         # answers found at temporary primaries via the replica probe
-        op = self.ops["delete_degraded" if self._dead else "delete"]
+        op = self.ops["delete_degraded" if self._degraded() else "delete"]
         self.store, ok, found, nrep = op(self.store, keys, valid)
         return ok, found & valid, nrep
 
@@ -278,13 +332,37 @@ class DistributedBackend:
         self._pending_bound = max(
             0, self._pending_bound - self.cfg.async_apply_batch)
 
+    def gc_round(self):
+        """One routed flush of the pending free queues (slots freed on a
+        remote shard travel home and become allocatable)."""
+        self.store = self.ops["gc"](self.store)
+
+    def pending_frees(self) -> int:
+        return int(lg.pending_count(self.store.data.freeq).sum())
+
     def drain(self):
         while self.pending_ops() > 0:
             self.apply_async()
         self._pending_bound = 0
+        # flush the free queues until empty or stuck (frees addressed to a
+        # masked-dead data shard stay queued; the recovery sweep reclaims
+        # them if the queue itself is lost)
+        prev = -1
+        while True:
+            cur = self.pending_frees()
+            if cur == 0 or cur == prev:
+                break
+            prev = cur
+            self.gc_round()
 
     def pending_ops(self) -> int:
         return int(jnp.max(self.store.blog.tail - self.store.blog.applied))
+
+    def migrate_values(self) -> int:
+        """Background value migration (host-side): move degraded-write
+        strays home and patch index addresses.  Returns values moved."""
+        self.store, moved = kv.migrate_values(self.store, self.cfg)
+        return moved
 
     def fail_server(self, server: int):
         # wiping needs a surviving copy to exist; a 1-device mesh folds
@@ -295,6 +373,15 @@ class DistributedBackend:
     def recover_server(self, server: int):
         self.store = kv.recover_server(self.store, server, self.cfg)
         self._dead.discard(server)
+
+    def fail_data_server(self, server: int):
+        self.store = kv.fail_data_server(self.store, server,
+                                         wipe=self.G > 1)
+        self._data_dead.add(server)
+
+    def recover_data_server(self, server: int):
+        self.store = kv.recover_data_server(self.store, server, self.cfg)
+        self._data_dead.discard(server)
 
 
 # ---------------------------------------------------------------------------
@@ -307,7 +394,8 @@ class HiStoreClient:
 
     def __init__(self, backend, *, batch_quantum: int = 64,
                  max_batch: int = 16384, max_retries: int = 8,
-                 apply_every_n_ops: Optional[int] = None):
+                 apply_every_n_ops: Optional[int] = None,
+                 migrate_on_recover: bool = True):
         self.backend = backend
         m = max(getattr(backend, "batch_multiple", 1), 1)
         self._multiple = m
@@ -326,9 +414,10 @@ class HiStoreClient:
             self.max_batch = min(self.max_batch, cap)
         self.max_retries = max_retries
         self.apply_every_n_ops = apply_every_n_ops
+        self.migrate_on_recover = migrate_on_recover
         self._mutations_since_apply = 0
         self.stats = {"puts": 0, "gets": 0, "deletes": 0, "scans": 0,
-                      "retries": 0, "applies": 0}
+                      "retries": 0, "applies": 0, "migrated": 0}
 
     # -- public ops --------------------------------------------------------
     def put(self, keys, values=None) -> PutResult:
@@ -358,7 +447,7 @@ class HiStoreClient:
             W = getattr(self.backend, "value_words", 1)
             return GetResult(jnp.zeros((0,), I32), jnp.zeros((0,), bool),
                              jnp.zeros((0,), I32), jnp.zeros((0, W), I32),
-                             jnp.zeros((0,), bool))
+                             jnp.zeros((0,), bool), jnp.zeros((0,), I32))
         outs = [self._get_chunk(keys[s:s + self.max_batch])
                 for s in range(0, q, self.max_batch)]
         self.stats["gets"] += q
@@ -407,11 +496,29 @@ class HiStoreClient:
         """Apply ALL pending log entries (SCAN serializability barrier)."""
         self.backend.drain()
 
+    def migrate(self) -> int:
+        """Run the background value migration now (degraded-write strays
+        move home; GETs drop back to hops == 1).  Returns values moved."""
+        fn = getattr(self.backend, "migrate_values", None)
+        moved = fn() if fn else 0
+        self.stats["migrated"] += moved
+        return moved
+
     def fail_server(self, server: int) -> None:
         self.backend.fail_server(server)
 
     def recover_server(self, server: int) -> None:
         self.backend.recover_server(server)
+        if self.migrate_on_recover:
+            self.migrate()
+
+    def fail_data_server(self, server: int) -> None:
+        self.backend.fail_data_server(server)
+
+    def recover_data_server(self, server: int) -> None:
+        self.backend.recover_data_server(server)
+        if self.migrate_on_recover:
+            self.migrate()
 
     # -- batching / retry internals ---------------------------------------
     def _as_keys(self, keys):
@@ -443,6 +550,15 @@ class HiStoreClient:
         valid = jnp.zeros((p,), bool).at[:q].set(True)
         return kp, valid
 
+    def _make_room(self):
+        """Push-back response between retry rounds: one log->sorted merge
+        (frees backup-log ring room) and one GC flush (frees value slots
+        still queued on a remote shard)."""
+        self.backend.apply_async()
+        gc = getattr(self.backend, "gc_round", None)
+        if gc:
+            gc()
+
     def _put_chunk(self, keys, vals):
         q = keys.shape[0]
         kp, pending = self._pad(keys)
@@ -463,8 +579,7 @@ class HiStoreClient:
                 break
             retries += 1
             self.stats["retries"] += 1
-            # push-back: make room (log->sorted merges) before resending
-            self.backend.apply_async()
+            self._make_room()
         return ok_all[:q], addr_all[:q], rep_all[:q], retries
 
     def _delete_chunk(self, keys):
@@ -485,7 +600,7 @@ class HiStoreClient:
                 break
             retries += 1
             self.stats["retries"] += 1
-            self.backend.apply_async()
+            self._make_room()
         return acked[:q], found_all[:q], rep_all[:q], retries
 
     def _get_chunk(self, keys):
@@ -494,16 +609,19 @@ class HiStoreClient:
         addr_all = jnp.full(kp.shape, -1, I32)
         found_all = jnp.zeros_like(pending)
         acc_all = jnp.zeros(kp.shape, I32)
+        hops_all = jnp.zeros(kp.shape, I32)
         vals_all = None
         retries = 0
         while True:
-            addrs, found, acc, vals, routed = self.backend.get(kp, pending)
+            addrs, found, acc, vals, routed, hops = self.backend.get(
+                kp, pending)
             if vals_all is None:
                 vals_all = jnp.zeros_like(vals)
             newly = pending & routed
             addr_all = jnp.where(newly, addrs, addr_all)
             found_all = found_all | (newly & found)
             acc_all = jnp.where(newly, acc, acc_all)
+            hops_all = jnp.where(newly, hops, hops_all)
             vals_all = jnp.where(newly[:, None], vals, vals_all)
             pending = pending & ~routed
             if not bool(pending.any()) or retries >= self.max_retries:
@@ -513,7 +631,7 @@ class HiStoreClient:
         # lanes still pending exhausted the retry budget: reported as
         # un-routed so push-back is distinguishable from a genuine miss
         return (addr_all[:q], found_all[:q], acc_all[:q], vals_all[:q],
-                (~pending)[:q])
+                (~pending)[:q], hops_all[:q])
 
     def _note_mutations(self, n: int):
         if not self.apply_every_n_ops:

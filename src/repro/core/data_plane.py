@@ -1,0 +1,464 @@
+"""Data-server subsystem: the value plane of the store (paper §2).
+
+HiStore deliberately separates index servers from data servers: the index
+plane (hash table + sorted replicas + logs, `index_group.py`/`kvstore.py`)
+answers *where* a value lives, the data plane owns the bytes.  This module
+is the data plane, end to end:
+
+  * **Slot allocator + GC** — every data shard tracks its slots with a
+    ``used`` bitmap (fixed-shape JAX state, shard_map-safe).  PUT allocates
+    the lowest free slots; DELETE and overwrite free the old slot (the
+    paper's data-server GC), so a long-running store reuses capacity
+    instead of wrap-corrupting once cumulative puts exceed it.  Frees that
+    target a *remote* shard (values written on a temporary primary during
+    a degraded write) are queued in a per-device free queue — an
+    `UpdateLog` ring reusing the log machinery — and flushed home by the
+    routed ``gc`` op.
+  * **Value replication** — each shard is mirrored on the next
+    ``cfg.n_value_replicas`` devices (shifted layout, exactly like the
+    index backup logs: ``mirror[r, p]`` holds the copy of shard
+    ``(p - r - 1) mod G``).  `fail_data_server` wipes a device's shard +
+    hosted mirrors, making the value plane a genuine failure domain
+    symmetric to the index one; `recover_data_server` rebuilds from a
+    surviving mirror and mark-sweeps the allocator against the live index.
+  * **Background value migration** — `migrate_values` moves values written
+    off-home during degraded writes back to their owner group's shard and
+    patches the index addresses (hash + every sorted replica), restoring
+    one-RTT GETs after recovery (second-hop fetch elision):
+    ``GetResult.hops`` drops from 2 back to 1.
+
+The shard_map-side helpers (`alloc`, `free_slots`, the mirror push) are
+called from the kvstore op bodies; the control-plane passes
+(`fail_data_server` / `recover_data_server` / `migrate_values` / `sweep` /
+`value_slot_audit`) are host-side and eager, mirroring the index plane's
+failure protocol.  This module never imports `kvstore` — it only touches
+the store pytree's fields — so the dependency points one way.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hash_index as hix
+from repro.core import log as lg
+from repro.core import sorted_index as six
+
+I32 = jnp.int32
+
+
+class DataPlane(NamedTuple):
+    vals: jnp.ndarray    # [G, dcap, W]     primary copy of each shard
+    used: jnp.ndarray    # [G, dcap] bool   slot allocator bitmap
+    mirror: jnp.ndarray  # [Rv, G, dcap, W] shifted layout: mirror[r, p]
+    #                      holds the copy of shard (p - r - 1) mod G
+    freeq: lg.UpdateLog  # leaves [G, fq]   pending remote frees (addr ring)
+    alive: jnp.ndarray   # [G] bool         data-server liveness
+
+
+def create(G: int, dcap: int, cfg, key_dt=None) -> DataPlane:
+    rep = lambda t, n: jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), t)
+    return DataPlane(
+        vals=jnp.zeros((G, dcap, cfg.value_words), I32),
+        used=jnp.zeros((G, dcap), bool),
+        mirror=jnp.zeros((cfg.n_value_replicas, G, dcap, cfg.value_words),
+                         I32),
+        freeq=rep(lg.create(cfg.log_capacity, key_dt), G),
+        alive=jnp.ones((G,), bool),
+    )
+
+
+def sharding(mesh, axis: str):
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    return DataPlane(
+        vals=NamedSharding(mesh, P(axis)),
+        used=NamedSharding(mesh, P(axis)),
+        mirror=NamedSharding(mesh, P(None, axis)),
+        freeq=lg.UpdateLog(*[NamedSharding(mesh, P(axis))] * 5),
+        alive=NamedSharding(mesh, P()),
+    )
+
+
+def specs(axis: str):
+    from jax.sharding import PartitionSpec as P
+
+    return DataPlane(
+        vals=P(axis), used=P(axis), mirror=P(None, axis),
+        freeq=lg.UpdateLog(*[P(axis)] * 5), alive=P())
+
+
+# ---------------------------------------------------------------------------
+# Slot allocator (single-shard, fixed-shape; shard_map-safe)
+# ---------------------------------------------------------------------------
+def alloc(used, want):
+    """Allocate one slot per ``want`` lane from the lowest free indices.
+    Returns (used', slot [n] int32 — cap on failure, ok [n]).  ok=False
+    means the shard is full: the caller must NOT record the write (the
+    push-back the client retries after a drain/GC round)."""
+    cap = used.shape[0]
+    nfree = (~used).sum()
+    order = jnp.argsort(used, stable=True)       # free slot indices first
+    rank = jnp.cumsum(want.astype(I32)) - 1
+    ok = want & (rank < nfree)
+    slot = jnp.where(ok, order[jnp.clip(rank, 0, cap - 1)], cap)
+    return used.at[slot].set(True, mode="drop"), slot.astype(I32), ok
+
+
+def free_slots(used, slots, mask):
+    """Clear the allocator bits of ``slots`` where ``mask`` (local free)."""
+    cap = used.shape[0]
+    return used.at[jnp.where(mask, slots, cap)].set(False, mode="drop")
+
+
+def winner_mask(keys, valid):
+    """Last-occurrence-per-key dedupe over a batch: exactly one slot is
+    allocated (and one old slot freed) per key per batch; batch order is
+    arrival order, so the winner is the sequential last writer — the same
+    last-writer-wins rule `hash_index.insert` applies internally."""
+    return hix.dedupe_last_valid(keys, valid)
+
+
+def spread_winner_addr(rk, valid, winner, addr_lane):
+    """Give every lane of a duplicate-key group its winner's address, so
+    superseded lanes ack/log the same (key, addr) the index keeps
+    (last-writer-wins, matching `hash_index.insert`'s in-batch dedupe).
+    Lanes whose winner failed allocation get -1 (the whole group retries
+    together).  O(n^2) on the exchange-buffer width — small by design."""
+    same = (rk[None, :] == rk[:, None]) & valid[None, :] & valid[:, None]
+    pick = same & (winner & (addr_lane >= 0))[None, :]
+    cand = jnp.where(pick, addr_lane[None, :], -1)
+    return jnp.where(valid, cand.max(axis=1), -1).astype(I32)
+
+
+# ---------------------------------------------------------------------------
+# Host-side control plane (eager, like kvstore's failure protocol)
+# ---------------------------------------------------------------------------
+def drain_pair(srt, blog, cfg):
+    """Eagerly apply ALL pending entries of one (sorted, log) pair — THE
+    drain primitive every control-plane pass shares (kvstore's recovery
+    and parity audit delegate here too, so the semantics cannot drift)."""
+    while int(lg.pending_count(blog)) > 0:
+        keys, addrs, ops, blog = lg.take_pending(blog, cfg.async_apply_batch)
+        srt = six.merge(srt, keys, addrs, ops)
+    return srt, blog
+
+
+def drain_all_logs(store, cfg):
+    """Eagerly apply every pending backup-log entry of every replica —
+    the serializability barrier in front of every control-plane pass
+    (audit, sweep, migrate, recover)."""
+    if int(jnp.max(lg.pending_count(store.blog))) == 0:
+        return store        # already drained: one sync instead of R*G
+    R = int(store.blog.tail.shape[0])
+    G = int(store.alive.shape[0])
+    bsorted, blog = store.bsorted, store.blog
+    for r in range(R):
+        for h in range(G):
+            srt = jax.tree.map(lambda a: a[r, h], bsorted)
+            one = jax.tree.map(lambda a: a[r, h], blog)
+            srt, one = drain_pair(srt, one, cfg)
+            bsorted = jax.tree.map(
+                lambda f, v, r=r, h=h: f.at[r, h].set(v), bsorted, srt)
+            blog = jax.tree.map(
+                lambda f, v, r=r, h=h: f.at[r, h].set(v), blog, one)
+    return store._replace(bsorted=bsorted, blog=blog)
+
+
+def _group_items(store, cfg, g: int):
+    """Live (keys, addrs) of group ``g`` from the authoritative structure:
+    the hash table when g's index server is alive, else the first live
+    (drained) sorted replica.  Call on a drained store."""
+    G = int(store.alive.shape[0])
+    R = int(store.blog.tail.shape[0])
+    alive = np.asarray(store.alive)
+    srt0 = None
+    for r in range(R):
+        h = (g + r + 1) % G
+        if alive[h] or G == 1:
+            srt0 = jax.tree.map(lambda a: a[r, h], store.bsorted)
+            break
+    if alive[g]:
+        hs = jax.tree.map(lambda a: a[g], store.hash)
+        if srt0 is not None:
+            keys, addrs, valid = six.items(srt0)
+            k = np.asarray(keys)[np.asarray(valid)]
+            a_h, f_h, _ = hix.lookup(hs, keys, cfg)
+            a = np.asarray(a_h)[np.asarray(valid)]
+            # replica keys + hash addrs: keys for migration patching,
+            # addresses straight from the authority
+            if int(hix.n_items(hs)) == len(k) and np.asarray(f_h)[
+                    np.asarray(valid)].all():
+                return k, a
+        # replicas lost or out of sync: fall back to the raw hash slots
+        # (addresses only — no keys recoverable)
+        vm = np.asarray(hix.valid_mask(hs))
+        return None, np.asarray(hs.addr)[vm]
+    if srt0 is None:
+        return np.zeros((0,), np.int64), np.zeros((0,), np.int32)
+    keys, addrs, valid = six.items(srt0)
+    v = np.asarray(valid)
+    return np.asarray(keys)[v], np.asarray(addrs)[v]
+
+
+def _pending_free_addrs(freeq) -> np.ndarray:
+    """All addresses sitting in the per-device free queues (host view)."""
+    keys = np.asarray(freeq.keys)
+    addrs = np.asarray(freeq.addrs)
+    tail = np.asarray(freeq.tail)
+    applied = np.asarray(freeq.applied)
+    cap = keys.shape[1]
+    out = []
+    for d in range(keys.shape[0]):
+        n = int(tail[d] - applied[d])
+        idx = (int(applied[d]) + np.arange(n)) % cap
+        out.append(addrs[d][idx])
+    return np.concatenate(out) if out else np.zeros((0,), np.int32)
+
+
+def value_slot_audit(store, cfg) -> dict:
+    """Value-slot accounting audit (test/debug helper, eager):
+
+      * every live index address maps to an allocated slot on its shard
+        (``missing`` counts violations; shards masked data-dead are
+        skipped — their bitmap is lost until recovery);
+      * no address is referenced by two live index entries (``double``);
+      * no allocated slot is orphaned — unreferenced by any live entry
+        and not pending in a free queue (``orphaned``).
+    """
+    st = drain_all_logs(store, cfg)
+    G = int(st.alive.shape[0])
+    dcap = int(st.data.vals.shape[1])
+    dalive = np.asarray(st.data.alive)
+    used = np.asarray(st.data.used)
+    refs = []
+    for g in range(G):
+        _, addrs = _group_items(st, cfg, g)
+        refs.append(np.asarray(addrs, np.int64))
+    refs = np.concatenate(refs) if refs else np.zeros((0,), np.int64)
+    refs = refs[refs >= 0]
+    uniq, counts = np.unique(refs, return_counts=True)
+    double = int((counts > 1).sum())
+    shard = uniq // dcap
+    slot = uniq % dcap
+    live_shard = dalive[shard]
+    missing = int((~used[shard[live_shard], slot[live_shard]]).sum())
+    pending = set(int(a) for a in _pending_free_addrs(st.data.freeq))
+    referenced = set(int(a) for a in uniq)
+    orphaned = 0
+    for s in range(G):
+        if not dalive[s]:
+            continue
+        for j in np.nonzero(used[s])[0]:
+            a = s * dcap + int(j)
+            if a not in referenced and a not in pending:
+                orphaned += 1
+    return {"group": -1, "replica": -1, "holder": -1, "kind": "value_slots",
+            "live": int(len(uniq)), "pending_free": len(pending),
+            "double": double, "missing": missing, "orphaned": orphaned,
+            "agree": double == 0 and missing == 0 and orphaned == 0}
+
+
+def fail_data_server(store, dev: int, wipe: bool = True):
+    """Mask device ``dev``'s DATA server dead — a failure domain separate
+    from the index server (paper §2).  ``wipe`` (default) destroys the
+    shard, the mirrors it hosts, and its pending free queue, so recovery
+    must rebuild from surviving mirrors; leaked frees are reclaimed by the
+    recovery mark-sweep."""
+    data = store.data._replace(alive=store.data.alive.at[dev].set(False))
+    if wipe:
+        fq = data.freeq
+        empty = lg.clear(jax.tree.map(lambda a: a[dev], fq))
+        data = data._replace(
+            vals=data.vals.at[dev].set(0),
+            used=data.used.at[dev].set(False),
+            mirror=data.mirror.at[:, dev].set(0),
+            freeq=jax.tree.map(lambda f, v: f.at[dev].set(v), fq, empty))
+    return store._replace(data=data)
+
+
+def sweep(store, cfg):
+    """Mark-sweep GC reconciliation: on every live data shard, ``used``
+    becomes exactly the slot set referenced by live index entries; the
+    free queues are superseded and cleared.  Fixes slot leaks from free
+    queues lost in a data-server crash."""
+    st = drain_all_logs(store, cfg)
+    G = int(st.alive.shape[0])
+    dcap = int(st.data.vals.shape[1])
+    dalive = np.asarray(st.data.alive)
+    used = np.asarray(st.data.used).copy()
+    marked = np.zeros_like(used)
+    for g in range(G):
+        _, addrs = _group_items(st, cfg, g)
+        addrs = np.asarray(addrs, np.int64)
+        addrs = addrs[addrs >= 0]
+        marked[addrs // dcap, addrs % dcap] = True
+    for s in range(G):
+        if dalive[s]:
+            used[s] = marked[s]
+    data = st.data._replace(used=jnp.asarray(used),
+                            freeq=lg.clear(st.data.freeq))
+    return st._replace(data=data)
+
+
+def recover_data_server(store, dev: int, cfg):
+    """Recover device ``dev``'s data server (host-side control plane):
+
+      1. restore the shard from the first surviving mirror copy;
+      2. re-clone every mirror ``dev`` hosts from the live shard (or a
+         surviving mirror) of the same group;
+      3. mark-sweep the allocator bitmaps against the live index (also
+         reclaims frees leaked when the crash dropped ``dev``'s queue);
+      4. flip ``data.alive[dev]``.
+    """
+    G = int(store.alive.shape[0])
+    Rv = int(store.data.mirror.shape[0])
+    dalive = np.asarray(store.data.alive)
+    if bool(dalive[dev]):
+        return store
+    data = store.data
+    if G > 1:
+        src = None
+        for r in range(Rv):
+            h = (dev + r + 1) % G
+            if h != dev and dalive[h]:
+                src = (r, h)
+                break
+        if src is None:
+            raise ValueError(
+                f"data shard {dev}: no live mirror to rebuild from")
+        data = data._replace(
+            vals=data.vals.at[dev].set(data.mirror[src[0], src[1]]))
+        for r in range(Rv):
+            s = (dev - r - 1) % G
+            if s == dev:
+                continue
+            if dalive[s]:
+                data = data._replace(
+                    mirror=data.mirror.at[r, dev].set(data.vals[s]))
+            else:
+                for r2 in range(Rv):
+                    h2 = (s + r2 + 1) % G
+                    if h2 != dev and dalive[h2]:
+                        data = data._replace(mirror=data.mirror.at[
+                            r, dev].set(data.mirror[r2, h2]))
+                        break
+    data = data._replace(alive=data.alive.at[dev].set(True))
+    return sweep(store._replace(data=data), cfg)
+
+
+def migrate_values(store, cfg, owner_group_fn):
+    """Background value migration (second-hop fetch elision): move values
+    that live off their owner group's shard — stranded there by degraded
+    writes — back home, free the old slots, and patch the index addresses
+    (hash + every sorted replica).  Post-migration GETs are one-RTT again
+    (``GetResult.hops == 1``).
+
+    ``owner_group_fn(keys, G)`` is the routing hash (injected to keep this
+    module independent of kvstore).  Host-side and eager; run it after
+    recovery or on a maintenance schedule.  Returns (store, n_moved)."""
+    st = drain_all_logs(store, cfg)
+    G = int(st.alive.shape[0])
+    R = int(st.blog.tail.shape[0])
+    dcap = int(st.data.vals.shape[1])
+    Rv = int(st.data.mirror.shape[0])
+    dalive = np.asarray(st.data.alive)
+    data = st.data
+    # flush pending frees first so their slots are reusable for homing
+    used = np.asarray(data.used).copy()
+    kept_frees = []
+    for a in _pending_free_addrs(data.freeq):
+        s = int(a) // dcap
+        if dalive[s]:
+            used[s, int(a) % dcap] = False
+        else:
+            kept_frees.append(int(a))
+    freeq = lg.clear(data.freeq)
+    vals = np.asarray(data.vals).copy()
+    mirror = np.asarray(data.mirror).copy()
+    hash_t = st.hash
+    bsorted = st.bsorted
+    moved = 0
+    for g in range(G):
+        if not dalive[g]:
+            continue                     # home shard down: nothing to do yet
+        keys, addrs = _group_items(st, cfg, g)
+        if keys is None or len(keys) == 0:
+            continue
+        keys = np.asarray(keys)
+        addrs = np.asarray(addrs, np.int64)
+        own = np.asarray(owner_group_fn(jnp.asarray(keys), G))
+        stale = (addrs >= 0) & (addrs // dcap != g) & (own == g)
+        if not stale.any():
+            continue
+        mk, ma = keys[stale], addrs[stale]
+        # read each stranded value (shard copy, else a surviving mirror)
+        vv, okv = [], []
+        for a in ma:
+            s, j = int(a) // dcap, int(a) % dcap
+            if dalive[s]:
+                vv.append(vals[s, j])
+                okv.append(True)
+                continue
+            got = False
+            for r in range(Rv):
+                h = (s + r + 1) % G
+                if dalive[h]:
+                    vv.append(mirror[r, h, j])
+                    okv.append(True)
+                    got = True
+                    break
+            if not got:
+                vv.append(np.zeros((vals.shape[-1],), vals.dtype))
+                okv.append(False)        # unreachable: leave it in place
+        okv = np.asarray(okv)
+        free_home = np.nonzero(~used[g])[0]
+        n = min(int(okv.sum()), len(free_home))
+        take = np.nonzero(okv)[0][:n]    # partial migration if home is full
+        if n == 0:
+            continue
+        new_slots = free_home[:n]
+        mk, ma = mk[take], ma[take]
+        vv = np.stack([vv[i] for i in take])
+        vals[g, new_slots] = vv
+        used[g, new_slots] = True
+        for r in range(Rv):
+            h = (g + r + 1) % G
+            if dalive[h]:
+                mirror[r, h, new_slots] = vv
+        for a in ma:
+            s = int(a) // dcap
+            if dalive[s]:
+                used[s, int(a) % dcap] = False
+            else:
+                kept_frees.append(int(a))
+        new_addrs = jnp.asarray(g * dcap + new_slots, I32)
+        mkj = jnp.asarray(mk)
+        if bool(np.asarray(st.alive)[g]):
+            hs = jax.tree.map(lambda a: a[g], hash_t)
+            hs, _ = hix.insert(hs, mkj, new_addrs, cfg)   # in-place update
+            hash_t = jax.tree.map(lambda f, v: f.at[g].set(v), hash_t, hs)
+        for r in range(R):
+            h = (g + r + 1) % G
+            srt = jax.tree.map(lambda a: a[r, h], bsorted)
+            pos = jnp.searchsorted(srt.keys, mkj)
+            hit = srt.keys[jnp.clip(pos, 0, srt.keys.shape[0] - 1)] == mkj
+            tgt = jnp.where(hit, pos, srt.keys.shape[0])
+            srt = srt._replace(
+                addrs=srt.addrs.at[tgt].set(new_addrs, mode="drop"))
+            bsorted = jax.tree.map(
+                lambda f, v, r=r, h=h: f.at[r, h].set(v), bsorted, srt)
+        moved += n
+    if kept_frees:
+        ka = jnp.asarray(kept_frees, I32)
+        fq0 = jax.tree.map(lambda a: a[0], freeq)
+        fq0, _ = lg.append(fq0, jnp.zeros_like(ka, freeq.keys.dtype), ka,
+                           jnp.ones_like(ka, jnp.int8))
+        freeq = jax.tree.map(lambda f, v: f.at[0].set(v), freeq, fq0)
+    data = data._replace(vals=jnp.asarray(vals), used=jnp.asarray(used),
+                         mirror=jnp.asarray(mirror), freeq=freeq)
+    return st._replace(hash=hash_t, bsorted=bsorted, data=data), moved

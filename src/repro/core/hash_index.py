@@ -87,8 +87,9 @@ def lookup(idx: HashIndex, keys, cfg):
     return addr, found, n_acc
 
 
-def _dedupe_last(keys):
-    """Mask of entries that are the LAST occurrence of their key."""
+def dedupe_last(keys):
+    """Mask of entries that are the LAST occurrence of their key
+    (shared last-writer-wins dedupe: hash inserts, value-slot allocation)."""
     Q = keys.shape[0]
     pos = jnp.arange(Q)
     order = jnp.lexsort((pos, keys))
@@ -99,23 +100,32 @@ def _dedupe_last(keys):
     return live
 
 
+def dedupe_last_valid(keys, valid):
+    """dedupe_last over the valid lanes of a padded batch.  Invalid lanes
+    must not shadow a valid lane holding the same key in last-wins
+    dedupe: they get unique placeholder keys (< -1, outside the
+    application key space) before ranking."""
+    Q = keys.shape[0]
+    ph = -(jnp.arange(Q, dtype=keys.dtype) + 2)
+    return dedupe_last(jnp.where(valid, keys, ph)) & valid
+
+
 def insert(idx: HashIndex, keys, addrs, cfg, valid=None):
-    """Batched PUT/UPDATE.  Last-wins within the batch; updates in place if
-    the key exists, else appends at fill+rank.  Returns (idx, ok [Q])
-    where ok=False means the chain overflowed (caller surfaces the error,
-    mirroring the paper's add-bucket RPC).  ``valid=False`` lanes are
-    ignored entirely (padding lanes of a fixed-shape batch) and report
-    ok=True."""
+    """Batched PUT/UPDATE.  Last-wins within the batch; updates in place
+    if the key exists, else places at the bucket's first free slot —
+    tombstoned slots are REUSED before the virgin tail (the hash-side
+    slot GC: without it, delete + re-insert churn clogs the pre-linked
+    chains with tombstones long before the table is actually full).
+    Returns (idx, ok [Q]) where ok=False means the chain overflowed
+    (caller surfaces the error, mirroring the paper's add-bucket RPC).
+    ``valid=False`` lanes are ignored entirely (padding lanes of a
+    fixed-shape batch) and report ok=True."""
     nb, cs = idx.sig.shape
     Q = keys.shape[0]
     if valid is None:
-        live = _dedupe_last(keys)
+        live = dedupe_last(keys)
     else:
-        # invalid lanes must not shadow a valid lane holding the same key
-        # in last-wins dedupe: give them unique placeholder keys (< -1,
-        # outside the application key space) before ranking.
-        ph = -(jnp.arange(Q, dtype=keys.dtype) + 2)
-        live = _dedupe_last(jnp.where(valid, keys, ph)) & valid
+        live = dedupe_last_valid(keys, valid)
     sig, fp = sig_fp_of(keys)
     found, slot_flat, _, b, _ = _locate(idx, keys)
 
@@ -125,7 +135,16 @@ def insert(idx: HashIndex, keys, addrs, cfg, valid=None):
     addr_flat = addr_flat.at[jnp.where(upd, slot_flat, BIG)].set(
         addrs, mode="drop")
 
-    # append new keys: rank within bucket among accepted new entries
+    # free-slot map per bucket: tombstones (low offsets, reused first) and
+    # the virgin tail beyond fill
+    virgin = jnp.arange(cs)[None, :] >= idx.fill[:, None]        # [nb, cs]
+    freeslot = (idx.sig == TOMBSTONE) | virgin
+    free_order = jnp.argsort(~freeslot, axis=1, stable=True)
+    nfree = freeslot.sum(axis=1).astype(I32)
+
+    # place new keys: rank within bucket among accepted new entries, the
+    # rank-th entry takes the bucket's rank-th free slot (sort-based
+    # conflict-free schedule, as before)
     new = (~found) & live
     pos = jnp.arange(Q)
     b_for_sort = jnp.where(new, b, nb)          # push non-new to the end
@@ -133,17 +152,19 @@ def insert(idx: HashIndex, keys, addrs, cfg, valid=None):
     b_s = b_for_sort[order]
     start = jnp.searchsorted(b_s, b_s)          # first idx of each bucket run
     rank = jnp.arange(Q) - start
-    fill_s = idx.fill[jnp.clip(b_s, 0, nb - 1)]
-    off = fill_s + rank
-    ok_s = (b_s < nb) & (off < cs)
-    slot_s = jnp.where(ok_s, jnp.clip(b_s, 0, nb - 1) * cs + off, BIG)
+    b_c = jnp.clip(b_s, 0, nb - 1)
+    off = free_order[b_c, jnp.clip(rank, 0, cs - 1)]
+    ok_s = (b_s < nb) & (rank < nfree[b_c])
+    slot_s = jnp.where(ok_s, b_c * cs + off, BIG)
     sig_flat = idx.sig.reshape(-1)
     fp_flat = idx.fp.reshape(-1)
     sig_flat = sig_flat.at[slot_s].set(sig[order], mode="drop")
     fp_flat = fp_flat.at[slot_s].set(fp[order], mode="drop")
     addr_flat = addr_flat.at[slot_s].set(addrs[order], mode="drop")
-    fill = idx.fill.at[jnp.where(ok_s, b_s, nb)].add(
-        jnp.ones((Q,), I32), mode="drop")
+    # fill still counts the appended prefix (incl. tombstones): reused
+    # slots sit below it, virgin placements extend it
+    fill = idx.fill.at[jnp.where(ok_s, b_s, nb)].max(
+        (off + 1).astype(I32), mode="drop")
 
     ok = jnp.zeros((Q,), bool).at[order].set(ok_s)
     ok = ok | upd | ~live                        # dup-superseded entries: ok

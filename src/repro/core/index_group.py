@@ -62,24 +62,30 @@ def _append_live_blogs(blogs, keys, addrs, ops, valid,
     """Replicate a batch to the backup logs.  ``backups_alive=None`` means
     all-alive (vmapped); otherwise dead backups are skipped — the paper's
     degraded write path — and recovery re-syncs them from a live replica.
-    Returns (blogs, ok_rep)."""
+    Returns (blogs, ok_rep, nrep): nrep counts the logs that actually
+    recorded each lane — the rollback predicate (a slot an existing log
+    entry references must never return to the allocator)."""
     if backups_alive is None:
         blogs, bok = jax.vmap(
             lambda l: lg.append(l, keys, addrs, ops, valid))(blogs)
-        return blogs, bok.all(axis=0)
+        nrep = (bok & valid[None, :]).sum(axis=0).astype(jnp.int32)
+        return blogs, bok.all(axis=0), nrep
     ok_rep = jnp.ones_like(valid)
+    nrep = jnp.zeros(valid.shape, jnp.int32)
     for r, live in enumerate(backups_alive):
         if not live:
             continue
         one = jax.tree.map(lambda a: a[r], blogs)
         one, okr = lg.append(one, keys, addrs, ops, valid)
         ok_rep = ok_rep & okr
+        nrep = nrep + (okr & valid).astype(jnp.int32)
         blogs = jax.tree.map(lambda f, v, r=r: f.at[r].set(v), blogs, one)
-    return blogs, ok_rep
+    return blogs, ok_rep, nrep
 
 
 def put(g: IndexGroup, keys, addrs, cfg, valid=None,
-        backups_alive: tuple | None = None) -> tuple:
+        backups_alive: tuple | None = None, with_nrep: bool = False
+        ) -> tuple:
     """PUT/UPDATE batch.  Mirrors the paper's ordering: primary log ->
     backup logs (the distributed layer does this via collective_permute;
     here the replication is the stacked write) -> hash table update.
@@ -87,7 +93,9 @@ def put(g: IndexGroup, keys, addrs, cfg, valid=None,
     ``backups_alive`` is a static liveness hint: the primary skips pushing
     log entries to dead backups (the paper's observation that PUT speeds
     up under a backup failure); recovery re-syncs from a live replica.
-    Returns (group, ok)."""
+    Returns (group, ok) — or (group, ok, nrep) with ``with_nrep``, where
+    nrep counts the backup logs that recorded each lane (the data plane's
+    rollback predicate and the honest replication report)."""
     q = keys.shape[0]
     if valid is None:
         valid = jnp.ones((q,), bool)
@@ -98,14 +106,15 @@ def put(g: IndexGroup, keys, addrs, cfg, valid=None,
     # ring's pending window from ever exhausting (entries are retained for
     # recovery/replication, which read positions, not the window).
     plog = plog._replace(applied=plog.tail)
-    blogs, ok_rep = _append_live_blogs(g.blogs, keys, addrs, ops, valid,
-                                       backups_alive)
+    blogs, ok_rep, nrep = _append_live_blogs(g.blogs, keys, addrs, ops,
+                                             valid, backups_alive)
     new_hash, ok_hash = hi.insert(g.hash, keys, addrs, cfg, valid)
     # a write is complete only if logged EVERYWHERE and indexed — a full
     # backup log rejects the ack, so the caller (client) drains and retries
     # instead of the replica silently missing the entry
     ok = ok_log & ok_hash & ok_rep & valid
-    return g._replace(hash=new_hash, plog=plog, blogs=blogs), ok
+    g = g._replace(hash=new_hash, plog=plog, blogs=blogs)
+    return (g, ok, nrep) if with_nrep else (g, ok)
 
 
 def delete(g: IndexGroup, keys, cfg, valid=None,
@@ -126,8 +135,8 @@ def delete(g: IndexGroup, keys, cfg, valid=None,
         _, found_d, _ = replica_probe(g, keys, cfg)
     plog, ok_log = lg.append(g.plog, keys, addrs, ops, valid)
     plog = plog._replace(applied=plog.tail)  # hash delete is synchronous
-    blogs, ok_rep = _append_live_blogs(g.blogs, keys, addrs, ops, valid,
-                                       backups_alive)
+    blogs, ok_rep, _ = _append_live_blogs(g.blogs, keys, addrs, ops, valid,
+                                          backups_alive)
     new_hash, found_h = hi.delete(g.hash, keys, cfg, valid)
     if primary_alive is True:
         found = found_h
@@ -185,6 +194,22 @@ def replica_probe(g: IndexGroup, keys, cfg):
     addr_d = jnp.where(hit, jnp.where(op == OP_PUT, praw, -1), addr_s)
     found_d = jnp.where(hit, op == OP_PUT, found_s)
     return addr_d, found_d, acc_s + 1
+
+
+def owner_addr_probe(g: IndexGroup, keys, cfg,
+                     primary_alive: bool | None = None):
+    """Pre-batch (addr, found) of each key — the value slot a PUT
+    overwrite or DELETE must free (the data-server GC's input).
+    ``primary_alive=True`` compiles the hash-only path; otherwise the
+    hash answer is combined with the replica + pending-log probe, so the
+    old slot is still found while the primary's table is wiped (writes
+    issued after the failure land in the hash, earlier ones only in the
+    replicas — prefer the hash when it knows the key)."""
+    a_h, f_h, _ = hi.lookup(g.hash, keys, cfg)
+    if primary_alive is True:
+        return a_h, f_h
+    a_d, f_d, _ = replica_probe(g, keys, cfg)
+    return jnp.where(f_h, a_h, a_d), f_h | f_d
 
 
 def get(g: IndexGroup, keys, cfg, *, primary_alive: bool | None = None):

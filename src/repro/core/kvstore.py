@@ -6,31 +6,47 @@ Topology (one group per device; cfg.groups_per_device generalises):
   0) and g-2 (replica 1): backup arrays use the SHIFTED layout — slice
   [r, p] stores replica r of group (p - r - 1) mod G, so placing slice p on
   device p puts every replica on a different failure domain, and log
-  replication is a ppermute by r+1 hops.
+  replication is a ppermute by r+1 hops.  The value plane (slot allocator,
+  mirror replication, free queues) is the ``data`` field — see
+  data_plane.py; data servers are a failure domain separate from the index
+  servers (paper §2).
 
 Ops (all shard_map'd over the 1-D "kv" mesh axis; see verbs.py for the
 RDMA-verb mapping):
-  put    — route to owner; owner stores the value on its data shard,
-           appends its log, pushes the entries to the LIVE backup logs
-           (ppermute; dead holders are skipped), updates the hash table,
-           acks with the replica count actually written.
+  put    — route to owner; owner allocates a free slot on its data shard
+           (overwrites free the old slot first — the data-server GC),
+           stores + mirrors the value, appends its log, pushes the entries
+           to the LIVE backup logs (ppermute; dead holders are skipped),
+           updates the hash table, acks with the replica count actually
+           written.  A full shard rejects the lane (client retries after
+           a GC round).
+  put_degraded — as put, plus the replica probe that finds the old slot at
+           a temporary primary, and one-hop value displacement when the
+           owner's own data shard is masked dead.
   get    — one-sided: route, owner-side gather-only probe, value gather,
            reverse route.  Primary dead -> the query is routed to a backup
            holder, which consults its pending log + sorted replica; values
            stored on another shard are flagged for a second-hop fetch.
-  fetch  — second-hop value read: route by address to the owning data
-           shard (data servers are a separate failure domain, paper §2).
+  fetch  — second-hop value read: route by address to the first LIVE data
+           holder of the owning shard (primary copy, then its mirrors).
   delete — route to owner; owner appends a tombstone to its log, pushes it
            to the live backup logs (ppermute), tombstones the hash slot,
-           acks (degraded found answered from the replica + pending log).
+           frees the value slot (queued for the gc op when remote), acks
+           (degraded found answered from the replica + pending log).
            The tombstone compacts out of the sorted replicas on apply.
   scan   — backup-side: every device fully drains and range-queries the
            replicas it holds, results are all_gathered and merged.
   apply_async — one batched log->sorted merge round on every backup.
+  gc     — one routed flush round of the pending free queues (frees whose
+           slot lives on another shard travel home and clear the bit).
   fail_server / recover_server / parity_report — host-side failure
            control plane: fail WIPES the device's index state, recover
            rebuilds the hash from a drained sorted replica and re-clones
            lost replicas from survivors (DESIGN.md §Fault tolerance).
+  fail_data_server / recover_data_server / migrate_values — the value
+           plane's control plane (data_plane.py): mirror-rebuild recovery
+           and the background migration that moves degraded-write values
+           home and patches index addresses (second-hop fetch elision).
 
 All mutating ops take a ``valid`` lane mask so the client can pad request
 batches to fixed shapes (DESIGN.md §Client); invalid lanes are routed
@@ -48,6 +64,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import data_plane as dp
 from repro.core import hash_index as hix
 from repro.core import log as lg
 from repro.core import sorted_index as six
@@ -64,9 +81,8 @@ class KVStore(NamedTuple):
     plog: lg.UpdateLog        # leaves [G, ...]
     bsorted: six.SortedIndex  # leaves [R, G, ...] (shifted layout)
     blog: lg.UpdateLog        # leaves [R, G, ...]
-    dvals: jnp.ndarray        # [G, dcap, W] data-server shard
-    dfill: jnp.ndarray        # [G]
-    alive: jnp.ndarray        # [G] bool (server up)
+    data: dp.DataPlane        # value plane (shard + allocator + mirrors)
+    alive: jnp.ndarray        # [G] bool (index server up)
 
 
 def create(mesh, capacity_per_group: int, cfg, key_dt=None) -> KVStore:
@@ -83,8 +99,7 @@ def create(mesh, capacity_per_group: int, cfg, key_dt=None) -> KVStore:
         plog=rep(one_plog, G),
         bsorted=rep(rep(one_sorted, G), R),
         blog=rep(rep(one_blog, G), R),
-        dvals=jnp.zeros((G, capacity_per_group, cfg.value_words), I32),
-        dfill=jnp.zeros((G,), I32),
+        data=dp.create(G, capacity_per_group, cfg, key_dt),
         alive=jnp.ones((G,), bool),
     )
     return jax.device_put(store, store_sharding(mesh))
@@ -93,15 +108,14 @@ def create(mesh, capacity_per_group: int, cfg, key_dt=None) -> KVStore:
 def store_sharding(mesh):
     from jax.sharding import NamedSharding
 
-    # group axis position differs: hash/plog/dvals shard dim0; bsorted/blog
+    # group axis position differs: hash/plog/data shard dim0; bsorted/blog
     # shard dim1; alive replicated.
     return KVStore(
         hash=hix.HashIndex(*[NamedSharding(mesh, P(AXIS))] * 4),
         plog=lg.UpdateLog(*[NamedSharding(mesh, P(AXIS))] * 5),
         bsorted=six.SortedIndex(*[NamedSharding(mesh, P(None, AXIS))] * 3),
         blog=lg.UpdateLog(*[NamedSharding(mesh, P(None, AXIS))] * 5),
-        dvals=NamedSharding(mesh, P(AXIS)),
-        dfill=NamedSharding(mesh, P(AXIS)),
+        data=dp.sharding(mesh, AXIS),
         alive=NamedSharding(mesh, P()),
     )
 
@@ -112,8 +126,7 @@ def _specs():
         plog=lg.UpdateLog(*[P(AXIS)] * 5),
         bsorted=six.SortedIndex(*[P(None, AXIS)] * 3),
         blog=lg.UpdateLog(*[P(None, AXIS)] * 5),
-        dvals=P(AXIS),
-        dfill=P(AXIS),
+        data=dp.specs(AXIS),
         alive=P(),
     )
 
@@ -132,6 +145,18 @@ def _first_alive_holder(g, alive):
     ok = alive[cand]
     pick = jnp.argmax(ok)          # first alive in priority order
     return cand[pick]
+
+
+def _first_alive_data_holder(s, dalive, Rv: int):
+    """Data server to contact for shard s: the shard itself, else the
+    devices hosting its mirror copies (priority order).  Returns
+    (holder, any_alive): when every holder is dead (loss beyond the
+    configured value replication) the caller must leave the lane
+    un-routed — a push-back, never a fabricated value."""
+    G = dalive.shape[0]
+    cand = jnp.stack([s % G] + [(s + r + 1) % G for r in range(Rv)])
+    ok = dalive[cand]
+    return cand[jnp.argmax(ok)], ok.any()
 
 
 # ---------------------------------------------------------------------------
@@ -158,50 +183,139 @@ def _route_to_owner(store, keys, valid, G, capacity, extra=None):
     return route_build(dest, payloads, G, capacity)
 
 
-def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid):
+def _queue_remote_frees(data, rk, old_addr, mask):
+    """Frees targeting another device's shard ride the per-device free
+    queue until the gc op routes them home.  The queue holds
+    log_capacity entries — the client's room guarantee bounds new frees
+    per drain cycle to that — but entries addressed to a DEAD data shard
+    wait out its outage here, so a long outage can overflow and drop
+    frees; the slots then surface as `orphaned` in value_slot_audit and
+    are reclaimed by the recovery mark-sweep (ROADMAP: data-outage
+    back-pressure)."""
+    freeq, _ = lg.append(_sq(data.freeq), jnp.zeros_like(rk), old_addr,
+                         jnp.where(mask, 1, 0).astype(jnp.int8), mask)
+    return _ex(data.freeq, freeq)
+
+
+def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid,
+              degraded: bool):
+    """Routed PUT.  ``degraded`` is the compile-time liveness hint (same
+    contract as delete's): the healthy variant assumes every index server
+    and data server is up, so it skips the replica probe (old-slot lookup
+    at a temporary primary) and the one-hop value displacement; the
+    backend picks the variant from its host-side liveness view."""
     me = jax.lax.axis_index(AXIS)
     bufs, slot, ok_route = _route_to_owner(
         store, keys, valid, G, capacity, {"v": (vals, 0)})
     recv = exchange(bufs, AXIS)
     rk, rv, rg = recv["k"], recv["v"], recv["g"]
     valid = rg >= 0
-    # --- owner side: store value on the data shard ----------------------
-    dvals = store.dvals[0]
-    dfill = store.dfill[0]
-    n = valid.shape[0]
-    off = jnp.cumsum(valid.astype(I32)) - 1
-    slot_d = jnp.where(valid, (dfill + off) % dvals.shape[0], dvals.shape[0])
-    dvals = dvals.at[slot_d].set(rv, mode="drop")
-    new_dfill = dfill + valid.sum().astype(I32)
-    addr = jnp.where(valid, me * dvals.shape[0] + slot_d, -1).astype(I32)
-    # --- primary log + hash (only if I am the true primary) -------------
     am_primary = rg == me
-    ops = jnp.where(valid & am_primary, six.OP_PUT, 0).astype(jnp.int8)
+    data = store.data
+    dcap = data.vals.shape[1]
+    dalive_me = data.alive[me]
+    winner = dp.winner_mask(rk, valid)
+    # pre-batch address of the overwritten key: hash at the true primary,
+    # replica + pending log at a temporary primary
+    old_a, old_f, _ = hix.lookup(_sq(store.hash), rk, cfg)
+    if degraded:
+        old_ab, old_fb, _ = _backup_probe(cfg, store, rk, me, G)
+        old_a = jnp.where(am_primary, old_a, old_ab)
+        old_f = jnp.where(am_primary, old_f, old_fb)
+    # --- owner side: place the value -------------------------------------
+    # overwrite whose old slot is on MY live shard: update in place (no
+    # allocator churn); new keys and remote-old strays: allocate fresh.
+    # In-place writes land before the commit decision — like a real data
+    # server's non-atomic value update, a lane nacked AFTER the write has
+    # already exposed the new bytes at the old address; the client's
+    # retry re-puts the same value, so the store converges, and the
+    # window only exists when a backup ring rejects an append the
+    # client's room guarantee should have prevented
+    inplace = winner & old_f & (old_a // dcap == me) & dalive_me
+    allocw = winner & ~inplace
+    want = (allocw & dalive_me) if degraded else allocw
+    used, slot_d, aok = dp.alloc(data.used[0], want)
+    wslot = jnp.where(inplace, old_a % dcap, jnp.where(aok, slot_d, dcap))
+    wmask = inplace | aok
+    dvals = data.vals[0].at[jnp.where(wmask, wslot, dcap)].set(
+        rv, mode="drop")
+    addr_lane = jnp.where(
+        inplace, old_a,
+        jnp.where(aok, me * dcap + slot_d, -1)).astype(I32)
+    writes = [(wslot, rv, wmask)]
+    disp = jnp.zeros_like(valid)
+    if degraded:
+        # my own data shard is dead: displace the value one hop (the
+        # neighbour's shard holds it until migrate_values brings it home)
+        need_fwd = allocw & ~dalive_me
+        f = replicate_shift({"v": rv, "need": need_fwd}, 1, AXIS)
+        used, fslot, faok = dp.alloc(used, f["need"] & dalive_me)
+        dvals = dvals.at[jnp.where(faok, fslot, dcap)].set(
+            f["v"], mode="drop")
+        back = replicate_shift({"slot": fslot, "aok": faok}, G - 1,
+                               AXIS)
+        disp = need_fwd & back["aok"]
+        addr_lane = jnp.where(disp, ((me + 1) % G) * dcap + back["slot"],
+                              addr_lane).astype(I32)
+        writes.append((fslot, f["v"], faok))
+    mirror = data.mirror
+    for r in range(mirror.shape[0]):
+        for ms, mv, mm in writes:
+            out = replicate_shift({"s": ms, "v": mv, "m": mm}, r + 1,
+                                  AXIS)
+            tgt = jnp.where(out["m"] & dalive_me, out["s"], dcap)
+            mirror = mirror.at[r, 0].set(
+                mirror[r, 0].at[tgt].set(out["v"], mode="drop"))
+    # superseded duplicate lanes share their winner's address; a failed
+    # allocation (-1) un-acks the whole duplicate group for a client retry
+    addr = dp.spread_winner_addr(rk, valid, winner, addr_lane)
+    landed = valid & (addr >= 0)
+    # --- primary log -> backup logs -> hash, commit-gated ----------------
+    ops = jnp.where(landed & am_primary, six.OP_PUT, 0).astype(jnp.int8)
     plog, ok_p = lg.append(_sq(store.plog), rk, addr, ops,
-                           valid & am_primary)
+                           landed & am_primary)
     # the hash update is synchronous, so primary-log entries are applied
     # the moment the batch commits; advancing the prefix keeps the ring's
     # pending window from exhausting (entries stay on disk for recovery).
     plog = plog._replace(applied=plog.tail)
+    blog, ok_rep, nrep, _ = _replicate_logs(
+        store.blog, store.alive, rk, addr, ops, landed, rg, me, G,
+        six.OP_PUT)
+    ok_commit = landed & ok_rep & ((am_primary & ok_p) | ~am_primary)
     new_hash, ok_h = hix.insert(_sq(store.hash), rk, addr, cfg,
-                                valid & am_primary)
-    blog, ok_rep, nrep = _replicate_logs(store.blog, store.alive, rk, addr,
-                                         ops, valid, rg, me, G, six.OP_PUT)
-    ok_req = (valid & ok_rep
-              & ((am_primary & ok_p & ok_h) | ~am_primary)).astype(I32)
-    back = route_return({"ok": ok_req, "addr": addr, "rep": nrep}, slot,
-                        AXIS)
+                                ok_commit & am_primary)
+    ok_req = ok_commit & (ok_h | ~am_primary)
+    # --- data-server GC, commit-gated ------------------------------------
+    # a committed move (new slot elsewhere) frees the old slot; an
+    # un-acked lane rolls its fresh allocation back (the retry re-places)
+    # ONLY when no log anywhere recorded its entry (nrep == 0): a slot a
+    # replica log already references must never return to the allocator
+    # — a dangling reference to re-allocatable memory is worse than a
+    # leak the retry's last-writer-wins entry supersedes
+    moved = winner & old_f & ~inplace & ok_req & (old_a >= 0)
+    free_local = moved & (old_a // dcap == me) & dalive_me
+    used = dp.free_slots(used, old_a % dcap, free_local)
+    undo = ~ok_req & (nrep == 0)
+    used = dp.free_slots(used, slot_d, aok & undo)
+    undo_remote = disp & undo     # displaced slot lives on the neighbour
+    qmask = (moved & ~free_local) | undo_remote
+    qaddr = jnp.where(undo_remote, addr, old_a)
+    freeq = _queue_remote_frees(data, rk, qaddr, qmask)
+    ret = route_return({"ok": ok_req.astype(I32), "addr": addr,
+                        "rep": nrep}, slot, AXIS)
+    new_data = data._replace(
+        vals=data.vals.at[0].set(dvals), used=data.used.at[0].set(used),
+        mirror=mirror, freeq=freeq)
     new_store = store._replace(
         hash=_ex(store.hash, new_hash), plog=_ex(store.plog, plog),
-        blog=blog, dvals=store.dvals.at[0].set(dvals),
-        dfill=store.dfill.at[0].set(new_dfill))
-    return (new_store, back["ok"].astype(bool) & ok_route, back["addr"],
-            back["rep"])
+        blog=blog, data=new_data)
+    return (new_store, ret["ok"].astype(bool) & ok_route, ret["addr"],
+            ret["rep"])
 
 
 def _replicate_logs(blog, alive, rk, addr, ops, valid, rg, me, G, opcode):
     """Push an owner-side batch of log entries to the backup logs.
-    Returns (blog, ok, nrep):
+    Returns (blog, ok, nrep, ok_local):
 
       ok[i]   — False when a backup-log append for owner-lane i was
                 rejected by a LIVE backup (ring full) — ppermuted back to
@@ -211,6 +325,13 @@ def _replicate_logs(blog, alive, rk, addr, ops, valid, rg, me, G, opcode):
                 backups are skipped (the paper's observation that PUT
                 speeds up under a backup failure), so nrep < n_backups is
                 the honest report of reduced replication.
+      ok_local[i] — True unless MY OWN backup-log append for a
+                temporary-primary lane was rejected.  The degraded free /
+                rollback decisions key on it: a retry's replica probe
+                consults exactly this log, so "recorded locally" is the
+                one predicate that keeps slot frees idempotent across
+                retries (free the old slot / keep the new one iff the
+                entry the probe will see exists).
 
     Healthy path: replicate the primary's entries (``ops``) to the r+1-hop
     backup holders via ppermute.  Degraded path (paper §4.3): requests
@@ -219,6 +340,7 @@ def _replicate_logs(blog, alive, rk, addr, ops, valid, rg, me, G, opcode):
     replica-0 entries one hop to the replica-1 holder."""
     R = blog.tail.shape[0]
     ok = jnp.ones(rk.shape, bool)
+    ok_local = jnp.ones(rk.shape, bool)
     nrep = jnp.zeros(rk.shape, I32)
     alive_me = alive[me]
     for r in range(R):
@@ -239,6 +361,7 @@ def _replicate_logs(blog, alive, rk, addr, ops, valid, rg, me, G, opcode):
         one = jax.tree.map(lambda a: a[r, 0], blog)
         one, okb = lg.append(one, rk, addr, opsb, mine_as_backup)
         ok = ok & okb
+        ok_local = ok_local & okb
         nrep = nrep + (mine_as_backup & okb).astype(I32)
         blog = jax.tree.map(lambda full, v, r=r: full.at[r, 0].set(v),
                             blog, one)
@@ -255,7 +378,7 @@ def _replicate_logs(blog, alive, rk, addr, ops, valid, rg, me, G, opcode):
         nrep = nrep + replicate_shift(
             (fshould & okf).astype(I32), (G - 1) % G, AXIS)
         blog = jax.tree.map(lambda full, v: full.at[1, 0].set(v), blog, one)
-    return blog, ok, nrep
+    return blog, ok, nrep, ok_local
 
 
 def _backup_probe(cfg, store: KVStore, rk, me, G):
@@ -283,9 +406,10 @@ def _backup_probe(cfg, store: KVStore, rk, me, G):
 def _delete_body(cfg, G, capacity, store: KVStore, keys, valid,
                  degraded: bool):
     """Distributed DELETE: tombstone through primary log -> backup logs ->
-    hash delete, mirroring _put_body minus the data-shard write.  The
-    tombstones compact out of the sorted replicas at apply time; the data
-    slot is reclaimed on rebuild (the paper's data-server GC).
+    hash delete, mirroring _put_body minus the data-shard write; the
+    value slot is freed immediately (the paper's data-server GC) — queued
+    for the gc op when it lives on another shard.  The tombstones compact
+    out of the sorted replicas at apply time.
 
     ``degraded`` is the compile-time analogue of the local layer's static
     primary_alive hint: with every server alive all requests land on true
@@ -298,11 +422,16 @@ def _delete_body(cfg, G, capacity, store: KVStore, keys, valid,
     valid = rg >= 0
     addr = jnp.full(rk.shape, -1, I32)
     am_primary = rg == me
+    data = store.data
+    dcap = data.vals.shape[1]
+    old_a, old_f, _ = hix.lookup(_sq(store.hash), rk, cfg)
     if degraded:
         # existence check BEFORE this batch's tombstones land: the
         # temporary primary consults its replica + pending log, so DELETE
         # reports found honestly even while the true primary is down
-        _, found_b, _ = _backup_probe(cfg, store, rk, me, G)
+        addr_b, found_b, _ = _backup_probe(cfg, store, rk, me, G)
+        old_a = jnp.where(am_primary, old_a, addr_b)
+        old_f = jnp.where(am_primary, old_f, found_b)
     else:
         found_b = jnp.zeros(rk.shape, bool)   # no degraded lanes exist
     ops = jnp.where(valid & am_primary, six.OP_DEL, 0).astype(jnp.int8)
@@ -311,17 +440,32 @@ def _delete_body(cfg, G, capacity, store: KVStore, keys, valid,
     plog = plog._replace(applied=plog.tail)
     new_hash, found = hix.delete(_sq(store.hash), rk, cfg,
                                  valid & am_primary)
-    blog, ok_rep, nrep = _replicate_logs(store.blog, store.alive, rk, addr,
-                                         ops, valid, rg, me, G, six.OP_DEL)
+    blog, ok_rep, nrep, ok_loc = _replicate_logs(
+        store.blog, store.alive, rk, addr, ops, valid, rg, me, G,
+        six.OP_DEL)
+    # data-server GC, commit-gated (winner-deduped so a double-delete in
+    # one batch frees exactly once): a primary lane frees once the hash
+    # tombstoned the entry — the slot is unreferenced from that moment,
+    # whatever the replication ack says; a temporary-primary lane frees
+    # once MY pending log recorded the tombstone — the one predicate the
+    # retry's probe consults, so the free fires exactly once whether the
+    # wider replication acked or not
+    gate = jnp.where(am_primary, found, ok_loc & old_f)
+    freed = dp.winner_mask(rk, valid) & gate & (old_a >= 0)
+    free_local = freed & (old_a // dcap == me) & data.alive[me]
+    used = dp.free_slots(data.used[0], old_a % dcap, free_local)
+    freeq = _queue_remote_frees(data, rk, old_a, freed & ~free_local)
     ok_req = (valid & ok_rep
               & ((am_primary & ok_p) | ~am_primary)).astype(I32)
     found_req = jnp.where(am_primary, found, found_b & valid).astype(I32)
-    back = route_return({"ok": ok_req, "found": found_req, "rep": nrep},
-                        slot, AXIS)
-    new_store = store._replace(hash=_ex(store.hash, new_hash),
-                               plog=_ex(store.plog, plog), blog=blog)
-    return (new_store, back["ok"].astype(bool) & ok_route,
-            back["found"].astype(bool), back["rep"])
+    ret = route_return({"ok": ok_req, "found": found_req, "rep": nrep},
+                       slot, AXIS)
+    new_store = store._replace(
+        hash=_ex(store.hash, new_hash), plog=_ex(store.plog, plog),
+        blog=blog, data=data._replace(used=data.used.at[0].set(used),
+                                      freeq=freeq))
+    return (new_store, ret["ok"].astype(bool) & ok_route,
+            ret["found"].astype(bool), ret["rep"])
 
 
 def _get_body(cfg, G, capacity, store: KVStore, keys, valid):
@@ -342,16 +486,17 @@ def _get_body(cfg, G, capacity, store: KVStore, keys, valid):
     found = jnp.where(am_primary, found_p, found_b)
     acc = jnp.where(am_primary, acc_p, acc_b)
     # --- value gather: one-sided read from the LOCAL data shard ---------
-    dcap = store.dvals.shape[1]
-    val_ok = found & (addr // dcap == me)
+    dcap = store.data.vals.shape[1]
+    val_ok = found & (addr // dcap == me) & store.data.alive[me]
     local_slot = jnp.where(val_ok, addr % dcap, dcap)
     vals = jnp.concatenate(
-        [store.dvals[0], jnp.zeros((1,) + store.dvals.shape[2:], I32)]
+        [store.data.vals[0], jnp.zeros((1,) + store.data.vals.shape[2:],
+                                       I32)]
     )[jnp.clip(local_slot, 0, dcap)]
     # remote addr (value written on a different shard during a degraded
-    # write): flagged val_ok=False for a second-hop _fetch_body read
-    # (paper: the client reads the value from the data server given the
-    # address).
+    # write, or this shard's data server masked dead): flagged
+    # val_ok=False for a second-hop _fetch_body read (paper: the client
+    # reads the value from the data server given the address).
     back = route_return({"addr": addr, "found": found.astype(I32),
                          "acc": acc, "val": vals,
                          "vok": val_ok.astype(I32)}, slot, AXIS)
@@ -363,22 +508,65 @@ def _get_body(cfg, G, capacity, store: KVStore, keys, valid):
 
 
 def _fetch_body(G, capacity, store: KVStore, addrs, valid):
-    """Second-hop value read: route each request to the data shard that
-    owns its address (addr // dcap) and gather the value — the paper's
-    client-side one-sided READ from the data server.  The data servers are
-    a separate failure domain from the index servers (paper §2), so a
-    fetch is answered even when the device's INDEX state is masked dead."""
-    dcap = store.dvals.shape[1]
-    dest = jnp.where(valid & (addrs >= 0), addrs // dcap, G)
+    """Second-hop value read: route each request to the first LIVE data
+    holder of the shard owning its address — the shard itself, else a
+    device hosting one of its mirror copies — and gather the value: the
+    paper's client-side one-sided READ from the data server.  The data
+    servers are a separate failure domain from the index servers (paper
+    §2), so a fetch is answered even when the device's INDEX state is
+    masked dead, and the mirrors answer when the DATA server is."""
+    data = store.data
+    dcap = data.vals.shape[1]
+    Rv = data.mirror.shape[0]
+    shard = jnp.where(addrs >= 0, addrs // dcap, 0)
+    dest, servable = jax.vmap(
+        lambda s: _first_alive_data_holder(s, data.alive, Rv))(shard)
+    dest = jnp.where(valid & (addrs >= 0) & servable, dest, G)
     bufs, slot, ok_route = route_build(dest, {"a": (addrs, -1)}, G, capacity)
     recv = exchange(bufs, AXIS)
     ra = recv["a"]
+    me = jax.lax.axis_index(AXIS)
+    rs = jnp.where(ra >= 0, ra // dcap, G)
     lslot = jnp.where(ra >= 0, ra % dcap, dcap)
-    vals = jnp.concatenate(
-        [store.dvals[0], jnp.zeros((1,) + store.dvals.shape[2:], I32)]
-    )[jnp.clip(lslot, 0, dcap)]
+    pad = lambda a: jnp.concatenate(
+        [a, jnp.zeros((1,) + a.shape[1:], a.dtype)])
+    vals = pad(data.vals[0])[jnp.clip(lslot, 0, dcap)]
+    taken = rs == me
+    for r in range(Rv):
+        sel = (rs == (me - r - 1) % G) & ~taken
+        mv = pad(data.mirror[r, 0])[jnp.clip(lslot, 0, dcap)]
+        vals = jnp.where(sel[:, None], mv, vals)
+        taken = taken | sel
     back = route_return({"val": vals}, slot, AXIS)
-    return back["val"], ok_route
+    # a lane whose every holder is dead reports un-routed (push-back the
+    # client surfaces as routed=False), never a fabricated zero value
+    return back["val"], ok_route & (servable | ~valid | (addrs < 0))
+
+
+def _gc_body(G, capacity, store: KVStore):
+    """One flush round of the pending free queues: route each queued freed
+    address to the data shard that owns it, which clears the allocator
+    bit.  Frees whose destination shard is masked dead, or that overflow
+    the exchange, are re-queued for a later round."""
+    data = store.data
+    dcap = data.vals.shape[1]
+    freeq = _sq(data.freeq)
+    B = min(freeq.keys.shape[0], G * capacity)
+    k, a, o, freeq = lg.take_pending(freeq, B)
+    pend = o > 0
+    dest_s = jnp.where(pend & (a >= 0), a // dcap, G)
+    deliver = pend & (dest_s < G) & data.alive[jnp.clip(dest_s, 0, G - 1)]
+    dest = jnp.where(deliver, dest_s, G)
+    bufs, _, okq = route_build(dest, {"a": (a, -1)}, G, capacity)
+    recv = exchange(bufs, AXIS)
+    ra = recv["a"]
+    used = dp.free_slots(data.used[0],
+                         jnp.where(ra >= 0, ra % dcap, dcap), ra >= 0)
+    requeue = pend & ~(deliver & okq)
+    freeq, _ = lg.append(freeq, k, a,
+                         jnp.where(requeue, 1, 0).astype(jnp.int8), requeue)
+    return store._replace(data=data._replace(
+        used=data.used.at[0].set(used), freeq=_ex(data.freeq, freeq)))
 
 
 def _apply_body(cfg, batch, store: KVStore):
@@ -446,6 +634,10 @@ def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
     """Build the jitted distributed ops for a mesh.
 
     put(st, keys, vals, valid)  -> (st, ok, addrs, nrep)
+    put_degraded(...)           -> as put, plus the old-slot replica probe
+                                   at temporary primaries and the one-hop
+                                   value displacement off dead data shards
+                                   (use while any server is masked dead)
     get(st, keys, valid)        -> (addrs, found, accesses, vals, routed,
                                     val_ok)
     fetch(st, addrs, valid)     -> (vals, routed)   second-hop value read
@@ -454,15 +646,19 @@ def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
                                    answers found at a temporary primary
                                    (use while any server is masked dead)
     apply(st)                   -> st
+    gc(st)                      -> st   one free-queue flush round
     scan(st, lo, hi)            -> (keys, addrs, st)
     """
     G = mesh.devices.size
     S = _specs()
 
-    put = _smap(mesh,
-                lambda st, k, v, m: _put_body(cfg, G, capacity_q, st, k, v, m),
-                (S, P(AXIS), P(AXIS), P(AXIS)),
-                (S, P(AXIS), P(AXIS), P(AXIS)))
+    put, put_degraded = (
+        _smap(mesh,
+              lambda st, k, v, m, d=d: _put_body(cfg, G, capacity_q,
+                                                 st, k, v, m, d),
+              (S, P(AXIS), P(AXIS), P(AXIS)),
+              (S, P(AXIS), P(AXIS), P(AXIS)))
+        for d in (False, True))
     get = _smap(mesh, lambda st, k, m: _get_body(cfg, G, capacity_q, st, k, m),
                 (S, P(AXIS), P(AXIS)),
                 (P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)))
@@ -479,12 +675,14 @@ def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
     apply_async = _smap(mesh,
                         lambda st: _apply_body(cfg, cfg.async_apply_batch, st),
                         (S,), S)
+    gc = _smap(mesh, lambda st: _gc_body(G, capacity_q, st), (S,), S)
     scan = _smap(mesh, lambda st, lo, hi: _scan_body(cfg, G, scan_limit,
                                                      st, lo, hi),
                  (S, P(AXIS), P(AXIS)), (P(), P(), S))
-    return {"put": put, "get": get, "fetch": fetch, "delete": delete,
+    return {"put": put, "put_degraded": put_degraded, "get": get,
+            "fetch": fetch, "delete": delete,
             "delete_degraded": delete_degraded, "apply": apply_async,
-            "scan": scan}
+            "gc": gc, "scan": scan}
 
 
 # ---------------------------------------------------------------------------
@@ -496,36 +694,48 @@ def fail_server(store: KVStore, dev: int, wipe: bool = True) -> KVStore:
     group ``dev`` and every sorted replica + backup log hosted on ``dev``
     — so recovery MUST rebuild from surviving copies (the honest failure
     model; the data shard survives: data servers are a separate failure
-    domain, paper §2)."""
+    domain, paper §2 — fail_data_server is their own kill switch)."""
     store = store._replace(alive=store.alive.at[dev].set(False))
     if not wipe:
         return store
     INF = key_inf(store.bsorted.keys.dtype)
-    h, p, s, b = store.hash, store.plog, store.bsorted, store.blog
+    h, s = store.hash, store.bsorted
+    p_empty = lg.clear(jax.tree.map(lambda a: a[dev], store.plog))
+    b_empty = lg.clear(jax.tree.map(lambda a: a[:, dev], store.blog))
     return store._replace(
         hash=hix.HashIndex(
             sig=h.sig.at[dev].set(0), fp=h.fp.at[dev].set(0),
             addr=h.addr.at[dev].set(-1), fill=h.fill.at[dev].set(0)),
-        plog=lg.UpdateLog(
-            keys=p.keys.at[dev].set(0), addrs=p.addrs.at[dev].set(-1),
-            ops=p.ops.at[dev].set(0), tail=p.tail.at[dev].set(0),
-            applied=p.applied.at[dev].set(0)),
+        plog=jax.tree.map(lambda f, v: f.at[dev].set(v), store.plog,
+                          p_empty),
         bsorted=six.SortedIndex(
             keys=s.keys.at[:, dev].set(INF),
             addrs=s.addrs.at[:, dev].set(-1),
             size=s.size.at[:, dev].set(0)),
-        blog=lg.UpdateLog(
-            keys=b.keys.at[:, dev].set(0), addrs=b.addrs.at[:, dev].set(-1),
-            ops=b.ops.at[:, dev].set(0), tail=b.tail.at[:, dev].set(0),
-            applied=b.applied.at[:, dev].set(0)))
+        blog=jax.tree.map(lambda f, v: f.at[:, dev].set(v), store.blog,
+                          b_empty))
 
 
-def _drain_one(srt, blog, cfg):
-    """Eagerly apply ALL pending entries of one (sorted, log) pair."""
-    while int(lg.pending_count(blog)) > 0:
-        keys, addrs, ops, blog = lg.take_pending(blog, cfg.async_apply_batch)
-        srt = six.merge(srt, keys, addrs, ops)
-    return srt, blog
+def fail_data_server(store: KVStore, dev: int, wipe: bool = True) -> KVStore:
+    """Mask device ``dev``'s DATA server dead (see data_plane.py)."""
+    return dp.fail_data_server(store, dev, wipe)
+
+
+def recover_data_server(store: KVStore, dev: int, cfg) -> KVStore:
+    """Rebuild device ``dev``'s data shard from its mirrors and mark-sweep
+    the allocator (see data_plane.py)."""
+    return dp.recover_data_server(store, dev, cfg)
+
+
+def migrate_values(store: KVStore, cfg):
+    """Background value migration: move degraded-write strays back to
+    their owner group's shard and patch the index addresses, restoring
+    one-RTT GETs (see data_plane.py).  Returns (store, n_moved)."""
+    return dp.migrate_values(store, cfg, owner_group)
+
+
+# the shared eager drain primitive (one home for the semantics)
+_drain_one = dp.drain_pair
 
 
 def _set_slice(tree, val, idx):
@@ -609,15 +819,20 @@ def recover_server(store: KVStore, dev: int, cfg) -> KVStore:
 
 
 def parity_report(store: KVStore, cfg) -> list:
-    """Hash/sorted parity audit (test/debug helper, eager).  For every
-    group g and replica r: drain a COPY of the replica, then check the
-    replica's live item count equals the hash table's, every replica key
-    is found in the hash, and the addresses agree.  Returns a list of
-    per-(group, replica) dicts with an ``agree`` bool."""
+    """Hash/sorted parity + value-slot audit (test/debug helper, eager).
+    For every group g and replica r: drain a COPY of the replica, then
+    check the replica's live item count equals the hash table's, every
+    replica key is found in the hash, and the addresses agree.  A final
+    ``value_slots`` entry audits the data plane's slot accounting (every
+    live address allocated, nothing orphaned or double-referenced — see
+    data_plane.value_slot_audit).  Returns a list of dicts with an
+    ``agree`` bool; entries carry ``primary_alive``/``holder_alive`` so a
+    mid-failure caller can restrict the assertion to live structures."""
     import numpy as np
 
     G = int(store.alive.shape[0])
     R = int(store.blog.tail.shape[0])
+    alive = np.asarray(store.alive)
     out = []
     for g in range(G):
         hs = jax.tree.map(lambda a: a[g], store.hash)
@@ -633,7 +848,10 @@ def parity_report(store: KVStore, cfg) -> list:
             found_ok = bool(np.asarray(f_h | ~valid).all())
             addr_ok = bool(np.asarray((a_h == addrs) | ~valid).all())
             out.append({"group": g, "replica": r, "holder": h,
+                        "primary_alive": bool(alive[g]),
+                        "holder_alive": bool(alive[h]),
                         "n_hash": n_hash, "n_sorted": n_sorted,
                         "agree": (n_hash == n_sorted) and found_ok
                         and addr_ok})
+    out.append(dp.value_slot_audit(store, cfg))
     return out

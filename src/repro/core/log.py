@@ -57,6 +57,18 @@ def append(log: UpdateLog, keys, addrs, ops, valid=None) -> tuple:
     return new, fits | ~valid
 
 
+def clear(log: UpdateLog) -> UpdateLog:
+    """Empty-like log (same shapes/dtypes): the wipe primitive used when a
+    server's state is destroyed on failure."""
+    return UpdateLog(
+        keys=jnp.zeros_like(log.keys),
+        addrs=jnp.full_like(log.addrs, -1),
+        ops=jnp.zeros_like(log.ops),
+        tail=jnp.zeros_like(log.tail),
+        applied=jnp.zeros_like(log.applied),
+    )
+
+
 def pending_count(log: UpdateLog):
     return log.tail - log.applied
 

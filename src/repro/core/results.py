@@ -37,10 +37,23 @@ class GetResult(NamedTuple):
     routed: Optional[jnp.ndarray] = None
     # bool [Q]: the request reached its server within max_retries; a
     # False lane is exchange push-back, NOT an authoritative miss
+    hops: Optional[jnp.ndarray] = None
+    # int32 [Q]: index-server round-trips the value read took — 1 on the
+    # one-sided fast path, 2 when a second-hop fetch chased the value to
+    # another shard (degraded-write stray / dead data server).  The
+    # measurable cost background value migration removes (DESIGN.md
+    # §Data plane); benchmarks read it instead of inferring fetch rates.
 
     @property
     def all_found(self) -> bool:
         return bool(self.found.all())
+
+    @property
+    def one_rtt(self) -> bool:
+        """True when every found value was served without a second hop."""
+        if self.hops is None:
+            return True
+        return bool((jnp.asarray(self.hops) <= 1).all())
 
 
 class DeleteResult(NamedTuple):

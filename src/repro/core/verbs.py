@@ -78,7 +78,10 @@ def route_return(result_bufs: dict, slot, axis: str):
 
 def replicate_shift(x, shift: int, axis: str):
     """collective_permute by +shift along the ring: primary d -> backup
-    holder d+shift (the paper's primary->backup log push)."""
+    holder d+shift (the paper's primary->backup log push).  ``x`` may be
+    a pytree (ppermute accepts one natively — a dict of payload arrays
+    travels as one logical message: value mirroring, degraded-write
+    displacement)."""
     n = axis_size(axis)
     perm = [(i, (i + shift) % n) for i in range(n)]
     return jax.lax.ppermute(x, axis, perm)

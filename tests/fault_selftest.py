@@ -11,11 +11,18 @@ through HiStoreClient/DistributedBackend and the plain-Python oracle:
   healthy segment -> fail device d (index state WIPED; keys owned by
   group d enter the primary-dead phase, keys of groups d-1/d-2 the
   backup-dead phase) -> degraded segment -> recover (hash rebuilt from a
-  sorted replica, replicas re-cloned) -> post-recovery segment
+  sorted replica, replicas re-cloned, degraded-write values migrated
+  home) -> post-recovery segment -> fail DATA server d2 (shard + hosted
+  mirrors WIPED; reads served from surviving mirrors, writes displaced
+  one hop) -> data-degraded segment -> recover (shard rebuilt from a
+  mirror, allocator mark-swept, strays migrated home) -> final segment
 
 Every GET/SCAN/DELETE observation must match the fault-oblivious oracle
-result-for-result, recovery must restore hash/sorted parity on the failed
-shard, and writes during the failure must report reduced replication.
+result-for-result, the value-slot audit must balance after EVERY phase
+(parity_report's value_slots entry), recovery must restore full
+hash/sorted parity, post-recovery GETs must be one-RTT again
+(GetResult.hops == 1 — second-hop fetch elision), and writes during the
+failure must report reduced replication.
 """
 import sys
 from pathlib import Path
@@ -37,20 +44,52 @@ CFG = scaled(log_capacity=512, async_apply_batch=128)
 N_EVENTS = 12
 
 
+def phase_parity_hook(client, event) -> None:
+    """Run after every kill/recover event and at trace end: the value-slot
+    audit must balance in EVERY phase; hash/replica agreement is asserted
+    wherever both structures are alive.  The drain also pushes queued
+    remote frees through the routed gc op — with every data server alive
+    the queues must empty; frees addressed to a dead shard legitimately
+    wait for its recovery."""
+    client.drain()
+    if not client.backend._data_dead:
+        assert client.backend.pending_frees() == 0, \
+            f"gc flush left frees queued after {event}"
+    for p in kv.parity_report(client.backend.store, CFG):
+        if p.get("kind") == "value_slots":
+            assert p["agree"], f"value audit broke after {event}: {p}"
+        elif p["primary_alive"] and p["holder_alive"]:
+            assert p["agree"], f"live parity broke after {event}: {p}"
+
+
 def run_mix(mesh, mix: str, seed: int, dead_dev: int) -> None:
     G = mesh.devices.size
+    data_dev = (dead_dev + 3) % G
     ops = gen_ops(seed, mix, n_events=N_EVENTS, batch=3 * G)
-    trace = splice_faults(ops, [(N_EVENTS // 3, "fail", dead_dev),
-                                (2 * N_EVENTS // 3, "recover", dead_dev)])
+    trace = splice_faults(ops, [
+        (N_EVENTS // 4, "fail", dead_dev),
+        (N_EVENTS // 2, "recover", dead_dev),
+        (5 * N_EVENTS // 8, "fail_data", data_dev),
+        (7 * N_EVENTS // 8, "recover_data", data_dev),
+    ])
     client = HiStoreClient(
         DistributedBackend(mesh, CFG, 4096, capacity_q=64, scan_limit=128),
         batch_quantum=4 * G, max_retries=32)
     oracle = Oracle(value_words=CFG.value_words)
-    assert_equivalent(replay(client, trace), replay(oracle, trace),
+    assert_equivalent(replay(client, trace, phase_hook=phase_parity_hook),
+                      replay(oracle, trace),
                       label=f"dist8/{mix}/seed{seed}")
     store = client.backend.store
     assert all(p["agree"] for p in kv.parity_report(store, CFG)), \
         f"{mix}: recovery must restore hash/sorted parity"
+    # second-hop fetch elision: after recover + migration every live key
+    # reads back in one RTT
+    live = np.fromiter(oracle.model.keys(), np.int64)
+    if len(live):
+        g_all = client.get(live)
+        assert g_all.all_found, f"{mix}: post-recovery readback"
+        assert bool((np.asarray(g_all.hops) == 1).all()), \
+            f"{mix}: migration must restore one-RTT GETs"
 
     # reduced replication is reported honestly while a holder is dead
     client.fail_server(dead_dev)
@@ -75,12 +114,42 @@ def run_mix(mesh, mix: str, seed: int, dead_dev: int) -> None:
     print(f"mix {mix} seed {seed} (dead dev {dead_dev}) ok", flush=True)
 
 
+def run_gc_battery(mesh) -> None:
+    """The routed gc op with real pending entries: degraded overwrites of
+    a dead group's keys queue remote frees at the temporary primary;
+    drain() must route every one home and clear the allocator bits."""
+    G = mesh.devices.size
+    backend = DistributedBackend(mesh, CFG, 512, capacity_q=64)
+    client = HiStoreClient(backend, batch_quantum=4 * G, max_retries=32,
+                           migrate_on_recover=False)
+    rng = np.random.RandomState(7)
+    ks = rng.choice(10 ** 6, 20 * G, replace=False) + 1
+    assert client.put(ks, np.arange(20 * G)).all_ok
+    dead = 2
+    client.fail_server(dead)
+    own = np.asarray(kv.owner_group(jax.numpy.asarray(ks, key_dtype()), G))
+    dk = ks[own == dead]
+    assert len(dk) > 0
+    assert client.put(dk, np.arange(len(dk)) + 777).all_ok
+    assert backend.pending_frees() == len(dk), \
+        "degraded overwrites must queue their home-shard frees"
+    used_before = int(np.asarray(backend.store.data.used[dead]).sum())
+    client.drain()
+    assert backend.pending_frees() == 0, "gc op must deliver every free"
+    assert (int(np.asarray(backend.store.data.used[dead]).sum())
+            == used_before - len(dk)), "delivered frees clear the bits"
+    report = kv.parity_report(backend.store, CFG)
+    assert report[-1]["agree"], report[-1]
+    print(f"gc battery ok ({len(dk)} routed frees delivered)", flush=True)
+
+
 def main() -> int:
     mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
     for mix, seed, dead in [("uniform", 11, 2), ("zipfian", 22, 5),
                             ("scan_heavy", 33, 7),
                             ("delete_heavy", 44, 3)]:
         run_mix(mesh, mix, seed, dead)
+    run_gc_battery(mesh)
     print("FAULT-SELFTEST-OK")
     return 0
 

@@ -87,6 +87,12 @@ class Oracle:
     def recover_server(self, server: int) -> None:
         pass
 
+    def fail_data_server(self, server: int) -> None:
+        pass
+
+    def recover_data_server(self, server: int) -> None:
+        pass
+
 
 # ---------------------------------------------------------------------------
 # Trace generation
@@ -145,13 +151,18 @@ def gen_ops(seed: int, mix: str = "uniform", n_events: int = 12,
     return events
 
 
+FAULT_KINDS = ("fail", "recover", "fail_data", "recover_data")
+
+
 def splice_faults(events: list, schedule: list) -> list:
-    """Insert ("fail", server) / ("recover", server) events at trace
-    offsets.  ``schedule``: [(offset, kind, server), ...]; offsets index
-    the ORIGINAL op trace, so a schedule is portable across backends."""
+    """Insert ("fail"|"recover"|"fail_data"|"recover_data", server)
+    events at trace offsets — index-server and data-server failures are
+    separate domains (paper §2).  ``schedule``: [(offset, kind, server),
+    ...]; offsets index the ORIGINAL op trace, so a schedule is portable
+    across backends."""
     out = list(events)
     for off, kind, server in sorted(schedule, reverse=True):
-        assert kind in ("fail", "recover")
+        assert kind in FAULT_KINDS
         out.insert(off, (kind, server))
     return out
 
@@ -159,7 +170,7 @@ def splice_faults(events: list, schedule: list) -> list:
 # ---------------------------------------------------------------------------
 # Replay + comparison
 # ---------------------------------------------------------------------------
-def replay(system, trace: list) -> list:
+def replay(system, trace: list, phase_hook=None) -> list:
     """Drive a client-shaped system through a trace.  Returns one
     normalized observation per event (plain Python, comparable with ==):
 
@@ -167,8 +178,12 @@ def replay(system, trace: list) -> list:
       get    -> ("get", found..., value-if-found...)
       delete -> ("delete", ok..., found...)
       scan   -> ("scan", count, keys...)
-      fail / recover -> echoed marker
-    """
+      fail / recover / fail_data / recover_data -> echoed marker
+
+    ``phase_hook(system, event)``, if given, runs after every fault event
+    (each phase boundary) and once at the end of the trace — the hook the
+    fault harness uses to assert parity / value-slot accounting per
+    phase."""
     obs = []
     for ev in trace:
         kind = ev[0]
@@ -189,14 +204,15 @@ def replay(system, trace: list) -> list:
             n = int(r.count)
             obs.append(("scan", n,
                         tuple(int(k) for k in np.asarray(r.keys)[:n])))
-        elif kind == "fail":
-            system.fail_server(ev[1])
-            obs.append(("fail", ev[1]))
-        elif kind == "recover":
-            system.recover_server(ev[1])
-            obs.append(("recover", ev[1]))
+        elif kind in FAULT_KINDS:
+            getattr(system, kind + "_server")(ev[1])
+            obs.append((kind, ev[1]))
+            if phase_hook is not None:
+                phase_hook(system, ev)
         else:  # pragma: no cover
             raise ValueError(f"unknown event {kind!r}")
+    if phase_hook is not None:
+        phase_hook(system, ("end",))
     return obs
 
 

@@ -140,6 +140,26 @@ def test_apply_every_n_ops_policy():
     assert c.backend.pending_ops() < 160
 
 
+def test_get_result_hops_channel():
+    """GetResult.hops is part of the client contract: 1 per routed read on
+    a healthy store, chunk-stable, and positionally backward-compatible
+    (constructing a GetResult without routed/hops still works — the
+    oracle does exactly that)."""
+    from repro.core.results import GetResult as GR
+    legacy = GR(np.zeros(2, np.int32), np.zeros(2, bool),
+                np.zeros(2, np.int32), np.zeros((2, 4), np.int32))
+    assert legacy.routed is None and legacy.hops is None and legacy.one_rtt
+    for c in (_local_client(), _dist_client()):
+        ks = _keys(70, seed=9)
+        assert c.put(ks, np.arange(70)).all_ok
+        g = c.get(ks)   # spans two 64-lane chunks
+        assert g.all_found and g.one_rtt
+        np.testing.assert_array_equal(np.asarray(g.hops), np.ones(70))
+        miss = c.get(ks + 10 ** 7)
+        assert not bool(miss.found.any())
+        np.testing.assert_array_equal(np.asarray(miss.hops), np.ones(70))
+
+
 def test_serving_release_drains_long_sequences():
     """Regression for the release page-leak: a sequence with more pages
     than the old hard-coded SCAN limit of 64 must still be fully

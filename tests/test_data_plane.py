@@ -1,0 +1,230 @@
+"""Data-plane tests: the slot allocator (alloc/free round-trip, no double
+allocation, honesty when full), the wrap-at-capacity regression that the
+seed's monotone ring cursor fails (ROADMAP's value-slot GC item), and the
+``GetResult.hops`` channel.
+
+The wrap trace is the acceptance bar of the data-plane issue: cumulative
+puts exceed 2x the value capacity with deletes interleaved, the store
+replays result-for-result against the fault-oblivious oracle, and the
+value-slot audit balances exactly — while a simulation of the OLD
+ring-cursor allocator on the very same trace demonstrably wraps onto
+slots still referenced by live keys.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.histore import scaled
+from repro.core import data_plane as dpl
+from repro.core import hash_index as hix
+from repro.core import kvstore as kv
+from repro.core.client import (DistributedBackend, HiStoreClient,
+                               LocalBackend)
+
+from oracle import Oracle, assert_equivalent, replay
+
+CFG = scaled(log_capacity=1 << 10, async_apply_batch=256)
+
+
+# ---------------------------------------------------------------------------
+# Allocator properties.  The _check_* helpers hold the real properties so
+# the fixed-example smokes exercise them when hypothesis is absent.
+# ---------------------------------------------------------------------------
+def _check_alloc_free_roundtrip(cap, n_first, free_idx):
+    used = jnp.zeros((cap,), bool)
+    want = jnp.arange(cap) < n_first
+    used, slots, ok = dpl.alloc(used, want)
+    n_got = min(n_first, cap)
+    assert int(ok.sum()) == n_got
+    got = np.asarray(slots)[np.asarray(ok)]
+    assert len(set(got.tolist())) == n_got, "no double allocation"
+    assert int(used.sum()) == n_got
+    # free a subset, re-allocate: freed slots are reused, nothing else
+    to_free = np.unique([i % max(n_got, 1) for i in free_idx]) if n_got else []
+    fs = jnp.asarray(got[list(to_free)] if len(to_free) else [], jnp.int32)
+    used = dpl.free_slots(used, fs, jnp.ones(fs.shape, bool))
+    assert int(used.sum()) == n_got - len(to_free)
+    used, slots2, ok2 = dpl.alloc(used, jnp.arange(cap) < len(to_free))
+    assert int(ok2.sum()) == len(to_free)
+    re_got = set(np.asarray(slots2)[np.asarray(ok2)].tolist())
+    assert re_got == set(got[list(to_free)].tolist()), \
+        "freed slots are exactly what re-allocation hands out"
+
+
+def _check_no_double_alloc_interleaved(script, cap=16):
+    """Model-based: whatever the alloc/free interleaving, a live slot is
+    never handed out twice and the bitmap balances the model."""
+    used = jnp.zeros((cap,), bool)
+    live: set = set()
+    for do_alloc, n in script:
+        if do_alloc:
+            want = jnp.arange(cap) < (n % (cap + 1))
+            nfree = cap - len(live)
+            used, slots, ok = dpl.alloc(used, want)
+            got = np.asarray(slots)[np.asarray(ok)].tolist()
+            assert int(np.asarray(ok).sum()) == min(n % (cap + 1), nfree), \
+                "alloc honesty: exactly min(wanted, free) granted"
+            assert not (set(got) & live), "no double allocation"
+            live |= set(got)
+        elif live:
+            victim = sorted(live)[n % len(live)]
+            live.discard(victim)
+            used = dpl.free_slots(used, jnp.asarray([victim], jnp.int32),
+                                  jnp.ones((1,), bool))
+        assert int(used.sum()) == len(live), "bitmap balances the model"
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(0, 24), st.lists(st.integers(0, 23), max_size=8))
+def test_alloc_free_roundtrip_prop(n_first, free_idx):
+    _check_alloc_free_roundtrip(16, n_first, free_idx)
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 30)), max_size=24))
+def test_no_double_alloc_interleaved_prop(script):
+    _check_no_double_alloc_interleaved(script)
+
+
+def test_alloc_free_fixed_smokes():
+    _check_alloc_free_roundtrip(16, 10, [0, 3, 7])
+    _check_alloc_free_roundtrip(8, 12, [1, 1, 2])     # over-ask: shard full
+    _check_no_double_alloc_interleaved(
+        [(True, 9), (False, 2), (True, 5), (False, 0), (False, 1),
+         (True, 30), (False, 3), (True, 4)])
+
+
+def test_winner_spread_duplicates():
+    from repro.core.hashing import key_dtype
+    keys = jnp.asarray([5, 9, 5, 7, 5], key_dtype())
+    valid = jnp.asarray([True, True, True, True, False])
+    w = dpl.winner_mask(keys, valid)
+    np.testing.assert_array_equal(np.asarray(w),
+                                  [False, True, True, True, False])
+    addr_lane = jnp.asarray([-1, 40, 10, 70, -1], jnp.int32)
+    spread = dpl.spread_winner_addr(keys, valid, w, addr_lane)
+    np.testing.assert_array_equal(np.asarray(spread), [10, 40, 10, 70, -1])
+
+
+# ---------------------------------------------------------------------------
+# Wrap-at-capacity regression (the seed's ring cursor corrupts here)
+# ---------------------------------------------------------------------------
+def gen_wrap_trace(seed: int, capacity: int, rounds: int = 8):
+    """Cumulative puts > 2x value capacity with deletes interleaved while
+    the live set stays comfortably below capacity: overwrite a RANDOM half
+    of a persistent working set each round (the un-overwritten rest pins
+    its slots, so a wrapping cursor must eventually land on one) and churn
+    a fresh key window through put+delete.  Returns (trace, total_puts)."""
+    rng = np.random.RandomState(seed)
+    ws = np.arange(1, capacity // 2 + 1).astype(np.int64)
+    events, total = [], 0
+    for i in range(rounds):
+        if i == 0:
+            part = ws.copy()
+        else:
+            part = np.sort(rng.choice(ws, len(ws) // 2, replace=False))
+        events.append(("put", part,
+                       rng.randint(1, 1 << 20, len(part)).astype(np.int64)))
+        total += len(part)
+        extra = (np.arange(1, 17) + 10 ** 6 + 1000 * i).astype(np.int64)
+        events.append(("put", extra,
+                       rng.randint(1, 1 << 20, 16).astype(np.int64)))
+        total += 16
+        events.append(("get", ws[rng.choice(len(ws), 16, replace=False)]))
+        events.append(("delete", extra))
+    events.append(("get", ws))
+    return events, total
+
+
+def ring_cursor_corrupts(trace, capacity: int) -> bool:
+    """Simulate the SEED's allocator on a trace: a monotone cursor, slots
+    never reclaimed on DELETE or overwrite.  Returns True when an
+    allocation lands on a slot still referenced by a live key — the
+    wrap corruption the bitmap allocator exists to prevent."""
+    cursor = 0
+    slot_of: dict = {}
+    owner_of: dict = {}
+    for ev in trace:
+        if ev[0] == "put":
+            for k in ev[1].tolist():
+                s = cursor % capacity
+                cursor += 1
+                holder = owner_of.get(s)
+                if holder is not None and holder != k:
+                    return True          # wrapped onto a live key's slot
+                old = slot_of.pop(k, None)
+                if old is not None and owner_of.get(old) == k:
+                    del owner_of[old]    # the index now points elsewhere
+                slot_of[k] = s
+                owner_of[s] = k
+        elif ev[0] == "delete":
+            for k in ev[1].tolist():
+                s = slot_of.pop(k, None)
+                if s is not None and owner_of.get(s) == k:
+                    del owner_of[s]      # ...but the ring never reuses it
+    return False
+
+
+def test_wrap_trace_corrupts_ring_cursor():
+    trace, total = gen_wrap_trace(17, 64)
+    assert total > 2 * 64, "trace must exceed 2x capacity cumulatively"
+    assert ring_cursor_corrupts(trace, 64), \
+        "the seed's ring cursor must demonstrably corrupt on this trace"
+    # sanity: an infinite ring never corrupts — the checker is not trivially
+    # True — and the allocator's capacity bound is the only difference
+    assert not ring_cursor_corrupts(trace, 10 ** 9)
+
+
+def test_wrap_trace_local_vs_oracle():
+    """2x-capacity churn on the LocalBackend: exact oracle equivalence and
+    balanced slot accounting (used == hash-live, nothing leaked)."""
+    trace, total = gen_wrap_trace(17, 64)
+    backend = LocalBackend(64, CFG)
+    client = HiStoreClient(backend, batch_quantum=16)
+    oracle = Oracle(value_words=CFG.value_words)
+    assert_equivalent(replay(client, trace), replay(oracle, trace),
+                      label="wrap/local")
+    n_live = int(hix.n_items(backend.group.hash))
+    assert int(backend.used.sum()) == n_live == len(oracle.model), \
+        "every live key holds exactly one slot; churn leaked nothing"
+
+
+def test_wrap_trace_dist_vs_oracle():
+    """The same 2x-capacity churn through the shard_map'd store (this
+    process's mesh): oracle equivalence plus a clean value-slot audit."""
+    mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
+    trace, _ = gen_wrap_trace(23, 64)
+    client = HiStoreClient(
+        DistributedBackend(mesh, CFG, 64, capacity_q=64, scan_limit=128),
+        batch_quantum=16, max_retries=32)
+    oracle = Oracle(value_words=CFG.value_words)
+    assert_equivalent(replay(client, trace), replay(oracle, trace),
+                      label="wrap/dist")
+    report = kv.parity_report(client.backend.store, CFG)
+    assert all(p["agree"] for p in report), report
+    audit = report[-1]
+    assert audit["kind"] == "value_slots"
+    assert audit["live"] == len(oracle.model)
+    assert audit["orphaned"] == 0 and audit["double"] == 0
+
+
+# ---------------------------------------------------------------------------
+# hops reporting
+# ---------------------------------------------------------------------------
+def test_get_hops_local_and_dist():
+    """Healthy stores serve every value in one hop, and the hops channel
+    survives the client's pad/retry plumbing."""
+    for backend in (LocalBackend(256, CFG),
+                    DistributedBackend(
+                        jax.make_mesh((len(jax.devices()),), (kv.AXIS,)),
+                        CFG, 256, capacity_q=64)):
+        client = HiStoreClient(backend, batch_quantum=16)
+        keys = np.arange(1, 41)
+        assert client.put(keys, keys).all_ok
+        r = client.get(keys)
+        assert r.all_found and r.one_rtt
+        np.testing.assert_array_equal(np.asarray(r.hops), np.ones(40))
+        miss = client.get(keys + 10 ** 6)
+        assert not bool(miss.found.any())
+        np.testing.assert_array_equal(np.asarray(miss.hops), np.ones(40))

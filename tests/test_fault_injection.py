@@ -41,7 +41,8 @@ N_EVENTS = 16
 
 def _local_parity_ok(backend: LocalBackend) -> bool:
     """After a drain, every sorted replica must hold exactly the hash
-    table's live items, with agreeing addresses."""
+    table's live items, with agreeing addresses — and the value-slot
+    bitmap must hold exactly one allocated slot per live item."""
     g = ig.drain(backend.group, backend.cfg)
     n_hash = int(hi.n_items(g.hash))
     for r in range(backend.cfg.n_backups):
@@ -54,7 +55,47 @@ def _local_parity_ok(backend: LocalBackend) -> bool:
             return False
         if not bool(np.asarray((a_h == addrs) | ~valid).all()):
             return False
-    return True
+    return _local_slots_ok(backend)
+
+
+def _local_slots_ok(backend: LocalBackend) -> bool:
+    """Value-slot accounting on the local shard: every live index address
+    holds an allocated slot, no slot is double-referenced or orphaned.
+    Authority is the hash table, or a live drained replica while the
+    primary is masked dead — so the audit also holds mid-failure."""
+    g = ig.drain(backend.group, backend.cfg)
+    if backend._primary_alive:
+        addrs = np.asarray(g.hash.addr)[np.asarray(hi.valid_mask(g.hash))]
+    else:
+        rep = next(i for i, a in enumerate(backend._backups_alive) if a)
+        srt = jax.tree.map(lambda a: a[rep], g.sorted)
+        _, addrs_all, valid = si.items(srt)
+        addrs = np.asarray(addrs_all)[np.asarray(valid)]
+    used = np.asarray(backend.used)
+    return (int(used.sum()) == len(addrs)
+            and len(np.unique(addrs)) == len(addrs)
+            and bool(used[addrs].all() if len(addrs) else True))
+
+
+def _local_phase_hook(client, _event):
+    """Asserted after every kill/recover phase boundary: slot accounting
+    never breaks, whatever the index plane's failure state."""
+    if isinstance(client.backend, LocalBackend):
+        assert _local_slots_ok(client.backend), \
+            "value-slot accounting must hold across every phase"
+
+
+def _dist_phase_hook(client, _event):
+    """Mid-trace parity: the value-slot audit must hold in EVERY phase;
+    hash/replica agreement is asserted for structures whose primary and
+    holder are both alive (wiped structures rebuild at recovery)."""
+    if not isinstance(client.backend, DistributedBackend):
+        return
+    for p in kv.parity_report(client.backend.store, client.backend.cfg):
+        if p.get("kind") == "value_slots":
+            assert p["agree"], f"value-slot audit broke mid-trace: {p}"
+        elif p["primary_alive"] and p["holder_alive"]:
+            assert p["agree"], f"live-structure parity broke mid-trace: {p}"
 
 
 @pytest.mark.parametrize("mix,seed", [("uniform", 1), ("zipfian", 2),
@@ -75,8 +116,8 @@ def test_local_vs_oracle_under_faults(mix, seed):
     backend = LocalBackend(4096, CFG)
     client = HiStoreClient(backend, batch_quantum=16)
     oracle = Oracle(value_words=CFG.value_words)
-    assert_equivalent(replay(client, trace), replay(oracle, trace),
-                      label=f"local/{mix}")
+    assert_equivalent(replay(client, trace, phase_hook=_local_phase_hook),
+                      replay(oracle, trace), label=f"local/{mix}")
     assert _local_parity_ok(backend), \
         "recovery must restore hash/sorted parity"
 
@@ -93,8 +134,8 @@ def test_dist_single_device_vs_oracle(mix, seed):
         DistributedBackend(mesh, CFG, 4096, capacity_q=64, scan_limit=128),
         batch_quantum=16, max_retries=32)
     oracle = Oracle(value_words=CFG.value_words)
-    assert_equivalent(replay(client, trace), replay(oracle, trace),
-                      label=f"dist1/{mix}")
+    assert_equivalent(replay(client, trace, phase_hook=_dist_phase_hook),
+                      replay(oracle, trace), label=f"dist1/{mix}")
     assert all(p["agree"]
                for p in kv.parity_report(client.backend.store, CFG))
 

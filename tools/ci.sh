@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # One-command verify.
-#   bash tools/ci.sh            # fast tier: tests minus the slow markers
-#   bash tools/ci.sh --all      # everything: full pytest + example smokes
-#   bash tools/ci.sh --fast     # alias of the default (kept for muscle memory)
+#   bash tools/ci.sh                # fast tier: tests minus the slow markers
+#   bash tools/ci.sh --all          # everything: full pytest + example smokes
+#   bash tools/ci.sh --fast         # alias of the default (kept for muscle memory)
+#   bash tools/ci.sh --bench-smoke  # fig13 recovery + value-migration bench,
+#                                   # distributed mode, few steps; writes
+#                                   # bench_smoke_fig13.json (CI uploads it)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,6 +18,10 @@ if [[ "${1:-}" == "--all" ]]; then
   python examples/quickstart.py
   echo "== smoke: examples/histore_cluster.py (8 host devices) =="
   python examples/histore_cluster.py
+elif [[ "${1:-}" == "--bench-smoke" ]]; then
+  echo "== bench smoke: fig13 distributed recovery + value migration (8 host devices) =="
+  XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m benchmarks.fig13_recovery --smoke --json bench_smoke_fig13.json
 else
   echo "== tier-1: pytest (fast tier; --all for the multi-minute batteries) =="
   python -m pytest -q -m "not slow"
