@@ -2,7 +2,7 @@
 sorted from hash) vs data amount, and degraded performance under primary /
 backup failure (normalised to healthy HiStore).
 
-Three modes: the single-group mode times the index-group rebuild
+Four modes: the single-group mode times the index-group rebuild
 primitives; the distributed mode (needs >= 3 devices, e.g.
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m
 benchmarks.run fig13``) times the full kvstore kill/recover protocol —
@@ -11,12 +11,19 @@ GET latency through the client; the value-migration mode times the data
 plane: degraded-GET latency while values are stranded off-home (2-hop,
 ``GetResult.hops == 2``) vs post-migration latency (1-hop), the
 migration pass itself, and GC slot-reuse throughput (put+delete churn
-past the shard capacity that the seed's ring cursor could not survive).
+past the shard capacity that the seed's ring cursor could not survive);
+the DETECTION mode (``--detection``) times the availability control
+plane — lease-expiry detection latency after a severed heartbeat (rounds
++ wall time, no oracle fail_server anywhere) and online snapshot
+recovery (return-to-service latency with the log delta still streaming)
+vs the stop-the-world drain-first rebuild.
 
 Standalone for CI smoke runs (tools/ci.sh --bench-smoke):
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       python -m benchmarks.fig13_recovery --smoke --json out.json
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      python -m benchmarks.fig13_recovery --detection --smoke --json out.json
 """
 from __future__ import annotations
 
@@ -185,9 +192,104 @@ def _gc_slot_reuse(report, capacity=2048, batch=512, cycles=10):
            ops_per_sec=int(2 * cycles * batch / dt))
 
 
+def run_detection(report, n=8_000):
+    """Availability control plane timings: lease-expiry detection latency
+    (observation rounds + wall time from severed heartbeat to degraded
+    routing, zero oracle fail_server calls) and online-vs-stop-the-world
+    recovery — return-to-service latency of the snapshot clone with the
+    log delta still streaming vs the drain-first rebuild of the same
+    backlog."""
+    G = len(jax.devices())
+    if G < 3:
+        report("fig13_detection", skipped=f"needs >=3 devices, have {G}")
+        return
+    from repro.configs.histore import scaled
+    cfg = scaled(log_capacity=1 << 14, async_apply_batch=256,
+                 lease_misses=3)
+    mesh = jax.make_mesh((G,), (kv.AXIS,))
+    keys = uniform_keys(n, seed=47, space=10 ** 8)
+    own = np.asarray(kv.owner_group(jnp.asarray(keys, KD), G))
+    dead = 1
+    probe = keys[own != dead][: 8 * G]
+
+    def fresh_client():
+        backend = DistributedBackend(mesh, cfg, max(4096, 4 * n // G),
+                                     capacity_q=256)
+        client = HiStoreClient(backend, batch_quantum=64 * G,
+                               migrate_on_recover=False)
+        assert client.put(keys, np.arange(n)).all_ok
+        client.drain()
+        return client
+
+    # --- detection latency (lease expiry, no oracle call) ---------------
+    client = fresh_client()
+    backend = client.backend
+    client.get(probe)                       # warm the compiled get+tick
+    backend.sever_server(dead)
+    rounds = 0
+    t0 = time.perf_counter()
+    while dead not in backend._dead:
+        client.get(probe)
+        rounds += 1
+        assert rounds <= 10 * cfg.lease_misses, "detector must fire"
+    t_detect = time.perf_counter() - t0
+    report("fig13_detection_latency", n=n, devices=G,
+           lease_misses=cfg.lease_misses, rounds=rounds,
+           seconds=round(t_detect, 4))
+    # --- online catch-up vs stop-the-world recovery ---------------------
+    # metric: RETURN-TO-SERVICE latency of the rebuild itself — the
+    # online mode hands the backlog to the incremental apply stream
+    # (measured separately as stream_seconds), the stop-the-world mode
+    # drains it inside the rebuild.  The post-recovery re-replication
+    # verify is common to both policies, so it is timed once on its own
+    # row; one unmeasured warm-up cycle per variant keeps one-time jit
+    # compilation out of the comparison.
+    live = keys[own != dead]
+
+    def cycle(online):
+        client = fresh_client()
+        backend = client.backend
+        backend.sever_server(dead)
+        waited = 0
+        while dead not in backend._dead:
+            client.get(probe)
+            waited += 1
+            assert waited <= 10 * cfg.lease_misses, "detector must fire"
+        # degraded-window writes build the backlog recovery must stream
+        assert client.put(live, np.arange(len(live)) + 5).all_ok
+        t0 = time.perf_counter()
+        rec = backend.recover_server(dead, online=online,
+                                     re_replicate=False)
+        t_rec = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        backend.store, n_reb = kv.re_replicate(backend.store, cfg)
+        t_rerep = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        client.drain()                     # the streamed catch-up itself
+        t_stream = time.perf_counter() - t0
+        assert all(p["agree"]
+                   for p in kv.parity_report(backend.store, cfg))
+        return t_rec, t_stream, t_rerep, rec
+
+    for online in (True, False):
+        cycle(online)                      # warm-up (compile)
+    t_online, t_stream, t_rerep, rec = cycle(True)
+    t_stw, _, _, _ = cycle(False)
+    report("fig13_recover_online", n=n, devices=G,
+           seconds=round(t_online, 4),
+           catch_up_pending=int(rec.catch_up_pending),
+           stream_seconds=round(t_stream, 4))
+    report("fig13_recover_stop_the_world", n=n, devices=G,
+           seconds=round(t_stw, 4),
+           online_speedup=round(t_stw / max(t_online, 1e-9), 3))
+    report("fig13_re_replication_pass", n=n, devices=G,
+           seconds=round(t_rerep, 4))
+
+
 def main(argv=None) -> int:
     """Standalone entry (CI bench smoke): run the distributed recovery +
-    value-migration benches for a few steps and dump JSON."""
+    value-migration benches (or, with --detection, the availability
+    control-plane benches) for a few steps and dump JSON."""
     import argparse
     import json
 
@@ -196,6 +298,9 @@ def main(argv=None) -> int:
                     help="write collected rows as JSON")
     ap.add_argument("--smoke", action="store_true",
                     help="distributed-mode only, small n (CI tier)")
+    ap.add_argument("--detection", action="store_true",
+                    help="detection-latency + catch-up-vs-stop-the-world "
+                         "timing mode")
     args = ap.parse_args(argv)
     rows = []
 
@@ -203,7 +308,9 @@ def main(argv=None) -> int:
         rows.append({"name": name, **kw})
         print(name, kw, flush=True)
 
-    if args.smoke:
+    if args.detection:
+        run_detection(report, n=2_000 if args.smoke else 8_000)
+    elif args.smoke:
         run_distributed(report, n=4_000)
     else:
         run(report)

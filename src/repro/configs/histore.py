@@ -33,6 +33,12 @@ class HiStoreConfig:
                                    # independent of n_backups
     # distribution ---------------------------------------------------------
     groups_per_device: int = 1
+    # failure detection ----------------------------------------------------
+    lease_misses: int = 3          # op rounds a server may miss heartbeats
+                                   # before the client demotes it to degraded
+                                   # routing (paper §5's lease timeout,
+                                   # measured in observation rounds rather
+                                   # than wall time; 0 disables detection)
     # batching -------------------------------------------------------------
     async_apply_batch: int = 4096  # log entries merged into the sorted index
                                    # per asynchronous apply

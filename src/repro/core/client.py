@@ -36,18 +36,20 @@ the migration table from the old surfaces.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import data_plane as dpl
 from repro.core import index_group as ig
 from repro.core import kvstore as kv
 from repro.core import log as lg
 from repro.core.hashing import key_dtype, key_inf, next_pow2
-from repro.core.results import (DeleteResult, GetResult, PutResult,
-                                ScanResult)
+from repro.core.results import (DeleteResult, FailResult, GetResult,
+                                PutResult, RecoverResult, ScanResult)
 
 I32 = jnp.int32
 
@@ -225,12 +227,14 @@ class LocalBackend:
         else:
             self._backups_alive[server - 1] = False
 
-    def recover_server(self, server: int = 0):
+    def recover_server(self, server: int = 0, online: bool = True):
         if server == 0:
-            self.group = ig.recover_primary(self.group, self.cfg)
+            self.group = ig.recover_primary(self.group, self.cfg,
+                                            online=online)
             self._primary_alive = True
         else:
-            self.group = ig.recover_backup(self.group, server - 1, self.cfg)
+            self.group = ig.recover_backup(self.group, server - 1,
+                                           self.cfg, online=online)
             self._backups_alive[server - 1] = True
 
 
@@ -258,6 +262,16 @@ class DistributedBackend:
         self._dead: set[int] = set()        # index servers masked dead
         self._data_dead: set[int] = set()   # data servers masked dead
         self._pending_bound = 0        # host-side upper bound, no dev sync
+        # --- lease-based failure detection (paper §5) --------------------
+        # every routed op bumps per-device heartbeat counters on the mesh;
+        # the client ages them here and demotes a server to degraded
+        # routing after ``cfg.lease_misses`` observation rounds without an
+        # advance — no oracle fail_server call anywhere in that path
+        self.lease_misses = int(getattr(cfg, "lease_misses", 0) or 0)
+        self._severed: set[int] = set()     # injector-crashed servers
+        self._last_hb = np.zeros((self.G,), np.int64)
+        self._hb_misses = np.zeros((self.G,), np.int64)
+        self.detected: list[int] = []       # demotions the detector made
 
     def _ensure_log_room(self, n: int):
         # drain up front when a batch might not fit the worst backup log
@@ -270,6 +284,39 @@ class DistributedBackend:
     def _degraded(self) -> bool:
         return bool(self._dead or self._data_dead)
 
+    # -- lease detector ----------------------------------------------------
+    def _lease_tick(self, bump: bool = False):
+        """Age the leases after an observation round: a server whose
+        heartbeat counter did not advance accumulates a miss; at
+        ``lease_misses`` misses it is demoted to degraded routing.
+        ``bump`` runs the heartbeat-only tick op first — read-only rounds
+        (GET) age leases through it, mutating ops bump in-body."""
+        if self.lease_misses <= 0:
+            return
+        if bump:
+            self.store = self.ops["tick"](self.store)
+        hb = np.asarray(self.store.hb)
+        for g in range(self.G):
+            if g in self._dead:
+                continue
+            if hb[g] != self._last_hb[g]:
+                self._hb_misses[g] = 0
+            else:
+                self._hb_misses[g] += 1
+                if self._hb_misses[g] >= self.lease_misses:
+                    self._demote(g, detected=True)
+        self._last_hb = hb
+
+    def _demote(self, g: int, detected: bool = False):
+        """Degraded routing for server ``g`` — the client-side half of a
+        failure, with no oracle call and no state wipe (whatever state
+        the server lost, it lost when it crashed)."""
+        self.store = self.store._replace(
+            alive=self.store.alive.at[g].set(False))
+        self._dead.add(g)
+        if detected:
+            self.detected.append(g)
+
     def put(self, keys, vals, valid):
         n = int(valid.sum())
         self._ensure_log_room(n)
@@ -279,6 +326,7 @@ class DistributedBackend:
         # temporary primaries) and the off-dead-shard value displacement
         op = self.ops["put_degraded" if self._degraded() else "put"]
         self.store, ok, addrs, nrep = op(self.store, keys, vals, valid)
+        self._lease_tick()
         return ok, addrs, nrep
 
     def get(self, keys, valid):
@@ -296,6 +344,7 @@ class DistributedBackend:
             vals = jnp.where(need[:, None], fvals, vals)
             routed = routed & (~need | fok)
             hops = hops + need.astype(I32)
+        self._lease_tick(bump=True)
         return addrs, found, acc, vals, routed & valid, hops
 
     def delete(self, keys, valid):
@@ -307,6 +356,7 @@ class DistributedBackend:
         # answers found at temporary primaries via the replica probe
         op = self.ops["delete_degraded" if self._degraded() else "delete"]
         self.store, ok, found, nrep = op(self.store, keys, valid)
+        self._lease_tick()
         return ok, found & valid, nrep
 
     def scan(self, lo, hi, limit: int):
@@ -325,17 +375,20 @@ class DistributedBackend:
         k, a, self.store = scan_op(self.store, loa, hia)
         n = (k != key_inf(k.dtype)).sum().astype(I32)
         self._pending_bound = 0          # scan drained the logs
+        self._lease_tick()
         return k, a, n
 
     def apply_async(self):
         self.store = self.ops["apply"](self.store)
         self._pending_bound = max(
             0, self._pending_bound - self.cfg.async_apply_batch)
+        self._lease_tick()
 
     def gc_round(self):
         """One routed flush of the pending free queues (slots freed on a
         remote shard travel home and become allocatable)."""
         self.store = self.ops["gc"](self.store)
+        self._lease_tick()
 
     def pending_frees(self) -> int:
         return int(lg.pending_count(self.store.data.freeq).sum())
@@ -360,27 +413,80 @@ class DistributedBackend:
 
     def migrate_values(self) -> int:
         """Background value migration (host-side): move degraded-write
-        strays home and patch index addresses.  Returns values moved."""
-        self.store, moved = kv.migrate_values(self.store, self.cfg)
+        strays home and patch index addresses; the pass's log barrier
+        runs as incremental shard_map'd apply rounds.  Returns values
+        moved."""
+        self.store, moved = kv.migrate_values(self.store, self.cfg,
+                                              apply_fn=self.ops["apply"])
         return moved
 
-    def fail_server(self, server: int):
+    def _wipe_capability(self, what: str) -> bool:
         # wiping needs a surviving copy to exist; a 1-device mesh folds
-        # every replica onto the failing device, so only mask there
-        self.store = kv.fail_server(self.store, server, wipe=self.G > 1)
+        # every replica onto the failing device, so the failure degrades
+        # to mask-only there — surfaced explicitly (FailResult.wiped +
+        # warning) instead of silently weaker semantics
+        if self.G > 1:
+            return True
+        warnings.warn(
+            f"single-device mesh: {what} degrades to mask-only (every "
+            "replica lives on the failing device, so no surviving copy "
+            "could exist; state is masked, NOT wiped)", RuntimeWarning,
+            stacklevel=3)
+        return False
+
+    def fail_server(self, server: int) -> FailResult:
+        wiped = self._wipe_capability("fail_server")
+        self.store = kv.fail_server(self.store, server, wipe=wiped)
         self._dead.add(server)
+        return FailResult(server, wiped)
 
-    def recover_server(self, server: int):
-        self.store = kv.recover_server(self.store, server, self.cfg)
+    def sever_server(self, server: int) -> FailResult:
+        """Crash ``server`` WITHOUT updating the routing view: its
+        heartbeats stop and its state is destroyed, but ``alive`` still
+        says up — only the lease detector (or an operator-initiated
+        recovery) brings the client's view back in line.  This is the
+        fault injector's kill switch for detector schedules; the oracle
+        ``fail_server`` stays for tests that want instant masking."""
+        wiped = self._wipe_capability("sever_server")
+        self.store = kv.sever_server(self.store, server, wipe=wiped)
+        self._severed.add(server)
+        return FailResult(server, wiped)
+
+    def recover_server(self, server: int, online: bool = True,
+                       re_replicate: bool = True) -> RecoverResult:
+        """Rebuild ``server`` and re-admit it.  ``online`` (default)
+        snapshot-clones and lets the pending-log delta stream into the
+        rebuilt replicas through the ordinary apply rounds while
+        foreground traffic continues; ``re_replicate`` then verifies
+        every live holder against the group authorities and rebuilds
+        divergent copies (the multi-failure window closer)."""
+        if server in self._severed and server not in self._dead:
+            # operator-initiated recovery implies the failure is known:
+            # align routing even if the lease had not expired yet
+            self._demote(server)
+        # a RecoveryError propagates with the host-side sever/dead
+        # tracking untouched (kv.recover_server is functional, so the
+        # store is unchanged too): the server stays routed-dead and
+        # severed until a recovery actually succeeds
+        self.store = kv.recover_server(self.store, server, self.cfg,
+                                       online=online)
+        n_reb = 0
+        if re_replicate:
+            self.store, n_reb = kv.re_replicate(self.store, self.cfg)
+        self._severed.discard(server)
         self._dead.discard(server)
+        self._hb_misses[server] = 0
+        return RecoverResult(server, online, n_reb, self.pending_ops())
 
-    def fail_data_server(self, server: int):
-        self.store = kv.fail_data_server(self.store, server,
-                                         wipe=self.G > 1)
+    def fail_data_server(self, server: int) -> FailResult:
+        wiped = self._wipe_capability("fail_data_server")
+        self.store = kv.fail_data_server(self.store, server, wipe=wiped)
         self._data_dead.add(server)
+        return FailResult(server, wiped)
 
     def recover_data_server(self, server: int):
-        self.store = kv.recover_data_server(self.store, server, self.cfg)
+        self.store = kv.recover_data_server(self.store, server, self.cfg,
+                                            apply_fn=self.ops["apply"])
         self._data_dead.discard(server)
 
 
@@ -504,16 +610,32 @@ class HiStoreClient:
         self.stats["migrated"] += moved
         return moved
 
-    def fail_server(self, server: int) -> None:
-        self.backend.fail_server(server)
+    def fail_server(self, server: int):
+        return self.backend.fail_server(server)
 
-    def recover_server(self, server: int) -> None:
-        self.backend.recover_server(server)
+    def sever_server(self, server: int):
+        """Crash a server the lease detector must DISCOVER (heartbeats
+        severed, routing view untouched) — the fault injector's switch
+        for oracle-free failure schedules (distributed backend only)."""
+        fn = getattr(self.backend, "sever_server", None)
+        if fn is None:
+            raise NotImplementedError(
+                "heartbeat severing needs the distributed backend's "
+                "lease detector; LocalBackend liveness is host-side")
+        return fn(server)
+
+    def recover_server(self, server: int, **kw):
+        """Rebuild + re-admit a server.  Keyword knobs are forwarded to
+        the backend (``online=False`` for stop-the-world recovery,
+        ``re_replicate=False`` to skip the post-recovery verify on the
+        distributed backend)."""
+        r = self.backend.recover_server(server, **kw)
         if self.migrate_on_recover:
             self.migrate()
+        return r
 
-    def fail_data_server(self, server: int) -> None:
-        self.backend.fail_data_server(server)
+    def fail_data_server(self, server: int):
+        return self.backend.fail_data_server(server)
 
     def recover_data_server(self, server: int) -> None:
         self.backend.recover_data_server(server)

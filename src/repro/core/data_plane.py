@@ -49,6 +49,25 @@ from repro.core import sorted_index as six
 I32 = jnp.int32
 
 
+class RecoveryError(RuntimeError):
+    """Typed, actionable recovery failure: ``group`` names the lost
+    structure, ``searched`` the copies that were checked, ``blockers``
+    what would have to be recovered first (e.g. a dead data shard whose
+    keys are needed for the data-plane fallback rebuild).  Raised only
+    when NO live copy of any kind exists — the callers fall back through
+    sorted replicas, then the hash + data-plane keys, before giving up."""
+
+    def __init__(self, group: int, searched: list, blockers: list):
+        self.group = group
+        self.searched = list(searched)
+        self.blockers = list(blockers)
+        msg = (f"group {group}: no live copy to rebuild from "
+               f"(searched {', '.join(map(str, searched))})")
+        if blockers:
+            msg += f"; recover {', '.join(map(str, blockers))} first"
+        super().__init__(msg)
+
+
 class DataPlane(NamedTuple):
     vals: jnp.ndarray    # [G, dcap, W]     primary copy of each shard
     used: jnp.ndarray    # [G, dcap] bool   slot allocator bitmap
@@ -56,9 +75,19 @@ class DataPlane(NamedTuple):
     #                      holds the copy of shard (p - r - 1) mod G
     freeq: lg.UpdateLog  # leaves [G, fq]   pending remote frees (addr ring)
     alive: jnp.ndarray   # [G] bool         data-server liveness
+    keys: jnp.ndarray    # [G, dcap]        key stored with each slot (the
+    #                      paper's data item carries the full KV record, so
+    #                      an index rebuild can fetch keys from the data
+    #                      servers — the multi-failure fallback authority)
+    kmirror: jnp.ndarray  # [Rv, G, dcap]   key copies, shifted like mirror
+    fq_spill: jnp.ndarray  # [G] int32      frees REJECTED by a full free
+    #                      queue (push-back makes this unreachable on the
+    #                      op paths; any non-zero count fails the audit)
 
 
 def create(G: int, dcap: int, cfg, key_dt=None) -> DataPlane:
+    from repro.core.hashing import key_dtype
+    kd = key_dt or key_dtype()
     rep = lambda t, n: jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), t)
     return DataPlane(
@@ -68,6 +97,9 @@ def create(G: int, dcap: int, cfg, key_dt=None) -> DataPlane:
                          I32),
         freeq=rep(lg.create(cfg.log_capacity, key_dt), G),
         alive=jnp.ones((G,), bool),
+        keys=jnp.zeros((G, dcap), kd),
+        kmirror=jnp.zeros((cfg.n_value_replicas, G, dcap), kd),
+        fq_spill=jnp.zeros((G,), I32),
     )
 
 
@@ -81,6 +113,9 @@ def sharding(mesh, axis: str):
         mirror=NamedSharding(mesh, P(None, axis)),
         freeq=lg.UpdateLog(*[NamedSharding(mesh, P(axis))] * 5),
         alive=NamedSharding(mesh, P()),
+        keys=NamedSharding(mesh, P(axis)),
+        kmirror=NamedSharding(mesh, P(None, axis)),
+        fq_spill=NamedSharding(mesh, P(axis)),
     )
 
 
@@ -89,7 +124,8 @@ def specs(axis: str):
 
     return DataPlane(
         vals=P(axis), used=P(axis), mirror=P(None, axis),
-        freeq=lg.UpdateLog(*[P(axis)] * 5), alive=P())
+        freeq=lg.UpdateLog(*[P(axis)] * 5), alive=P(),
+        keys=P(axis), kmirror=P(None, axis), fq_spill=P(axis))
 
 
 # ---------------------------------------------------------------------------
@@ -148,12 +184,27 @@ def drain_pair(srt, blog, cfg):
     return srt, blog
 
 
-def drain_all_logs(store, cfg):
-    """Eagerly apply every pending backup-log entry of every replica —
-    the serializability barrier in front of every control-plane pass
-    (audit, sweep, migrate, recover)."""
+def drain_all_logs(store, cfg, apply_fn=None):
+    """Apply every pending backup-log entry of every replica — the
+    serializability barrier in front of every control-plane pass (audit,
+    sweep, migrate, recover).
+
+    ``apply_fn`` (store -> store), when given, is the mesh's jitted
+    incremental apply op: the catch-up then runs as batched shard_map'd
+    merge rounds (every device advances its logs together, one dispatch
+    per ``async_apply_batch`` round) instead of the eager per-slot
+    Python drain — the same incremental op foreground traffic interleaves
+    with, so a control-plane pass no longer needs its own stop-the-world
+    drain machinery."""
     if int(jnp.max(lg.pending_count(store.blog))) == 0:
         return store        # already drained: one sync instead of R*G
+    if apply_fn is not None:
+        rounds = max(1, -(-cfg.log_capacity // cfg.async_apply_batch))
+        for _ in range(rounds):
+            store = apply_fn(store)
+            if int(jnp.max(lg.pending_count(store.blog))) == 0:
+                break
+        return store
     R = int(store.blog.tail.shape[0])
     G = int(store.alive.shape[0])
     bsorted, blog = store.bsorted, store.blog
@@ -172,10 +223,12 @@ def drain_all_logs(store, cfg):
 def _group_items(store, cfg, g: int):
     """Live (keys, addrs) of group ``g`` from the authoritative structure:
     the hash table when g's index server is alive, else the first live
-    (drained) sorted replica.  Call on a drained store."""
+    (drained) sorted replica.  Call on a drained store.  Liveness here is
+    TRUE liveness (alive minus severed): a crashed-but-undetected server
+    must not be treated as an authority."""
     G = int(store.alive.shape[0])
     R = int(store.blog.tail.shape[0])
-    alive = np.asarray(store.alive)
+    alive = np.asarray(store.alive) & ~np.asarray(store.sever)
     srt0 = None
     for r in range(R):
         h = (g + r + 1) % G
@@ -220,7 +273,74 @@ def _pending_free_addrs(freeq) -> np.ndarray:
     return np.concatenate(out) if out else np.zeros((0,), np.int32)
 
 
-def value_slot_audit(store, cfg) -> dict:
+def keys_for_addrs(store, addrs: np.ndarray) -> np.ndarray:
+    """Fetch the key stored with each address from the data plane — the
+    paper's 'rebuild the index by fetching keys from the data items'.
+    Reads the live shard's key column, else a surviving key mirror.
+    Raises RecoveryError when an address's every data holder is dead."""
+    G = int(store.alive.shape[0])
+    dcap = int(store.data.vals.shape[1])
+    Rv = int(store.data.kmirror.shape[0])
+    dalive = np.asarray(store.data.alive)
+    dkeys = np.asarray(store.data.keys)
+    kmir = np.asarray(store.data.kmirror)
+    out = np.zeros((len(addrs),), dkeys.dtype)
+    for i, a in enumerate(np.asarray(addrs, np.int64)):
+        s, j = int(a) // dcap, int(a) % dcap
+        if dalive[s]:
+            out[i] = dkeys[s, j]
+            continue
+        for r in range(Rv):
+            h = (s + r + 1) % G
+            if h != s and dalive[h]:
+                out[i] = kmir[r, h, j]
+                break
+        else:
+            raise RecoveryError(group=-1, searched=[f"data shard {s}",
+                                                    "key mirrors"],
+                                blockers=[f"data server {s}"])
+    return out
+
+
+def group_items_from_data(store, cfg, g: int, owner_group_fn):
+    """Last-resort rebuild authority: enumerate every allocated slot on
+    every LIVE data shard, read its stored key, and keep the (key, addr)
+    pairs owned by group ``g`` (``owner_group_fn`` is the routing hash,
+    injected to keep this module independent of kvstore).  Slots whose
+    free is still pending in a queue are logically dead and excluded.
+    Raises RecoveryError when a dead data shard could be hiding slots
+    (its allocator bitmap is lost until data recovery)."""
+    G = int(store.alive.shape[0])
+    dcap = int(store.data.vals.shape[1])
+    dalive = np.asarray(store.data.alive)
+    dead_shards = [int(s) for s in range(G) if not dalive[s]]
+    if dead_shards:
+        raise RecoveryError(
+            group=g,
+            searched=["sorted replicas", "hash", "data-plane slots"],
+            blockers=[f"data server {s}" for s in dead_shards])
+    used = np.asarray(store.data.used)
+    dkeys = np.asarray(store.data.keys)
+    pend = set(int(a) for a in _pending_free_addrs(store.data.freeq))
+    ks, ads = [], []
+    for s in range(G):
+        idx = np.nonzero(used[s])[0]
+        for j in idx:
+            a = s * dcap + int(j)
+            if a in pend:
+                continue
+            ks.append(dkeys[s, int(j)])
+            ads.append(a)
+    if not ks:
+        return (np.zeros((0,), dkeys.dtype), np.zeros((0,), np.int32))
+    ks = np.asarray(ks)
+    ads = np.asarray(ads, np.int32)
+    own = np.asarray(owner_group_fn(jnp.asarray(ks), G))
+    sel = own == g
+    return ks[sel], ads[sel]
+
+
+def value_slot_audit(store, cfg, apply_fn=None) -> dict:
     """Value-slot accounting audit (test/debug helper, eager):
 
       * every live index address maps to an allocated slot on its shard
@@ -228,9 +348,11 @@ def value_slot_audit(store, cfg) -> dict:
         skipped — their bitmap is lost until recovery);
       * no address is referenced by two live index entries (``double``);
       * no allocated slot is orphaned — unreferenced by any live entry
-        and not pending in a free queue (``orphaned``).
+        and not pending in a free queue (``orphaned``);
+      * no free was ever rejected by a full free queue (``fq_spill`` —
+        the op paths push back instead, so any spill is a bug).
     """
-    st = drain_all_logs(store, cfg)
+    st = drain_all_logs(store, cfg, apply_fn)
     G = int(st.alive.shape[0])
     dcap = int(st.data.vals.shape[1])
     dalive = np.asarray(st.data.alive)
@@ -257,10 +379,13 @@ def value_slot_audit(store, cfg) -> dict:
             a = s * dcap + int(j)
             if a not in referenced and a not in pending:
                 orphaned += 1
+    spill = int(np.asarray(st.data.fq_spill).sum())
     return {"group": -1, "replica": -1, "holder": -1, "kind": "value_slots",
             "live": int(len(uniq)), "pending_free": len(pending),
             "double": double, "missing": missing, "orphaned": orphaned,
-            "agree": double == 0 and missing == 0 and orphaned == 0}
+            "fq_spill": spill,
+            "agree": double == 0 and missing == 0 and orphaned == 0
+            and spill == 0}
 
 
 def fail_data_server(store, dev: int, wipe: bool = True):
@@ -277,16 +402,18 @@ def fail_data_server(store, dev: int, wipe: bool = True):
             vals=data.vals.at[dev].set(0),
             used=data.used.at[dev].set(False),
             mirror=data.mirror.at[:, dev].set(0),
+            keys=data.keys.at[dev].set(0),
+            kmirror=data.kmirror.at[:, dev].set(0),
             freeq=jax.tree.map(lambda f, v: f.at[dev].set(v), fq, empty))
     return store._replace(data=data)
 
 
-def sweep(store, cfg):
+def sweep(store, cfg, apply_fn=None):
     """Mark-sweep GC reconciliation: on every live data shard, ``used``
     becomes exactly the slot set referenced by live index entries; the
     free queues are superseded and cleared.  Fixes slot leaks from free
     queues lost in a data-server crash."""
-    st = drain_all_logs(store, cfg)
+    st = drain_all_logs(store, cfg, apply_fn)
     G = int(st.alive.shape[0])
     dcap = int(st.data.vals.shape[1])
     dalive = np.asarray(st.data.alive)
@@ -305,7 +432,7 @@ def sweep(store, cfg):
     return st._replace(data=data)
 
 
-def recover_data_server(store, dev: int, cfg):
+def recover_data_server(store, dev: int, cfg, apply_fn=None):
     """Recover device ``dev``'s data server (host-side control plane):
 
       1. restore the shard from the first surviving mirror copy;
@@ -329,29 +456,37 @@ def recover_data_server(store, dev: int, cfg):
                 src = (r, h)
                 break
         if src is None:
-            raise ValueError(
-                f"data shard {dev}: no live mirror to rebuild from")
+            raise RecoveryError(group=dev,
+                                searched=[f"mirror {r} on device "
+                                          f"{(dev + r + 1) % G}"
+                                          for r in range(Rv)],
+                                blockers=[])
         data = data._replace(
-            vals=data.vals.at[dev].set(data.mirror[src[0], src[1]]))
+            vals=data.vals.at[dev].set(data.mirror[src[0], src[1]]),
+            keys=data.keys.at[dev].set(data.kmirror[src[0], src[1]]))
         for r in range(Rv):
             s = (dev - r - 1) % G
             if s == dev:
                 continue
             if dalive[s]:
                 data = data._replace(
-                    mirror=data.mirror.at[r, dev].set(data.vals[s]))
+                    mirror=data.mirror.at[r, dev].set(data.vals[s]),
+                    kmirror=data.kmirror.at[r, dev].set(data.keys[s]))
             else:
                 for r2 in range(Rv):
                     h2 = (s + r2 + 1) % G
                     if h2 != dev and dalive[h2]:
-                        data = data._replace(mirror=data.mirror.at[
-                            r, dev].set(data.mirror[r2, h2]))
+                        data = data._replace(
+                            mirror=data.mirror.at[r, dev].set(
+                                data.mirror[r2, h2]),
+                            kmirror=data.kmirror.at[r, dev].set(
+                                data.kmirror[r2, h2]))
                         break
     data = data._replace(alive=data.alive.at[dev].set(True))
-    return sweep(store._replace(data=data), cfg)
+    return sweep(store._replace(data=data), cfg, apply_fn)
 
 
-def migrate_values(store, cfg, owner_group_fn):
+def migrate_values(store, cfg, owner_group_fn, apply_fn=None):
     """Background value migration (second-hop fetch elision): move values
     that live off their owner group's shard — stranded there by degraded
     writes — back home, free the old slots, and patch the index addresses
@@ -359,9 +494,12 @@ def migrate_values(store, cfg, owner_group_fn):
     (``GetResult.hops == 1``).
 
     ``owner_group_fn(keys, G)`` is the routing hash (injected to keep this
-    module independent of kvstore).  Host-side and eager; run it after
-    recovery or on a maintenance schedule.  Returns (store, n_moved)."""
-    st = drain_all_logs(store, cfg)
+    module independent of kvstore); ``apply_fn`` the mesh's jitted apply
+    op — the barrier then runs as incremental shard_map'd catch-up
+    rounds rather than the eager per-slot drain.  Host-side; run it
+    after recovery or on a maintenance schedule.  Returns (store,
+    n_moved)."""
+    st = drain_all_logs(store, cfg, apply_fn)
     G = int(st.alive.shape[0])
     R = int(st.blog.tail.shape[0])
     dcap = int(st.data.vals.shape[1])
@@ -380,6 +518,8 @@ def migrate_values(store, cfg, owner_group_fn):
     freeq = lg.clear(data.freeq)
     vals = np.asarray(data.vals).copy()
     mirror = np.asarray(data.mirror).copy()
+    dkeys = np.asarray(data.keys).copy()
+    kmir = np.asarray(data.kmirror).copy()
     hash_t = st.hash
     bsorted = st.bsorted
     moved = 0
@@ -425,11 +565,13 @@ def migrate_values(store, cfg, owner_group_fn):
         mk, ma = mk[take], ma[take]
         vv = np.stack([vv[i] for i in take])
         vals[g, new_slots] = vv
+        dkeys[g, new_slots] = mk
         used[g, new_slots] = True
         for r in range(Rv):
             h = (g + r + 1) % G
             if dalive[h]:
                 mirror[r, h, new_slots] = vv
+                kmir[r, h, new_slots] = mk
         for a in ma:
             s = int(a) // dcap
             if dalive[s]:
@@ -460,5 +602,6 @@ def migrate_values(store, cfg, owner_group_fn):
                            jnp.ones_like(ka, jnp.int8))
         freeq = jax.tree.map(lambda f, v: f.at[0].set(v), freeq, fq0)
     data = data._replace(vals=jnp.asarray(vals), used=jnp.asarray(used),
-                         mirror=jnp.asarray(mirror), freeq=freeq)
+                         mirror=jnp.asarray(mirror), freeq=freeq,
+                         keys=jnp.asarray(dkeys), kmirror=jnp.asarray(kmir))
     return st._replace(hash=hash_t, bsorted=bsorted, data=data), moved

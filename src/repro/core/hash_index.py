@@ -188,6 +188,43 @@ def delete(idx: HashIndex, keys, cfg, valid=None):
                      addr_flat.reshape(nb, cs), idx.fill), found
 
 
+def replay_pending(idx: HashIndex, log, cfg) -> HashIndex:
+    """Online-recovery helper: apply a log's PENDING window to a
+    snapshot-built hash table (net effect, last-writer-wins per key).
+    The hash is synchronous with the log by contract, so a hash rebuilt
+    from an UNDRAINED sorted snapshot must replay the pending delta even
+    though the sorted replica itself catches up later through the
+    ordinary incremental applies.  Host-side, eager; batches are padded
+    to powers of two so repeated recoveries reuse compiled inserts."""
+    import numpy as np
+
+    from repro.core import log as lg
+    from repro.core import sorted_index as six
+    from repro.core.hashing import pad_pow2 as padded
+
+    k, a, o = lg.pending_entries_np(log)
+    if len(k) == 0:
+        return idx
+    net: dict = {}
+    for kk, aa, oo in zip(k.tolist(), a.tolist(), o.tolist()):
+        if oo:
+            net[kk] = (int(oo), int(aa))
+    dels = np.asarray([kk for kk, (oo, _) in net.items()
+                       if oo == int(six.OP_DEL)], k.dtype)
+    puts = [(kk, aa) for kk, (oo, aa) in net.items()
+            if oo == int(six.OP_PUT)]
+    if len(dels):
+        kp, vm = padded(dels, 0)
+        idx, _ = delete(idx, kp, cfg, vm)
+    if puts:
+        pk = np.asarray([p[0] for p in puts], k.dtype)
+        pa = np.asarray([p[1] for p in puts], np.int32)
+        kp, vm = padded(pk, 0)
+        ap, _ = padded(pa, -1)
+        idx, _ = insert(idx, kp, ap, cfg, vm)
+    return idx
+
+
 def valid_mask(idx: HashIndex):
     return (idx.sig != 0) & (idx.sig != TOMBSTONE)
 

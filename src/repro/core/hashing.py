@@ -77,3 +77,17 @@ def next_pow2(n: int) -> int:
     while p < n:
         p <<= 1
     return p
+
+
+def pad_pow2(arr, fill):
+    """Pad a 1-D host array to the next power of two (bounds eager-jit
+    recompiles of the recovery batches to log2 distinct shapes).
+    Returns (padded jnp array, valid mask)."""
+    import numpy as np
+
+    arr = np.asarray(arr)
+    n = len(arr)
+    p = next_pow2(max(n, 1))
+    out = np.full((p,), fill, arr.dtype)
+    out[:n] = arr
+    return jnp.asarray(out), jnp.asarray(np.arange(p) < n)

@@ -280,9 +280,16 @@ def fail(g: IndexGroup, server: int, wipe: bool = True) -> IndexGroup:
             applied=b.applied.at[r].set(0)))
 
 
-def recover_primary(g: IndexGroup, cfg) -> IndexGroup:
-    """Rebuild the hash table from a live sorted replica (drained first)."""
-    g = drain(g, cfg)
+def recover_primary(g: IndexGroup, cfg, online: bool = True) -> IndexGroup:
+    """Rebuild the hash table from a live sorted replica.
+
+    ``online`` (default) rebuilds from an UNDRAINED snapshot plus a
+    replay of the replica's pending-log window into the hash (the hash
+    is synchronous by contract) — the replica itself catches up through
+    the ordinary incremental applies while foreground traffic continues.
+    ``online=False`` keeps the stop-the-world drain-first rebuild."""
+    if not online:
+        g = drain(g, cfg)
     rep = jnp.argmax(g.alive[1:])
     srt = jax.tree.map(lambda a: a[rep], g.sorted)
     keys, addrs, valid = si.items(srt)
@@ -290,18 +297,25 @@ def recover_primary(g: IndexGroup, cfg) -> IndexGroup:
     # the valid mask keeps empty sorted-array slots out of the table
     # entirely (no appended-then-tombstoned junk eating chain headroom)
     new_hash, _ = hi.insert(fresh, keys, addrs, cfg, valid)
+    if online:
+        blog = jax.tree.map(lambda a: a[int(rep)], g.blogs)
+        new_hash = hi.replay_pending(new_hash, blog, cfg)
     return g._replace(hash=new_hash, alive=g.alive.at[0].set(True))
 
 
-def recover_backup(g: IndexGroup, which: int, cfg) -> IndexGroup:
+def recover_backup(g: IndexGroup, which: int, cfg,
+                   online: bool = True) -> IndexGroup:
     """Rebuild a sorted replica from the primary's hash table."""
     # the hash index stores (sig, fp, addr) but not the key itself; the
     # paper rebuilds a skiplist by fetching the hash table *and its keys*
     # from the data items.  In the core layer the authoritative key set
     # lives in the surviving replica / log; distributed rebuild fetches it
     # from the kvstore data servers (see kvstore.recover).  Here we copy
-    # from a live replica (drained), which is the same data.
-    g = drain(g, cfg)
+    # from a live replica — online as an undrained snapshot WITH its
+    # pending log (both copies then stream the same catch-up delta
+    # through the ordinary applies), else drained first.
+    if not online:
+        g = drain(g, cfg)
     src = jnp.argmax(g.alive[1:] & (jnp.arange(g.alive.shape[0] - 1) != which))
     srt_src = jax.tree.map(lambda a: a[src], g.sorted)
     new_sorted = jax.tree.map(

@@ -39,10 +39,23 @@ RDMA-verb mapping):
   apply_async — one batched log->sorted merge round on every backup.
   gc     — one routed flush round of the pending free queues (frees whose
            slot lives on another shard travel home and clear the bit).
-  fail_server / recover_server / parity_report — host-side failure
-           control plane: fail WIPES the device's index state, recover
-           rebuilds the hash from a drained sorted replica and re-clones
-           lost replicas from survivors (DESIGN.md §Fault tolerance).
+  tick   — heartbeat-only round: every device bumps its per-server
+           heartbeat counter (as every routed op does in-body); the
+           client ages the counters host-side and demotes a server to
+           degraded routing when its lease expires — failure DETECTION
+           without an oracle caller (DESIGN.md §Failure detection).
+  fail_server / sever_server / recover_server / re_replicate /
+  parity_report — host-side failure control plane: fail WIPES the
+           device's index state with the client told at once; sever
+           wipes it but only STOPS ITS HEARTBEATS (the client must
+           detect); recover snapshot-clones from survivors and lets the
+           pending log delta stream into the rebuilt replicas through
+           the ordinary apply rounds while foreground traffic continues
+           (online catch-up; falls back to the hash + the keys stored
+           with the data items on multi-failure, raising the typed
+           RecoveryError only when truly no copy exists); re_replicate
+           verifies every live holder against the group authorities and
+           rebuilds divergent copies (DESIGN.md §Fault tolerance).
   fail_data_server / recover_data_server / migrate_values — the value
            plane's control plane (data_plane.py): mirror-rebuild recovery
            and the background migration that moves degraded-write values
@@ -75,6 +88,8 @@ from repro.core.verbs import (exchange, replicate_shift, route_build,
 I32 = jnp.int32
 AXIS = "kv"
 
+RecoveryError = dp.RecoveryError   # typed multi-failure recovery error
+
 
 class KVStore(NamedTuple):
     hash: hix.HashIndex       # leaves [G, ...]
@@ -82,7 +97,17 @@ class KVStore(NamedTuple):
     bsorted: six.SortedIndex  # leaves [R, G, ...] (shifted layout)
     blog: lg.UpdateLog        # leaves [R, G, ...]
     data: dp.DataPlane        # value plane (shard + allocator + mirrors)
-    alive: jnp.ndarray        # [G] bool (index server up)
+    alive: jnp.ndarray        # [G] bool — the CLIENT's routing view of
+    #                           index-server liveness (flipped by the
+    #                           oracle kill switch OR the lease detector)
+    sever: jnp.ndarray        # [G] bool — heartbeats severed: the server
+    #                           has crashed but the client has not noticed
+    #                           yet; lanes delivered there are nacked (the
+    #                           RPC-timeout analogue) and its heartbeat
+    #                           counter stops advancing
+    hb: jnp.ndarray           # [G] int32 heartbeat counters — each device
+    #                           bumps its own inside every routed op; the
+    #                           client ages them host-side (leases)
 
 
 def create(mesh, capacity_per_group: int, cfg, key_dt=None) -> KVStore:
@@ -101,6 +126,8 @@ def create(mesh, capacity_per_group: int, cfg, key_dt=None) -> KVStore:
         blog=rep(rep(one_blog, G), R),
         data=dp.create(G, capacity_per_group, cfg, key_dt),
         alive=jnp.ones((G,), bool),
+        sever=jnp.zeros((G,), bool),
+        hb=jnp.zeros((G,), I32),
     )
     return jax.device_put(store, store_sharding(mesh))
 
@@ -109,7 +136,8 @@ def store_sharding(mesh):
     from jax.sharding import NamedSharding
 
     # group axis position differs: hash/plog/data shard dim0; bsorted/blog
-    # shard dim1; alive replicated.
+    # shard dim1; alive/sever replicated, hb sharded (each device owns its
+    # own heartbeat counter).
     return KVStore(
         hash=hix.HashIndex(*[NamedSharding(mesh, P(AXIS))] * 4),
         plog=lg.UpdateLog(*[NamedSharding(mesh, P(AXIS))] * 5),
@@ -117,6 +145,8 @@ def store_sharding(mesh):
         blog=lg.UpdateLog(*[NamedSharding(mesh, P(None, AXIS))] * 5),
         data=dp.sharding(mesh, AXIS),
         alive=NamedSharding(mesh, P()),
+        sever=NamedSharding(mesh, P()),
+        hb=NamedSharding(mesh, P(AXIS)),
     )
 
 
@@ -128,6 +158,8 @@ def _specs():
         blog=lg.UpdateLog(*[P(None, AXIS)] * 5),
         data=dp.specs(AXIS),
         alive=P(),
+        sever=P(),
+        hb=P(AXIS),
     )
 
 
@@ -186,15 +218,36 @@ def _route_to_owner(store, keys, valid, G, capacity, extra=None):
 def _queue_remote_frees(data, rk, old_addr, mask):
     """Frees targeting another device's shard ride the per-device free
     queue until the gc op routes them home.  The queue holds
-    log_capacity entries — the client's room guarantee bounds new frees
-    per drain cycle to that — but entries addressed to a DEAD data shard
-    wait out its outage here, so a long outage can overflow and drop
-    frees; the slots then surface as `orphaned` in value_slot_audit and
-    are reclaimed by the recovery mark-sweep (ROADMAP: data-outage
-    back-pressure)."""
-    freeq, _ = lg.append(_sq(data.freeq), jnp.zeros_like(rk), old_addr,
-                         jnp.where(mask, 1, 0).astype(jnp.int8), mask)
-    return _ex(data.freeq, freeq)
+    log_capacity entries; entries addressed to a DEAD data shard wait
+    out its outage here, so a long outage can FILL it.  The op bodies
+    pre-gate on queue room (lanes that would need to queue a free are
+    nacked for a client retry when no room exists — push-back, never a
+    silent drop), so the append below cannot overflow; ``ok`` is still
+    returned so any residual rejection lands in the ``fq_spill`` audit
+    counter instead of vanishing."""
+    freeq, ok = lg.append(_sq(data.freeq), jnp.zeros_like(rk), old_addr,
+                          jnp.where(mask, 1, 0).astype(jnp.int8), mask)
+    return _ex(data.freeq, freeq), ok
+
+
+def _fq_pregate(data, may_queue):
+    """Queue-full push-back: lanes that may need to queue a remote free
+    are admitted only while the per-device free queue has room for them
+    (cumulative rank within the batch).  Returns the per-lane admit
+    mask."""
+    fq = _sq(data.freeq)
+    room = fq.keys.shape[0] - (fq.tail - fq.applied)
+    qrank = jnp.cumsum(may_queue.astype(I32)) - 1
+    return ~may_queue | (qrank < room)
+
+
+def _bump_hb(store):
+    """Heartbeat: every device advances its own counter inside each
+    routed op — unless its heartbeats are severed (crashed server).  The
+    client ages the counters host-side (the lease)."""
+    me = jax.lax.axis_index(AXIS)
+    return store._replace(
+        hb=store.hb + jnp.where(store.sever[me], 0, 1).astype(I32))
 
 
 def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid,
@@ -209,7 +262,10 @@ def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid,
         store, keys, valid, G, capacity, {"v": (vals, 0)})
     recv = exchange(bufs, AXIS)
     rk, rv, rg = recv["k"], recv["v"], recv["g"]
-    valid = rg >= 0
+    # a severed (crashed-but-undetected) server answers nothing: lanes
+    # delivered here are dropped un-acked — the RPC-timeout the client
+    # retries until its lease detector demotes this device
+    valid = (rg >= 0) & ~store.sever[me]
     am_primary = rg == me
     data = store.data
     dcap = data.vals.shape[1]
@@ -233,39 +289,56 @@ def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid,
     # client's room guarantee should have prevented
     inplace = winner & old_f & (old_a // dcap == me) & dalive_me
     allocw = winner & ~inplace
+    # free-queue push-back BEFORE anything commits: a lane that may need
+    # to queue a remote free (moved overwrite whose old slot lives on
+    # another shard; displaced write whose rollback would queue) is
+    # admitted only while the queue has room — so queued frees can never
+    # be dropped, only pushed back to the client's retry loop
+    may_queue = allocw & old_f & (old_a >= 0) & (old_a // dcap != me)
+    if degraded:
+        may_queue = may_queue | (allocw & ~dalive_me)
+    fq_ok = _fq_pregate(data, may_queue)
+    allocw = allocw & fq_ok
     want = (allocw & dalive_me) if degraded else allocw
     used, slot_d, aok = dp.alloc(data.used[0], want)
     wslot = jnp.where(inplace, old_a % dcap, jnp.where(aok, slot_d, dcap))
     wmask = inplace | aok
-    dvals = data.vals[0].at[jnp.where(wmask, wslot, dcap)].set(
-        rv, mode="drop")
+    wtgt = jnp.where(wmask, wslot, dcap)
+    dvals = data.vals[0].at[wtgt].set(rv, mode="drop")
+    # the data item carries its KEY alongside the value (paper §2): an
+    # index rebuild can fetch (key, addr) pairs back from the data
+    # servers — the multi-failure recovery authority of last resort
+    dkeys = data.keys[0].at[wtgt].set(rk, mode="drop")
     addr_lane = jnp.where(
         inplace, old_a,
         jnp.where(aok, me * dcap + slot_d, -1)).astype(I32)
-    writes = [(wslot, rv, wmask)]
+    writes = [(wslot, rv, rk, wmask)]
     disp = jnp.zeros_like(valid)
     if degraded:
         # my own data shard is dead: displace the value one hop (the
         # neighbour's shard holds it until migrate_values brings it home)
         need_fwd = allocw & ~dalive_me
-        f = replicate_shift({"v": rv, "need": need_fwd}, 1, AXIS)
+        f = replicate_shift({"v": rv, "k": rk, "need": need_fwd}, 1, AXIS)
         used, fslot, faok = dp.alloc(used, f["need"] & dalive_me)
-        dvals = dvals.at[jnp.where(faok, fslot, dcap)].set(
-            f["v"], mode="drop")
+        ftgt = jnp.where(faok, fslot, dcap)
+        dvals = dvals.at[ftgt].set(f["v"], mode="drop")
+        dkeys = dkeys.at[ftgt].set(f["k"], mode="drop")
         back = replicate_shift({"slot": fslot, "aok": faok}, G - 1,
                                AXIS)
         disp = need_fwd & back["aok"]
         addr_lane = jnp.where(disp, ((me + 1) % G) * dcap + back["slot"],
                               addr_lane).astype(I32)
-        writes.append((fslot, f["v"], faok))
-    mirror = data.mirror
+        writes.append((fslot, f["v"], f["k"], faok))
+    mirror, kmirror = data.mirror, data.kmirror
     for r in range(mirror.shape[0]):
-        for ms, mv, mm in writes:
-            out = replicate_shift({"s": ms, "v": mv, "m": mm}, r + 1,
-                                  AXIS)
+        for ms, mv, mk, mm in writes:
+            out = replicate_shift({"s": ms, "v": mv, "k": mk, "m": mm},
+                                  r + 1, AXIS)
             tgt = jnp.where(out["m"] & dalive_me, out["s"], dcap)
             mirror = mirror.at[r, 0].set(
                 mirror[r, 0].at[tgt].set(out["v"], mode="drop"))
+            kmirror = kmirror.at[r, 0].set(
+                kmirror[r, 0].at[tgt].set(out["k"], mode="drop"))
     # superseded duplicate lanes share their winner's address; a failed
     # allocation (-1) un-acks the whole duplicate group for a client retry
     addr = dp.spread_winner_addr(rk, valid, winner, addr_lane)
@@ -279,8 +352,8 @@ def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid,
     # pending window from exhausting (entries stay on disk for recovery).
     plog = plog._replace(applied=plog.tail)
     blog, ok_rep, nrep, _ = _replicate_logs(
-        store.blog, store.alive, rk, addr, ops, landed, rg, me, G,
-        six.OP_PUT)
+        store.blog, store.alive & ~store.sever, rk, addr, ops, landed,
+        rg, me, G, six.OP_PUT)
     ok_commit = landed & ok_rep & ((am_primary & ok_p) | ~am_primary)
     new_hash, ok_h = hix.insert(_sq(store.hash), rk, addr, cfg,
                                 ok_commit & am_primary)
@@ -300,15 +373,17 @@ def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid,
     undo_remote = disp & undo     # displaced slot lives on the neighbour
     qmask = (moved & ~free_local) | undo_remote
     qaddr = jnp.where(undo_remote, addr, old_a)
-    freeq = _queue_remote_frees(data, rk, qaddr, qmask)
+    freeq, fq_acc = _queue_remote_frees(data, rk, qaddr, qmask)
+    fq_spill = data.fq_spill + (qmask & ~fq_acc).sum().astype(I32)
     ret = route_return({"ok": ok_req.astype(I32), "addr": addr,
                         "rep": nrep}, slot, AXIS)
     new_data = data._replace(
         vals=data.vals.at[0].set(dvals), used=data.used.at[0].set(used),
-        mirror=mirror, freeq=freeq)
-    new_store = store._replace(
+        keys=data.keys.at[0].set(dkeys), mirror=mirror, kmirror=kmirror,
+        freeq=freeq, fq_spill=fq_spill)
+    new_store = _bump_hb(store._replace(
         hash=_ex(store.hash, new_hash), plog=_ex(store.plog, plog),
-        blog=blog, data=new_data)
+        blog=blog, data=new_data))
     return (new_store, ret["ok"].astype(bool) & ok_route, ret["addr"],
             ret["rep"])
 
@@ -419,7 +494,8 @@ def _delete_body(cfg, G, capacity, store: KVStore, keys, valid,
     bufs, slot, ok_route = _route_to_owner(store, keys, valid, G, capacity)
     recv = exchange(bufs, AXIS)
     rk, rg = recv["k"], recv["g"]
-    valid = rg >= 0
+    # severed server: delivered lanes dropped un-acked (see _put_body)
+    valid = (rg >= 0) & ~store.sever[me]
     addr = jnp.full(rk.shape, -1, I32)
     am_primary = rg == me
     data = store.data
@@ -434,6 +510,20 @@ def _delete_body(cfg, G, capacity, store: KVStore, keys, valid,
         old_f = jnp.where(am_primary, old_f, found_b)
     else:
         found_b = jnp.zeros(rk.shape, bool)   # no degraded lanes exist
+    # free-queue push-back BEFORE the tombstone lands: a delete whose
+    # value slot lives on another shard (or a dead one) must queue its
+    # free — no room means the lane is nacked for a client retry, so the
+    # free can never be silently dropped.  A nacked winner takes its
+    # whole duplicate-key group with it (same rule as put's
+    # spread_winner_addr): otherwise a loser lane would be re-elected
+    # winner by the post-gate dedupe and append its free to the very
+    # queue that had no room
+    winner0 = dp.winner_mask(rk, valid)
+    may_queue = (winner0 & old_f & (old_a >= 0)
+                 & ~((old_a // dcap == me) & data.alive[me]))
+    bad = may_queue & ~_fq_pregate(data, may_queue)
+    same = (rk[None, :] == rk[:, None]) & valid[None, :] & valid[:, None]
+    valid = valid & ~(same & bad[None, :]).any(axis=1)
     ops = jnp.where(valid & am_primary, six.OP_DEL, 0).astype(jnp.int8)
     plog, ok_p = lg.append(_sq(store.plog), rk, addr, ops,
                            valid & am_primary)
@@ -441,8 +531,8 @@ def _delete_body(cfg, G, capacity, store: KVStore, keys, valid,
     new_hash, found = hix.delete(_sq(store.hash), rk, cfg,
                                  valid & am_primary)
     blog, ok_rep, nrep, ok_loc = _replicate_logs(
-        store.blog, store.alive, rk, addr, ops, valid, rg, me, G,
-        six.OP_DEL)
+        store.blog, store.alive & ~store.sever, rk, addr, ops, valid, rg,
+        me, G, six.OP_DEL)
     # data-server GC, commit-gated (winner-deduped so a double-delete in
     # one batch frees exactly once): a primary lane frees once the hash
     # tombstoned the entry — the slot is unreferenced from that moment,
@@ -454,16 +544,19 @@ def _delete_body(cfg, G, capacity, store: KVStore, keys, valid,
     freed = dp.winner_mask(rk, valid) & gate & (old_a >= 0)
     free_local = freed & (old_a // dcap == me) & data.alive[me]
     used = dp.free_slots(data.used[0], old_a % dcap, free_local)
-    freeq = _queue_remote_frees(data, rk, old_a, freed & ~free_local)
+    freeq, fq_acc = _queue_remote_frees(data, rk, old_a,
+                                        freed & ~free_local)
+    fq_spill = data.fq_spill + (
+        freed & ~free_local & ~fq_acc).sum().astype(I32)
     ok_req = (valid & ok_rep
               & ((am_primary & ok_p) | ~am_primary)).astype(I32)
     found_req = jnp.where(am_primary, found, found_b & valid).astype(I32)
     ret = route_return({"ok": ok_req, "found": found_req, "rep": nrep},
                        slot, AXIS)
-    new_store = store._replace(
+    new_store = _bump_hb(store._replace(
         hash=_ex(store.hash, new_hash), plog=_ex(store.plog, plog),
         blog=blog, data=data._replace(used=data.used.at[0].set(used),
-                                      freeq=freeq))
+                                      freeq=freeq, fq_spill=fq_spill)))
     return (new_store, ret["ok"].astype(bool) & ok_route,
             ret["found"].astype(bool), ret["rep"])
 
@@ -497,13 +590,19 @@ def _get_body(cfg, G, capacity, store: KVStore, keys, valid):
     # write, or this shard's data server masked dead): flagged
     # val_ok=False for a second-hop _fetch_body read (paper: the client
     # reads the value from the data server given the address).
+    # A severed (crashed-but-undetected) server answers nothing: its
+    # lanes come back srv=0 and the client retries them as un-routed
+    # (the RPC timeout) until the lease detector demotes the device.
+    srv = jnp.where(store.sever[me], jnp.zeros(rk.shape, I32),
+                    jnp.ones(rk.shape, I32))
     back = route_return({"addr": addr, "found": found.astype(I32),
                          "acc": acc, "val": vals,
-                         "vok": val_ok.astype(I32)}, slot, AXIS)
+                         "vok": val_ok.astype(I32), "srv": srv}, slot, AXIS)
     # ok_route is reported separately from found: an unrouted lane (queue
     # full) is a push-back the client retries, not a miss
-    return (back["addr"], back["found"].astype(bool) & ok_route,
-            back["acc"], back["val"], ok_route,
+    routed = ok_route & back["srv"].astype(bool)
+    return (back["addr"], back["found"].astype(bool) & routed,
+            back["acc"], back["val"], routed,
             back["vok"].astype(bool))
 
 
@@ -563,10 +662,16 @@ def _gc_body(G, capacity, store: KVStore):
     used = dp.free_slots(data.used[0],
                          jnp.where(ra >= 0, ra % dcap, dcap), ra >= 0)
     requeue = pend & ~(deliver & okq)
-    freeq, _ = lg.append(freeq, k, a,
-                         jnp.where(requeue, 1, 0).astype(jnp.int8), requeue)
-    return store._replace(data=data._replace(
-        used=data.used.at[0].set(used), freeq=_ex(data.freeq, freeq)))
+    # re-queueing can't overflow (the round took out at least as many
+    # entries as it puts back), but any rejection is counted so a drop
+    # could never pass the audit silently
+    freeq, okr = lg.append(freeq, k, a,
+                           jnp.where(requeue, 1, 0).astype(jnp.int8),
+                           requeue)
+    fq_spill = data.fq_spill + (requeue & ~okr).sum().astype(I32)
+    return _bump_hb(store._replace(data=data._replace(
+        used=data.used.at[0].set(used), freeq=_ex(data.freeq, freeq),
+        fq_spill=fq_spill)))
 
 
 def _apply_body(cfg, batch, store: KVStore):
@@ -580,7 +685,13 @@ def _apply_body(cfg, batch, store: KVStore):
         blog = jax.tree.map(lambda f, v, r=r: f.at[r, 0].set(v), blog, one_log)
         bsorted = jax.tree.map(lambda f, v, r=r: f.at[r, 0].set(v),
                                bsorted, one_srt)
-    return store._replace(blog=blog, bsorted=bsorted)
+    return _bump_hb(store._replace(blog=blog, bsorted=bsorted))
+
+
+def _tick_body(store: KVStore):
+    """Heartbeat-only round: lets read-only traffic (GET/fetch) age the
+    leases without mutating index state."""
+    return _bump_hb(store)
 
 
 def _scan_body(cfg, G, limit, store: KVStore, lo, hi):
@@ -601,14 +712,19 @@ def _scan_body(cfg, G, limit, store: KVStore, lo, hi):
         lambda c: (_apply_body(cfg, cfg.async_apply_batch, c[0]), c[1] + 1),
         (store, jnp.int32(0)))
     outs_k, outs_a = [], []
+    # effective liveness: a severed holder cannot serve (its replica was
+    # destroyed in the crash), and duty falls through to the next replica
+    # immediately — the per-op failover a real scan client gets from an
+    # RPC timeout, independent of the slower lease-based demotion
+    eff = store.alive & ~store.sever
     for r in range(store.blog.tail.shape[0]):
         srt = jax.tree.map(lambda a: a[r, 0], st.bsorted)
         k, a, n = six.range_query(srt, lo[0], hi[0], limit)
         g = (me - r - 1) % G
         # serve replica r of group g iff I'm alive and (r==0 or the r-1
         # holder (device g+r) is dead)
-        holder_prev_ok = store.alive[(g + r) % G] if r > 0 else jnp.array(False)
-        serve = store.alive[me] & ((r == 0) | ~holder_prev_ok)
+        holder_prev_ok = eff[(g + r) % G] if r > 0 else jnp.array(False)
+        serve = eff[me] & ((r == 0) | ~holder_prev_ok)
         k = jnp.where(serve, k, key_inf(k.dtype))
         a = jnp.where(serve, a, -1)
         outs_k.append(k)
@@ -618,7 +734,7 @@ def _scan_body(cfg, G, limit, store: KVStore, lo, hi):
     allk = jax.lax.all_gather(mk, AXIS).reshape(-1)   # [G*R*limit]
     alla = jax.lax.all_gather(ma, AXIS).reshape(-1)
     order = jnp.argsort(allk)
-    return allk[order][:limit], alla[order][:limit], st
+    return allk[order][:limit], alla[order][:limit], _bump_hb(st)
 
 
 # ---------------------------------------------------------------------------
@@ -648,6 +764,9 @@ def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
     apply(st)                   -> st
     gc(st)                      -> st   one free-queue flush round
     scan(st, lo, hi)            -> (keys, addrs, st)
+    tick(st)                    -> st   heartbeat-only round: read-heavy
+                                   clients age their leases without a
+                                   mutating op in flight
     """
     G = mesh.devices.size
     S = _specs()
@@ -679,25 +798,21 @@ def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
     scan = _smap(mesh, lambda st, lo, hi: _scan_body(cfg, G, scan_limit,
                                                      st, lo, hi),
                  (S, P(AXIS), P(AXIS)), (P(), P(), S))
+    tick = _smap(mesh, _tick_body, (S,), S)
     return {"put": put, "put_degraded": put_degraded, "get": get,
             "fetch": fetch, "delete": delete,
             "delete_degraded": delete_degraded, "apply": apply_async,
-            "gc": gc, "scan": scan}
+            "gc": gc, "scan": scan, "tick": tick}
 
 
 # ---------------------------------------------------------------------------
 # Failure & recovery protocol (paper §4.3, host-side control plane)
 # ---------------------------------------------------------------------------
-def fail_server(store: KVStore, dev: int, wipe: bool = True) -> KVStore:
-    """Mask device ``dev``'s INDEX server dead.  ``wipe`` (default) also
-    destroys the index state it held — the hash table + primary log of
-    group ``dev`` and every sorted replica + backup log hosted on ``dev``
-    — so recovery MUST rebuild from surviving copies (the honest failure
-    model; the data shard survives: data servers are a separate failure
-    domain, paper §2 — fail_data_server is their own kill switch)."""
-    store = store._replace(alive=store.alive.at[dev].set(False))
-    if not wipe:
-        return store
+def _wipe_index_state(store: KVStore, dev: int) -> KVStore:
+    """Destroy the index state device ``dev`` held — the hash table +
+    primary log of group ``dev`` and every sorted replica + backup log
+    hosted on ``dev`` (the crash's data loss; the data shard survives:
+    data servers are a separate failure domain, paper §2)."""
     INF = key_inf(store.bsorted.keys.dtype)
     h, s = store.hash, store.bsorted
     p_empty = lg.clear(jax.tree.map(lambda a: a[dev], store.plog))
@@ -716,22 +831,52 @@ def fail_server(store: KVStore, dev: int, wipe: bool = True) -> KVStore:
                           b_empty))
 
 
+def fail_server(store: KVStore, dev: int, wipe: bool = True) -> KVStore:
+    """ORACLE kill switch: mask device ``dev``'s INDEX server dead with
+    the client told immediately.  ``wipe`` (default) also destroys the
+    index state it held, so recovery MUST rebuild from surviving copies
+    (the honest failure model; fail_data_server is the data plane's own
+    kill switch).  For failures the client must DISCOVER via its leases,
+    use ``sever_server`` instead."""
+    store = store._replace(alive=store.alive.at[dev].set(False))
+    return _wipe_index_state(store, dev) if wipe else store
+
+
+def sever_server(store: KVStore, dev: int, wipe: bool = True) -> KVStore:
+    """Crash device ``dev``'s index server WITHOUT telling the client:
+    its index state is destroyed (``wipe``) and its heartbeats stop, but
+    ``alive`` — the client's routing view — still says up.  Requests
+    delivered there are dropped un-acked (RPC timeouts the client
+    retries) until the client's lease detector notices the stalled
+    heartbeat counter and demotes the device to degraded routing — the
+    paper's §5 failure-detection story, with no oracle fail_server
+    call anywhere."""
+    store = store._replace(sever=store.sever.at[dev].set(True))
+    return _wipe_index_state(store, dev) if wipe else store
+
+
+
+
 def fail_data_server(store: KVStore, dev: int, wipe: bool = True) -> KVStore:
     """Mask device ``dev``'s DATA server dead (see data_plane.py)."""
     return dp.fail_data_server(store, dev, wipe)
 
 
-def recover_data_server(store: KVStore, dev: int, cfg) -> KVStore:
+def recover_data_server(store: KVStore, dev: int, cfg,
+                        apply_fn=None) -> KVStore:
     """Rebuild device ``dev``'s data shard from its mirrors and mark-sweep
-    the allocator (see data_plane.py)."""
-    return dp.recover_data_server(store, dev, cfg)
+    the allocator (see data_plane.py); ``apply_fn`` turns the mark-sweep's
+    log barrier into incremental shard_map'd catch-up rounds."""
+    return dp.recover_data_server(store, dev, cfg, apply_fn)
 
 
-def migrate_values(store: KVStore, cfg):
+def migrate_values(store: KVStore, cfg, apply_fn=None):
     """Background value migration: move degraded-write strays back to
     their owner group's shard and patch the index addresses, restoring
-    one-RTT GETs (see data_plane.py).  Returns (store, n_moved)."""
-    return dp.migrate_values(store, cfg, owner_group)
+    one-RTT GETs (see data_plane.py).  ``apply_fn`` (the mesh's jitted
+    apply op) turns the pass's log barrier into incremental shard_map'd
+    catch-up rounds.  Returns (store, n_moved)."""
+    return dp.migrate_values(store, cfg, owner_group, apply_fn)
 
 
 # the shared eager drain primitive (one home for the semantics)
@@ -742,97 +887,282 @@ def _set_slice(tree, val, idx):
     return jax.tree.map(lambda f, v: f.at[idx].set(v), tree, val)
 
 
-def recover_server(store: KVStore, dev: int, cfg) -> KVStore:
+def _fresh_hash_like(hs) -> hix.HashIndex:
+    return hix.HashIndex(sig=jnp.zeros_like(hs.sig),
+                         fp=jnp.zeros_like(hs.fp),
+                         addr=jnp.full_like(hs.addr, -1),
+                         fill=jnp.zeros_like(hs.fill))
+
+
+def _hash_from_items(hs_like, keys, addrs, cfg):
+    """Fresh hash table holding exactly the given host-side items."""
+    import numpy as np
+
+    from repro.core.hashing import pad_pow2
+    kp, vm = pad_pow2(keys, 0)
+    ap, _ = pad_pow2(np.asarray(addrs, np.int32), -1)
+    new_hash, _ = hix.insert(_fresh_hash_like(hs_like), kp, ap, cfg, vm)
+    return new_hash
+
+
+def _sorted_from_items(srt_like, keys, addrs):
+    """Fresh sorted replica holding exactly the given host-side items."""
+    import numpy as np
+
+    cap = int(srt_like.keys.shape[0])
+    kd = np.asarray(srt_like.keys).dtype
+    order = np.argsort(np.asarray(keys, kd), kind="stable")
+    n = len(order)
+    ks = np.full((cap,), np.iinfo(kd).max, kd)
+    ads = np.full((cap,), -1, np.int32)
+    ks[:n] = np.asarray(keys, kd)[order]
+    ads[:n] = np.asarray(addrs, np.int32)[order]
+    return six.SortedIndex(keys=jnp.asarray(ks), addrs=jnp.asarray(ads),
+                           size=jnp.asarray(n, I32))
+
+
+def _group_authority_items(store: KVStore, cfg, g: int, eff):
+    """Host-side (keys, addrs) of group ``g`` from its best surviving
+    authority: the primary's hash (keys fetched from the data items —
+    the paper's rebuild-from-data), else a live drained sorted replica,
+    else the data-plane slot scan.  Raises RecoveryError when none of
+    the three can answer."""
+    import numpy as np
+
+    G = int(store.alive.shape[0])
+    R = int(store.blog.tail.shape[0])
+    if eff[g]:
+        hs = jax.tree.map(lambda a: a[g], store.hash)
+        vm = np.asarray(hix.valid_mask(hs))
+        addrs = np.asarray(hs.addr)[vm]
+        try:
+            keys = dp.keys_for_addrs(store, addrs)
+        except dp.RecoveryError as e:
+            raise dp.RecoveryError(
+                g, ["hash + data-plane keys"] + e.searched, e.blockers)
+        return keys, addrs.astype(np.int32)
+    for r in range(R):
+        h = (g + r + 1) % G
+        if not eff[h]:
+            continue
+        srt = jax.tree.map(lambda a: a[r, h], store.bsorted)
+        blog = jax.tree.map(lambda a: a[r, h], store.blog)
+        srt, _ = _drain_one(srt, blog, cfg)
+        keys, addrs, valid = six.items(srt)
+        v = np.asarray(valid)
+        return np.asarray(keys)[v], np.asarray(addrs)[v]
+    return dp.group_items_from_data(store, cfg, g, owner_group)
+
+
+def recover_server(store: KVStore, dev: int, cfg,
+                   online: bool = True) -> KVStore:
     """Recover device ``dev``'s index server from surviving copies
     (host-side control plane; eager, not shard_map'd):
 
       1. rebuild group ``dev``'s hash table from the first live sorted
-         replica of that group (drained first), exactly the paper's
-         hash-from-skiplist rebuild;
-      2. re-clone every sorted replica + backup log ``dev`` hosts from the
-         surviving copy of the same group (skiplist-from-replica rebuild);
-      3. mark ``dev`` alive again.
+         replica of that group — the paper's hash-from-skiplist rebuild;
+      2. re-clone every sorted replica + backup log ``dev`` hosts from a
+         surviving copy of the same group (skiplist-from-replica);
+      3. clear a severed heartbeat and mark ``dev`` alive again.
 
-    Requires at least one live holder per lost structure (single-failure
-    tolerance with n_backups=2; simultaneous multi-failure rebuild beyond
-    that is an open item — see ROADMAP)."""
+    ``online`` (default) clones SNAPSHOTS — the source replica is NOT
+    drained first; its pending UpdateLog delta is cloned alongside and
+    streams into the rebuilt replicas through the ordinary incremental
+    ``apply`` op while foreground PUT/GET/SCAN traffic continues.  The
+    hash (synchronous by contract) is built from the snapshot plus a
+    replay of the cloned pending window.  ``online=False`` keeps the
+    stop-the-world drain-then-clone for comparison (fig13's
+    catch-up-vs-stop-the-world mode).
+
+    Multi-failure fallback: a group with no live sorted replica rebuilds
+    from its primary's hash + the keys stored with the data items
+    (paper: the skiplist rebuild fetches the keys from the data
+    servers), else from a full data-plane slot scan; RecoveryError (with
+    the searched sources and actionable blockers) is raised only when
+    truly no copy exists."""
     import numpy as np
 
     G = int(store.alive.shape[0])
     R = int(store.blog.tail.shape[0])
     alive = np.asarray(store.alive)
-    if bool(alive[dev]):
+    sever = np.asarray(store.sever)
+    if bool(alive[dev]) and not bool(sever[dev]):
         return store
+    # the recovered server heartbeats again; it stays routed-dead until
+    # the rebuild below completes
+    store = store._replace(sever=store.sever.at[dev].set(False),
+                           alive=store.alive.at[dev].set(False))
     if G == 1:
         # single-server store: nothing was wiped (no surviving copy could
         # exist), recovery is just the liveness flip
         return store._replace(alive=store.alive.at[dev].set(True))
+    eff = alive & ~sever
+    eff[dev] = False
 
     def first_live_holder(group, exclude):
         for r in range(R):
             h = (group + r + 1) % G
-            if h != exclude and alive[h]:
+            if h != exclude and eff[h]:
                 return r, h
         return None
 
-    # -- 1. hash-from-sorted-replica rebuild for group ``dev`` ------------
+    # -- 1. hash rebuild for group ``dev`` --------------------------------
     src = first_live_holder(dev, dev)
-    if src is None:
-        raise ValueError(
-            f"group {dev}: no live replica holder to rebuild from")
-    r, h = src
-    srt = jax.tree.map(lambda a: a[r, h], store.bsorted)
-    blog = jax.tree.map(lambda a: a[r, h], store.blog)
-    srt, blog = _drain_one(srt, blog, cfg)
-    store = store._replace(bsorted=_set_slice(store.bsorted, srt, (r, h)),
-                           blog=_set_slice(store.blog, blog, (r, h)))
-    keys, addrs, valid = six.items(srt)
-    hs = jax.tree.map(lambda a: a[dev], store.hash)
-    fresh = hix.HashIndex(sig=jnp.zeros_like(hs.sig),
-                          fp=jnp.zeros_like(hs.fp),
-                          addr=jnp.full_like(hs.addr, -1),
-                          fill=jnp.zeros_like(hs.fill))
-    # the valid mask keeps empty sorted-array slots out of the table
-    # entirely (no appended-then-tombstoned junk eating chain headroom)
-    new_hash, _ = hix.insert(fresh, keys, addrs, cfg, valid)
+    hs_like = jax.tree.map(lambda a: a[dev], store.hash)
+    if src is not None:
+        r, h = src
+        srt = jax.tree.map(lambda a: a[r, h], store.bsorted)
+        blog = jax.tree.map(lambda a: a[r, h], store.blog)
+        if not online:
+            srt, blog = _drain_one(srt, blog, cfg)
+            store = store._replace(
+                bsorted=_set_slice(store.bsorted, srt, (r, h)),
+                blog=_set_slice(store.blog, blog, (r, h)))
+        keys, addrs, valid = six.items(srt)
+        # the valid mask keeps empty sorted-array slots out of the table
+        # entirely (no appended-then-tombstoned junk eating chain room)
+        new_hash, _ = hix.insert(_fresh_hash_like(hs_like), keys, addrs,
+                                 cfg, valid)
+        if online:
+            new_hash = hix.replay_pending(new_hash, blog, cfg)
+    else:
+        # every replica holder dead: fall back to the data plane — the
+        # keys stored with the values reconstruct (key, addr) for any
+        # group (raises RecoveryError with blockers when it can't)
+        k_np, a_np = dp.group_items_from_data(store, cfg, dev,
+                                              owner_group)
+        new_hash = _hash_from_items(hs_like, k_np, a_np, cfg)
     store = store._replace(hash=_set_slice(store.hash, new_hash, dev),
                            plog=_set_slice(
                                store.plog,
                                lg.create(store.plog.keys.shape[1],
                                          store.plog.keys.dtype), dev))
-    # -- 2. sorted-replica re-clone for each group hosted on ``dev`` ------
+    # -- 2. sorted-replica rebuild for each group hosted on ``dev`` -------
+    empty_blog = lg.create(store.plog.keys.shape[1],
+                           store.plog.keys.dtype)
     for r2 in range(R):
         g = (dev - r2 - 1) % G
         src2 = first_live_holder(g, dev)
-        if src2 is None:
-            continue   # no surviving copy: loss beyond tolerance
-        r3, h3 = src2
-        s_srt = jax.tree.map(lambda a: a[r3, h3], store.bsorted)
-        s_blog = jax.tree.map(lambda a: a[r3, h3], store.blog)
-        s_srt, s_blog = _drain_one(s_srt, s_blog, cfg)
-        store = store._replace(
-            bsorted=_set_slice(_set_slice(store.bsorted, s_srt, (r3, h3)),
-                               s_srt, (r2, dev)),
-            blog=_set_slice(_set_slice(store.blog, s_blog, (r3, h3)),
-                            s_blog, (r2, dev)))
+        if src2 is not None:
+            r3, h3 = src2
+            s_srt = jax.tree.map(lambda a: a[r3, h3], store.bsorted)
+            s_blog = jax.tree.map(lambda a: a[r3, h3], store.blog)
+            if not online:
+                s_srt, s_blog = _drain_one(s_srt, s_blog, cfg)
+                store = store._replace(
+                    bsorted=_set_slice(store.bsorted, s_srt, (r3, h3)),
+                    blog=_set_slice(store.blog, s_blog, (r3, h3)))
+            # online: the clone carries the source's pending window; the
+            # ordinary apply op streams it into BOTH copies identically
+            store = store._replace(
+                bsorted=_set_slice(store.bsorted, s_srt, (r2, dev)),
+                blog=_set_slice(store.blog, s_blog, (r2, dev)))
+        else:
+            # no live replica of group g anywhere else: rebuild this
+            # copy from the group's surviving authority (primary hash +
+            # data-plane keys, else the data-plane scan) instead of the
+            # old silent skip that left an empty replica serving scans
+            k_np, a_np = _group_authority_items(store, cfg, g, eff)
+            store = store._replace(
+                bsorted=_set_slice(
+                    store.bsorted,
+                    _sorted_from_items(
+                        jax.tree.map(lambda a: a[r2, dev], store.bsorted),
+                        k_np, a_np), (r2, dev)),
+                blog=_set_slice(store.blog, empty_blog, (r2, dev)))
     return store._replace(alive=store.alive.at[dev].set(True))
 
 
-def parity_report(store: KVStore, cfg) -> list:
+def re_replicate(store: KVStore, cfg) -> tuple:
+    """Post-recovery re-replication pass (closes the multi-failure
+    window): for every group, verify each LIVE holder's sorted replica
+    against the group's authority — the primary's hash when alive, else
+    the first live replica — and rebuild any copy that diverged, so R
+    valid copies exist again before the next failure.  Verification
+    drains COPIES (like parity_report): healthy replicas with pending
+    catch-up debt compare clean and are left untouched, so the pass does
+    not stop the online catch-up.  Returns (store, n_rebuilt)."""
+    import numpy as np
+
+    G = int(store.alive.shape[0])
+    R = int(store.blog.tail.shape[0])
+    eff = np.asarray(store.alive) & ~np.asarray(store.sever)
+    rebuilt = 0
+    for g in range(G):
+        auth = None      # (keys, addrs) fetched lazily on first mismatch
+        if eff[g]:
+            hs = jax.tree.map(lambda a: a[g], store.hash)
+            n_auth = int(hix.n_items(hs))
+        else:
+            src = None
+            for r in range(R):
+                h = (g + r + 1) % G
+                if eff[h]:
+                    src = (r, h)
+                    break
+            if src is None:
+                continue       # nothing to verify against (recover first)
+            srt = jax.tree.map(lambda a: a[src[0], src[1]], store.bsorted)
+            blog = jax.tree.map(lambda a: a[src[0], src[1]], store.blog)
+            srt, _ = _drain_one(srt, blog, cfg)
+            keys, addrs, valid = six.items(srt)
+            v = np.asarray(valid)
+            auth = (np.asarray(keys)[v], np.asarray(addrs)[v])
+            n_auth = len(auth[0])
+        for r in range(R):
+            h = (g + r + 1) % G
+            if not eff[h] or (not eff[g] and src == (r, h)):
+                continue
+            srt = jax.tree.map(lambda a: a[r, h], store.bsorted)
+            blog = jax.tree.map(lambda a: a[r, h], store.blog)
+            dsrt, _ = _drain_one(srt, blog, cfg)
+            keys, addrs, valid = six.items(dsrt)
+            v = np.asarray(valid)
+            rk, ra = np.asarray(keys)[v], np.asarray(addrs)[v]
+            if eff[g]:
+                a_h, f_h, _ = hix.lookup(hs, keys, cfg)
+                okk = (len(rk) == n_auth
+                       and bool(np.asarray(f_h | ~valid).all())
+                       and bool(np.asarray((a_h == addrs) | ~valid).all()))
+            else:
+                okk = (len(rk) == n_auth
+                       and bool(np.array_equal(rk, auth[0]))
+                       and bool(np.array_equal(ra, auth[1])))
+            if okk:
+                continue
+            if auth is None:
+                try:
+                    auth = _group_authority_items(store, cfg, g, eff)
+                except dp.RecoveryError:
+                    break      # unverifiable right now (data shard dead)
+            store = store._replace(
+                bsorted=_set_slice(store.bsorted,
+                                   _sorted_from_items(srt, *auth), (r, h)),
+                blog=_set_slice(store.blog,
+                                lg.create(store.plog.keys.shape[1],
+                                          store.plog.keys.dtype), (r, h)))
+            rebuilt += 1
+    return store, rebuilt
+
+
+def parity_report(store: KVStore, cfg, apply_fn=None) -> list:
     """Hash/sorted parity + value-slot audit (test/debug helper, eager).
     For every group g and replica r: drain a COPY of the replica, then
     check the replica's live item count equals the hash table's, every
     replica key is found in the hash, and the addresses agree.  A final
     ``value_slots`` entry audits the data plane's slot accounting (every
-    live address allocated, nothing orphaned or double-referenced — see
-    data_plane.value_slot_audit).  Returns a list of dicts with an
-    ``agree`` bool; entries carry ``primary_alive``/``holder_alive`` so a
-    mid-failure caller can restrict the assertion to live structures."""
+    live address allocated, nothing orphaned or double-referenced, no
+    free-queue spill — see data_plane.value_slot_audit).  Returns a list
+    of dicts with an ``agree`` bool; entries carry ``primary_alive`` /
+    ``holder_alive`` — TRUE liveness (a severed-but-undetected server
+    reports dead: the report is the omniscient test oracle, not the
+    client's view) — so a mid-failure caller can restrict the assertion
+    to live structures."""
     import numpy as np
 
     G = int(store.alive.shape[0])
     R = int(store.blog.tail.shape[0])
-    alive = np.asarray(store.alive)
+    alive = np.asarray(store.alive) & ~np.asarray(store.sever)
     out = []
     for g in range(G):
         hs = jax.tree.map(lambda a: a[g], store.hash)
@@ -853,5 +1183,5 @@ def parity_report(store: KVStore, cfg) -> list:
                         "n_hash": n_hash, "n_sorted": n_sorted,
                         "agree": (n_hash == n_sorted) and found_ok
                         and addr_ok})
-    out.append(dp.value_slot_audit(store, cfg))
+    out.append(dp.value_slot_audit(store, cfg, apply_fn))
     return out

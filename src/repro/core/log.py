@@ -92,6 +92,18 @@ def pending_lookup(log: UpdateLog, keys):
     return hit, op, addr
 
 
+def pending_entries_np(log: UpdateLog):
+    """Host view of the pending window [applied, tail) in append order —
+    the recovery control plane's read (keys, addrs, ops as numpy)."""
+    import numpy as np
+
+    cap = int(log.keys.shape[0])
+    applied, tail = int(log.applied), int(log.tail)
+    idx = (applied + np.arange(tail - applied)) % cap
+    return (np.asarray(log.keys)[idx], np.asarray(log.addrs)[idx],
+            np.asarray(log.ops)[idx])
+
+
 def take_pending(log: UpdateLog, batch: int):
     """Gather up to ``batch`` oldest pending entries (static shape).
     Returns (keys, addrs, ops(0 for empty), new_log with applied advanced)."""

@@ -68,3 +68,26 @@ class ScanResult(NamedTuple):
     keys: jnp.ndarray     # [limit] ascending; key_inf-padded past ``count``
     addrs: jnp.ndarray    # int32 [limit]
     count: jnp.ndarray    # int32 scalar: live entries in [lo, hi]
+
+
+class FailResult(NamedTuple):
+    """Outcome of a fail/sever kill switch — surfaces the capability the
+    backend actually exercised instead of diverging silently."""
+    server: int
+    wiped: bool           # False on a 1-device mesh: every replica lives
+    # on the failing device, so no surviving copy could exist and the
+    # failure degrades to mask-only (state intact) — explicit, and also
+    # warned about, rather than silently weaker semantics
+
+
+class RecoverResult(NamedTuple):
+    """Outcome of a recovery: how it rebuilt and what else it repaired."""
+    server: int
+    online: bool          # snapshot-clone + streamed log catch-up (True)
+    #                       vs stop-the-world drain-then-clone
+    re_replicated: int    # replica copies the post-recovery
+    #                       re-replication pass rebuilt (multi-failure
+    #                       window closed before the next failure)
+    catch_up_pending: int  # log entries still streaming into the rebuilt
+    #                       replicas when recovery returned (0 for
+    #                       offline recovery: the drain already ran)

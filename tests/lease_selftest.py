@@ -1,0 +1,272 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+"""Lease-based failure-detection battery (8 host devices).
+
+Spawned as a subprocess by tests/test_lease_detection.py (the dry-run
+rule: only multi-device entrypoints force a host device count).  Every
+kill in here is delivered by SEVERING HEARTBEATS (tests/oracle.py's
+FaultInjector) — there is not a single oracle ``fail_server`` call; the
+client must discover each failure through its lease detector (paper §5):
+
+  * detection bound — after a sever, the client demotes the server to
+    degraded routing in EXACTLY ``cfg.lease_misses`` observation rounds
+    (heartbeat counters bumped on the mesh, aged host-side);
+  * differential trace — a seeded op trace with sever/recover events
+    spliced in replays result-for-result against the fault-oblivious
+    oracle: pre-detection timeouts are retried, post-detection degraded
+    routing serves, recovery restores parity;
+  * online catch-up — recovery clones snapshots and returns with the
+    pending-log delta still streaming (``RecoverResult.catch_up_pending
+    > 0``); foreground PUT/GET traffic interleaves DURING the catch-up
+    and stays oracle-equivalent, then the debt drains and parity holds;
+  * multi-failure — an adjacent double sever (both replica holders of
+    one group) and the triple that previously raised a bare ValueError:
+    recovery now falls back to the primary's hash + the keys stored
+    with the data items (paper: rebuild fetches keys from the data
+    servers), re-replication restores R copies, and parity is clean;
+    a truly-lost configuration raises the typed RecoveryError with
+    actionable blockers instead.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.histore import scaled
+from repro.core import kvstore as kv
+from repro.core.client import DistributedBackend, HiStoreClient
+from repro.core.hashing import key_dtype
+
+from oracle import (FaultInjector, Oracle, assert_equivalent, gen_ops,
+                    replay, splice_faults)
+
+CFG = scaled(log_capacity=512, async_apply_batch=128, lease_misses=3)
+CAP = 512
+N_EVENTS = 10
+
+
+def make_client(mesh, **kw):
+    return HiStoreClient(
+        DistributedBackend(mesh, CFG, CAP, capacity_q=64, scan_limit=128),
+        batch_quantum=4 * mesh.devices.size, max_retries=32, **kw)
+
+
+def owned_by(keys, dev, G, invert=False):
+    own = np.asarray(kv.owner_group(jnp.asarray(keys, key_dtype()), G))
+    return keys[(own != dev) if invert else (own == dev)]
+
+
+def run_detection_bound(mesh) -> None:
+    """Exactly lease_misses observation rounds after a sever, the client
+    demotes — no sooner (no spurious demotions), no later (the bound)."""
+    G = mesh.devices.size
+    client = make_client(mesh)
+    backend = client.backend
+    keys = np.random.RandomState(1).choice(10 ** 6, 8 * G,
+                                           replace=False) + 1
+    assert client.put(keys, np.arange(8 * G)).all_ok
+    dead = 3
+    probe = owned_by(keys, dead, G, invert=True)[:G]  # no retry loops
+    inj = FaultInjector(client)
+    inj.sever(dead)
+    for i in range(CFG.lease_misses):
+        assert dead not in backend._dead, \
+            f"demoted after only {i} rounds (lease bound is " \
+            f"{CFG.lease_misses})"
+        client.get(probe)          # one observation round
+    assert backend.detected == [dead], \
+        "the detector (and nothing else) must demote the severed server"
+    assert inj.oracle_kills == 0
+    # degraded routing now serves the dead group's keys from backups
+    dk = owned_by(keys, dead, G)
+    if len(dk):
+        r = client.get(dk)
+        assert r.all_found, "post-detection degraded GETs must serve"
+    inj.recover(dead)
+    assert dead not in backend._dead and not backend._severed
+    assert all(p["agree"] for p in kv.parity_report(backend.store, CFG))
+    print(f"detection bound ok (demoted dev {dead} in exactly "
+          f"{CFG.lease_misses} rounds)", flush=True)
+
+
+def run_detector_trace(mesh, mix: str, seed: int, dead_dev: int) -> None:
+    """Differential replay where the kill arrives only through severed
+    heartbeats: the store must stay indistinguishable from the healthy
+    oracle across the undetected, degraded and post-recovery phases."""
+    G = mesh.devices.size
+    ops = gen_ops(seed, mix, n_events=N_EVENTS, batch=3 * G)
+    trace = splice_faults(ops, [
+        (N_EVENTS // 3, "sever", dead_dev),
+        (2 * N_EVENTS // 3, "recover", dead_dev),
+    ])
+    assert not any(ev[0] == "fail" for ev in trace), \
+        "detector schedule must contain zero oracle fail_server events"
+    client = make_client(mesh)
+    oracle = Oracle(value_words=CFG.value_words)
+
+    def hook(c, event):
+        c.drain()
+        for p in kv.parity_report(c.backend.store, CFG):
+            if p.get("kind") == "value_slots":
+                assert p["agree"], f"value audit broke after {event}: {p}"
+            elif p["primary_alive"] and p["holder_alive"]:
+                assert p["agree"], f"live parity broke after {event}: {p}"
+
+    assert_equivalent(replay(client, trace, phase_hook=hook),
+                      replay(oracle, trace),
+                      label=f"lease/{mix}/seed{seed}")
+    assert client.backend.detected == [dead_dev], \
+        "the kill must have been DISCOVERED by the lease detector"
+    assert all(p["agree"]
+               for p in kv.parity_report(client.backend.store, CFG))
+    live = np.fromiter(oracle.model.keys(), np.int64)
+    if len(live):
+        g_all = client.get(live)
+        assert g_all.all_found and bool(
+            (np.asarray(g_all.hops) == 1).all())
+    print(f"detector trace {mix} seed {seed} ok "
+          f"(detected {client.backend.detected})", flush=True)
+
+
+def run_online_catch_up(mesh) -> None:
+    """Online recovery: the rebuild returns with pending-log debt still
+    streaming; foreground ops interleave DURING the catch-up and match
+    the oracle; the debt then drains through ordinary applies."""
+    G = mesh.devices.size
+    client = make_client(mesh, migrate_on_recover=False)
+    backend = client.backend
+    model = {}
+    rng = np.random.RandomState(7)
+    keys = rng.choice(10 ** 6, 16 * G, replace=False) + 1
+    assert client.put(keys, np.arange(16 * G)).all_ok
+    model.update(zip(keys.tolist(), range(16 * G)))
+    client.drain()
+    dead = 2
+    inj = FaultInjector(client)
+    inj.sever(dead)
+    # ops until the lease expires (puts to live owners also build the
+    # pending backlog the recovery will have to stream)
+    other = owned_by(keys, dead, G, invert=True)
+    w = 0
+    while dead not in backend._dead:
+        batch = other[w % len(other):][:2 * G]
+        assert client.put(batch, np.arange(len(batch)) + 50_000).all_ok
+        model.update(zip(batch.tolist(),
+                         (np.arange(len(batch)) + 50_000).tolist()))
+        w += 2 * G
+        assert w < 100 * G, "detector must fire"
+    rec = backend.recover_server(dead)        # online by default
+    assert rec.online and rec.catch_up_pending > 0, \
+        "online recovery must return with the catch-up still streaming " \
+        f"(got {rec})"
+    # foreground traffic DURING catch-up: correct answers while the
+    # rebuilt replicas are still behind their cloned logs
+    mid = client.get(keys[: 8 * G])
+    assert mid.all_found
+    np.testing.assert_array_equal(
+        np.asarray(mid.values)[:, 0],
+        [model[k] for k in keys[: 8 * G].tolist()])
+    fresh = rng.choice(10 ** 6, 4 * G, replace=False) + 2 * 10 ** 6
+    assert client.put(fresh, np.arange(4 * G)).all_ok
+    model.update(zip(fresh.tolist(), range(4 * G)))
+    assert int(backend.pending_ops()) > 0, \
+        "catch-up must overlap the foreground ops, not precede them"
+    client.drain()                             # end of the catch-up
+    assert all(p["agree"] for p in kv.parity_report(backend.store, CFG))
+    allk = np.fromiter(model.keys(), np.int64)
+    g_all = client.get(allk)
+    assert g_all.all_found
+    np.testing.assert_array_equal(np.asarray(g_all.values)[:, 0],
+                                  [model[k] for k in allk.tolist()])
+    assert inj.oracle_kills == 0
+    print(f"online catch-up ok (pending {rec.catch_up_pending} at "
+          "recovery return)", flush=True)
+
+
+def run_multi_failure(mesh) -> None:
+    """Adjacent double sever (both replica holders of group 1) and the
+    triple that previously raised: hash + data-item-key fallbacks
+    rebuild every copy, re-replication restores R live copies, parity is
+    clean after every phase.  A truly-lost configuration raises the
+    typed RecoveryError naming its blockers."""
+    G = mesh.devices.size
+    client = make_client(mesh)
+    backend = client.backend
+    rng = np.random.RandomState(9)
+    keys = rng.choice(10 ** 6, 16 * G, replace=False) + 1
+    vals = np.arange(16 * G)
+    assert client.put(keys, vals).all_ok
+    client.drain()
+    inj = FaultInjector(client)
+
+    def detect_all(devs):
+        probe = keys[np.isin(
+            np.asarray(kv.owner_group(jnp.asarray(keys, key_dtype()), G)),
+            devs, invert=True)][:G]
+        for _ in range(CFG.lease_misses + 1):
+            client.get(probe)
+        assert set(devs) <= backend._dead
+
+    # -- double failure: devs 2 and 3 = BOTH holders of group 1 ----------
+    inj.sever(2)
+    inj.sever(3)
+    detect_all([2, 3])
+    # degraded traffic across the hole (group 2 served by holder 4 etc.)
+    r = client.get(keys)
+    assert r.all_found, "degraded GETs must survive the double failure"
+    inj.recover(2)      # group 1's replica here rebuilds from hash+data
+    inj.recover(3)
+    assert all(p["agree"] for p in kv.parity_report(backend.store, CFG)), \
+        "double failure: recovery must restore full parity"
+    # -- triple failure: group 2 loses hash AND both replicas ------------
+    for d in (2, 3, 4):
+        inj.sever(d)
+    detect_all([2, 3, 4])
+    inj.recover(2)      # previously: bare ValueError (no live holder);
+    inj.recover(3)      # now: data-plane key scan rebuilds group 2
+    inj.recover(4)
+    assert all(p["agree"] for p in kv.parity_report(backend.store, CFG)), \
+        "triple failure: data-plane fallback must restore full parity"
+    g_all = client.get(keys)
+    assert g_all.all_found
+    np.testing.assert_array_equal(np.asarray(g_all.values)[:, 0], vals)
+    assert inj.oracle_kills == 0, "no oracle fail_server anywhere"
+    # -- truly lost: the fallback's blocker is typed and actionable ------
+    for d in (2, 3, 4):
+        inj.sever(d)
+    detect_all([2, 3, 4])
+    client.fail_data_server(6)   # the data-plane scan now cannot answer
+    try:
+        backend.recover_server(2)
+    except kv.RecoveryError as e:
+        assert e.blockers == ["data server 6"], e.blockers
+    else:
+        raise AssertionError("truly-lost recovery must raise the typed "
+                             "RecoveryError")
+    client.recover_data_server(6)
+    inj.recover(2)
+    inj.recover(3)
+    inj.recover(4)
+    assert all(p["agree"] for p in kv.parity_report(backend.store, CFG))
+    print("multi-failure ok (double + triple recovered, typed error on "
+          "truly-lost)", flush=True)
+
+
+def main() -> int:
+    mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
+    run_detection_bound(mesh)
+    run_detector_trace(mesh, "uniform", 21, 5)
+    run_online_catch_up(mesh)
+    run_multi_failure(mesh)
+    print("LEASE-SELFTEST-OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

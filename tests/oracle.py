@@ -84,6 +84,9 @@ class Oracle:
     def fail_server(self, server: int) -> None:
         pass
 
+    def sever_server(self, server: int) -> None:
+        pass
+
     def recover_server(self, server: int) -> None:
         pass
 
@@ -92,6 +95,41 @@ class Oracle:
 
     def recover_data_server(self, server: int) -> None:
         pass
+
+
+class FaultInjector:
+    """Heartbeat-severing fault injector: kills are delivered by cutting
+    a server's heartbeats (``sever``), NEVER by calling the oracle
+    ``fail_server`` — the client under test must DISCOVER each failure
+    through its lease detector (paper §5).  Wraps the system so a replay
+    trace's "sever" events route here, and records every injection so a
+    battery can assert zero oracle kills happened."""
+
+    def __init__(self, system):
+        self.system = system
+        self.injected: list = []
+
+    def sever(self, server: int):
+        self.injected.append(("sever", server))
+        return self.system.sever_server(server)
+
+    def fail(self, server: int):
+        """Oracle kill (client told instantly) — recorded so a detector
+        schedule's ``oracle_kills == 0`` assertion is falsifiable."""
+        self.injected.append(("fail", server))
+        return self.system.fail_server(server)
+
+    def recover(self, server: int):
+        """Operator-initiated repair (detection is the client's job;
+        re-provisioning a machine is not)."""
+        self.injected.append(("recover", server))
+        return self.system.recover_server(server)
+
+    @property
+    def oracle_kills(self) -> int:
+        """Count of direct fail_server calls made through this injector
+        — a detector schedule asserts it stays 0."""
+        return sum(1 for k, _ in self.injected if k == "fail")
 
 
 # ---------------------------------------------------------------------------
@@ -151,15 +189,17 @@ def gen_ops(seed: int, mix: str = "uniform", n_events: int = 12,
     return events
 
 
-FAULT_KINDS = ("fail", "recover", "fail_data", "recover_data")
+FAULT_KINDS = ("fail", "sever", "recover", "fail_data", "recover_data")
 
 
 def splice_faults(events: list, schedule: list) -> list:
-    """Insert ("fail"|"recover"|"fail_data"|"recover_data", server)
-    events at trace offsets — index-server and data-server failures are
-    separate domains (paper §2).  ``schedule``: [(offset, kind, server),
-    ...]; offsets index the ORIGINAL op trace, so a schedule is portable
-    across backends."""
+    """Insert ("fail"|"sever"|"recover"|"fail_data"|"recover_data",
+    server) events at trace offsets — index-server and data-server
+    failures are separate domains (paper §2), and "sever" delivers an
+    index-server kill through cut heartbeats that the client must detect
+    itself (no oracle fail_server).  ``schedule``: [(offset, kind,
+    server), ...]; offsets index the ORIGINAL op trace, so a schedule is
+    portable across backends."""
     out = list(events)
     for off, kind, server in sorted(schedule, reverse=True):
         assert kind in FAULT_KINDS

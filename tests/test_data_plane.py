@@ -1,7 +1,8 @@
 """Data-plane tests: the slot allocator (alloc/free round-trip, no double
 allocation, honesty when full), the wrap-at-capacity regression that the
-seed's monotone ring cursor fails (ROADMAP's value-slot GC item), and the
-``GetResult.hops`` channel.
+seed's monotone ring cursor fails (ROADMAP's value-slot GC item), the
+``GetResult.hops`` channel, and the free-queue fill/push-back round-trip
+(a full queue pushes ops back instead of dropping frees).
 
 The wrap trace is the acceptance bar of the data-plane issue: cumulative
 puts exceed 2x the value capacity with deletes interleaved, the store
@@ -207,6 +208,110 @@ def test_wrap_trace_dist_vs_oracle():
     assert audit["kind"] == "value_slots"
     assert audit["live"] == len(oracle.model)
     assert audit["orphaned"] == 0 and audit["double"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Free-queue fill/push-back round-trip (prolonged data-outage bugfix)
+# ---------------------------------------------------------------------------
+def _check_freeq_fill_pushback_roundtrip(cap, script):
+    """Model-based property of the free queue ring: an append is accepted
+    only while the pending window has room (overflow reported, never
+    silent), and every ACCEPTED address drains exactly once, in order —
+    so no free can be dropped or duplicated whatever the fill/drain
+    interleaving."""
+    from collections import deque
+
+    from repro.core import log as lg
+    from repro.core.hashing import key_dtype
+
+    q = lg.create(cap, key_dtype())
+    model: deque = deque()
+    next_addr = 0
+    for do_append, n in script:
+        n = n % (cap + 2)
+        if do_append:
+            addrs = jnp.arange(next_addr, next_addr + n, dtype=jnp.int32)
+            next_addr += n
+            q, ok = lg.append(q, jnp.zeros((n,), q.keys.dtype), addrs,
+                              jnp.ones((n,), jnp.int8))
+            acc = np.asarray(ok)
+            room = cap - len(model)
+            assert int(acc.sum()) == min(n, room), \
+                "append honesty: exactly min(batch, room) accepted"
+            model.extend(np.asarray(addrs)[acc].tolist())
+        else:
+            k, a, o, q = lg.take_pending(q, max(n, 1))
+            taken = np.asarray(a)[np.asarray(o) > 0].tolist()
+            expect = [model.popleft() for _ in range(len(taken))]
+            assert taken == expect, "drain order = accept order"
+        assert int(lg.pending_count(q)) == len(model), \
+            "ring pending balances the model"
+    while model:
+        k, a, o, q = lg.take_pending(q, cap)
+        taken = np.asarray(a)[np.asarray(o) > 0].tolist()
+        assert taken == [model.popleft() for _ in range(len(taken))]
+    assert int(lg.pending_count(q)) == 0
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 40)), max_size=24))
+def test_freeq_fill_pushback_roundtrip_prop(script):
+    _check_freeq_fill_pushback_roundtrip(8, script)
+
+
+def test_freeq_fill_pushback_fixed_smokes():
+    _check_freeq_fill_pushback_roundtrip(
+        8, [(True, 5), (False, 2), (True, 9), (True, 3), (False, 30),
+            (True, 8), (False, 1)])
+    _check_freeq_fill_pushback_roundtrip(4, [(True, 10), (True, 1)])
+
+
+def test_full_freeq_pushes_back_instead_of_dropping():
+    """A delete whose value slot must queue a remote free is NACKED while
+    the free queue is full (visible push-back the client retries after GC
+    rounds make room) — never acked with the free silently dropped.  The
+    dead data shard makes every slot free 'remote' (undeliverable), and
+    the queue is pre-filled to the brim host-side."""
+    mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
+    backend = DistributedBackend(mesh, CFG, 256, capacity_q=64)
+    client = HiStoreClient(backend, batch_quantum=16, max_retries=32)
+    keys = np.arange(1, 17)
+    assert client.put(keys, keys).all_ok
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("ignore")      # 1-dev mesh: mask-only warning
+        client.fail_data_server(0)
+    # brim-fill the free queue: pending == capacity, zero room
+    st = backend.store
+    fq = st.data.freeq
+    backend.store = st._replace(data=st.data._replace(
+        freeq=fq._replace(tail=fq.applied + jnp.int32(fq.keys.shape[1]))))
+    ok, found, _ = backend.delete(jnp.asarray(keys, keys_dtype()),
+                                  jnp.ones((16,), bool))
+    assert not bool(np.asarray(ok).any()), \
+        "full free queue must push the deletes back, not drop their frees"
+    audit = kv.parity_report(backend.store, CFG)[-1]
+    assert audit["fq_spill"] == 0, "push-back means nothing ever spilled"
+    # duplicate-key batch: the nacked winner must take its whole group
+    # with it (a re-elected loser lane would append to the full queue)
+    dup = np.repeat(keys[:8], 2)
+    ok_d, _, _ = backend.delete(jnp.asarray(dup, keys_dtype()),
+                                jnp.ones((16,), bool))
+    assert not bool(np.asarray(ok_d).any()), \
+        "a pushed-back winner must nack its duplicate lanes too"
+    audit = kv.parity_report(backend.store, CFG)[-1]
+    assert audit["fq_spill"] == 0 and audit["orphaned"] == 0, audit
+    # the client's retry loop interleaves GC rounds that reclaim queue
+    # room, so the same deletes eventually land — with the frees intact
+    res = client.delete(keys)
+    assert bool(np.asarray(res.ok).all()) and bool(
+        np.asarray(res.found).all())
+    assert kv.parity_report(backend.store, CFG)[-1]["agree"]
+
+
+def keys_dtype():
+    from repro.core.hashing import key_dtype
+    return key_dtype()
 
 
 # ---------------------------------------------------------------------------

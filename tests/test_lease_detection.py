@@ -1,0 +1,132 @@
+"""Lease-based failure detection: the client discovers failures itself.
+
+Two rigs:
+  * the 8-device subprocess battery (tests/lease_selftest.py) — the real
+    thing: sever-only schedules, the exact detection bound, online
+    catch-up with interleaved foreground ops, multi-failure fallback
+    rebuilds.  Deliberately NOT marked ``slow``: the detector is this
+    PR's tentpole and the battery is sized for the fast tier (one mix,
+    short trace).
+  * in-process single-device tests — the capability edge (a 1-device
+    mesh cannot wipe: every replica lives on the failing device), the
+    explicit FailResult/warning surface of that divergence, and the
+    detector's demote-on-stalled-heartbeats logic.
+"""
+import os
+import subprocess
+import sys
+import warnings
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.histore import scaled
+from repro.core import kvstore as kv
+from repro.core.client import DistributedBackend, HiStoreClient
+
+ROOT = Path(__file__).resolve().parents[1]
+CFG = scaled(log_capacity=1 << 10, async_apply_batch=256, lease_misses=3)
+
+
+def _one_dev_client(**kw):
+    mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
+    return HiStoreClient(DistributedBackend(mesh, CFG, 512, capacity_q=64),
+                         batch_quantum=16, **kw)
+
+
+def test_single_device_fail_is_mask_only_and_says_so():
+    """Satellite bugfix: a 1-device mesh folds every replica onto the
+    failing device, so fail_server degrades to mask-only — that used to
+    happen silently (``wipe=self.G > 1``); now the capability is surfaced
+    as FailResult.wiped plus a RuntimeWarning, and the masked state
+    survives to recovery."""
+    client = _one_dev_client()
+    keys = np.arange(1, 33)
+    assert client.put(keys, keys).all_ok
+    with pytest.warns(RuntimeWarning, match="mask-only"):
+        r = client.fail_server(0)
+    assert r.wiped is False and r.server == 0
+    client.recover_server(0)
+    g = client.get(keys)
+    assert g.all_found, "mask-only failure must preserve the state"
+    # the data plane's kill switch surfaces the same capability
+    with pytest.warns(RuntimeWarning, match="mask-only"):
+        rd = client.fail_data_server(0)
+    assert rd.wiped is False
+    client.recover_data_server(0)
+    assert all(p["agree"] for p in kv.parity_report(client.backend.store,
+                                                    CFG))
+
+
+def test_sever_timeouts_then_detector_demotes():
+    """A severed server answers nothing: ops time out (un-acked / un-
+    routed, never wrong answers) while the detector ages the stalled
+    heartbeat, demotes within the lease bound, and recovery re-admits."""
+    client = _one_dev_client()
+    backend = client.backend
+    keys = np.arange(1, 17)
+    assert client.put(keys, keys).all_ok
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")    # 1-dev mask-only warning
+        r = client.sever_server(0)
+    assert r.wiped is False
+    assert 0 not in backend._dead, "sever must NOT update the routing view"
+    # with every server severed ops push back visibly (and each retry is
+    # an observation round, so the lease expires inside the loop)
+    g = client.get(keys)
+    assert not bool(np.asarray(g.routed).any()), \
+        "pre-recovery reads must report push-back, not misses"
+    assert not bool(np.asarray(g.found).any())
+    assert backend.detected == [0], \
+        f"detector must demote within the bound (got {backend.detected})"
+    rec = client.recover_server(0)
+    assert rec.server == 0 and not backend._severed
+    g2 = client.get(keys)
+    assert g2.all_found, "mask-only sever preserves state through recovery"
+
+
+def test_detector_disabled_without_lease_misses():
+    """lease_misses=0 turns detection off: no heartbeat reads, no
+    demotions — the oracle kill switches still work as before."""
+    mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
+    cfg0 = scaled(log_capacity=1 << 10, async_apply_batch=256,
+                  lease_misses=0)
+    client = HiStoreClient(DistributedBackend(mesh, cfg0, 256,
+                                              capacity_q=64),
+                           batch_quantum=16)
+    keys = np.arange(1, 17)
+    assert client.put(keys, keys).all_ok
+    assert client.backend.lease_misses == 0
+    client.get(keys)
+    assert client.backend.detected == []
+
+
+def test_recover_result_reports_online_mode():
+    """recover_server surfaces what it did: online snapshot recovery by
+    default, the stop-the-world drain on request."""
+    client = _one_dev_client()
+    keys = np.arange(1, 17)
+    assert client.put(keys, keys).all_ok
+    client.drain()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        client.fail_server(0)
+    rec = client.backend.recover_server(0, online=False)
+    assert rec.online is False and rec.catch_up_pending == 0
+
+
+def test_lease_battery_8dev():
+    """The full detector battery (see tests/lease_selftest.py): severed
+    heartbeats only, detection bound, online catch-up under foreground
+    load, multi-failure fallback rebuilds, typed RecoveryError."""
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [str(ROOT / "src"), str(ROOT / "tests")]),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests/lease_selftest.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    assert "LEASE-SELFTEST-OK" in proc.stdout

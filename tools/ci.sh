@@ -5,7 +5,17 @@
 #   bash tools/ci.sh --fast         # alias of the default (kept for muscle memory)
 #   bash tools/ci.sh --bench-smoke  # fig13 recovery + value-migration bench,
 #                                   # distributed mode, few steps; writes
-#                                   # bench_smoke_fig13.json (CI uploads it)
+#                                   # bench_smoke_fig13.json, then the
+#                                   # --detection mode (lease detection
+#                                   # latency + online-vs-stop-the-world
+#                                   # recovery) into
+#                                   # bench_smoke_fig13_detection.json
+#                                   # (CI uploads both)
+#
+# The fast tier includes the lease-detector battery
+# (tests/test_lease_detection.py spawns tests/lease_selftest.py on 8 host
+# devices): failure detection is availability-critical, so it is
+# deliberately NOT behind the slow marker.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,6 +32,10 @@ elif [[ "${1:-}" == "--bench-smoke" ]]; then
   echo "== bench smoke: fig13 distributed recovery + value migration (8 host devices) =="
   XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
     python -m benchmarks.fig13_recovery --smoke --json bench_smoke_fig13.json
+  echo "== bench smoke: fig13 lease detection + online catch-up (8 host devices) =="
+  XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m benchmarks.fig13_recovery --detection --smoke \
+      --json bench_smoke_fig13_detection.json
 else
   echo "== tier-1: pytest (fast tier; --all for the multi-minute batteries) =="
   python -m pytest -q -m "not slow"
