@@ -163,7 +163,8 @@ def run_value_migration(report, n=20_000):
     report("fig13_degraded_get_second_hop", n=n, devices=G,
            us_per_op=t2 / len(probe) * 1e6, mean_hops=round(hops2, 3))
     report("fig13_post_migration_get", n=n, devices=G,
-           us_per_op=t1 / len(probe) * 1e6, mean_hops=round(hops1, 3))
+           us_per_op=t1 / len(probe) * 1e6, mean_hops=round(hops1, 3),
+           one_rtt=bool(r1.one_rtt))
     report("fig13_value_migration", n=n, devices=G, moved=moved,
            seconds=round(t_mig, 4),
            speedup_2hop_vs_1hop=round(t2 / t1, 3))
@@ -195,25 +196,29 @@ def _gc_slot_reuse(report, capacity=2048, batch=512, cycles=10):
 def run_detection(report, n=8_000):
     """Availability control plane timings: lease-expiry detection latency
     (observation rounds + wall time from severed heartbeat to degraded
-    routing, zero oracle fail_server calls) and online-vs-stop-the-world
-    recovery — return-to-service latency of the snapshot clone with the
-    log delta still streaming vs the drain-first rebuild of the same
-    backlog."""
+    routing, zero oracle fail_server calls), the same for DATA servers
+    (plus mirror-served GET latency through the undetected window),
+    idle-client wall-clock detection via the background ticker, and
+    online-vs-stop-the-world recovery — return-to-service latency of the
+    snapshot clone with the log delta still streaming vs the drain-first
+    rebuild of the same backlog."""
     G = len(jax.devices())
     if G < 3:
         report("fig13_detection", skipped=f"needs >=3 devices, have {G}")
         return
     from repro.configs.histore import scaled
+    # rounds clock: the detection rows COUNT observation rounds; the
+    # wall-clock path is timed separately below with its own config
     cfg = scaled(log_capacity=1 << 14, async_apply_batch=256,
-                 lease_misses=3)
+                 lease_misses=3, lease_clock="rounds")
     mesh = jax.make_mesh((G,), (kv.AXIS,))
     keys = uniform_keys(n, seed=47, space=10 ** 8)
     own = np.asarray(kv.owner_group(jnp.asarray(keys, KD), G))
     dead = 1
     probe = keys[own != dead][: 8 * G]
 
-    def fresh_client():
-        backend = DistributedBackend(mesh, cfg, max(4096, 4 * n // G),
+    def fresh_client(ccfg=cfg):
+        backend = DistributedBackend(mesh, ccfg, max(4096, 4 * n // G),
                                      capacity_q=256)
         client = HiStoreClient(backend, batch_quantum=64 * G,
                                migrate_on_recover=False)
@@ -235,7 +240,58 @@ def run_detection(report, n=8_000):
     t_detect = time.perf_counter() - t0
     report("fig13_detection_latency", n=n, devices=G,
            lease_misses=cfg.lease_misses, rounds=rounds,
-           seconds=round(t_detect, 4))
+           seconds=round(t_detect, 4), detected=True)
+    # --- data-server lease detection + mirror-served GETs ---------------
+    # the unified plane: a data-server kill through cut heartbeats —
+    # GETs of its shard are mirror-served (second-hop fetch) through the
+    # undetected window, the data lease expires in observation rounds,
+    # recovery + migration restore one-RTT reads
+    client = fresh_client()
+    backend = client.backend
+    client.get(probe)                       # warm the compiled get+tick
+    backend.sever_data_server(dead)
+    rounds = 0
+    t0 = time.perf_counter()
+    while dead not in backend._data_dead:
+        client.get(probe)
+        rounds += 1
+        assert rounds <= 10 * cfg.lease_misses, "data detector must fire"
+    t_detect = time.perf_counter() - t0
+    report("fig13_data_detection_latency", n=n, devices=G,
+           lease_misses=cfg.lease_misses, rounds=rounds,
+           seconds=round(t_detect, 4), detected=True)
+    dk = keys[own == dead][: 8 * G]
+    t2, r2 = timeit(lambda: client.get(dk), iters=3)
+    report("fig13_mirror_served_get", n=n, devices=G,
+           us_per_op=t2 / max(len(dk), 1) * 1e6,
+           mean_hops=round(float(np.asarray(r2.hops).mean()), 3),
+           served_under_data_failure=bool(r2.all_found))
+    backend.recover_data_server(dead)
+    moved = client.migrate()
+    t1, r1 = timeit(lambda: client.get(dk), iters=3)
+    report("fig13_post_data_recovery_get", n=n, devices=G, moved=moved,
+           us_per_op=t1 / max(len(dk), 1) * 1e6, one_rtt=bool(r1.one_rtt))
+    # --- wall-clock idle detection (background ticker only) -------------
+    wcfg = scaled(log_capacity=1 << 14, async_apply_batch=256,
+                  lease_misses=3, lease_clock="wall",
+                  lease_timeout_s=0.5, lease_interval_s=0.1)
+    client = fresh_client(wcfg)
+    backend = client.backend
+    backend._lease_tick(bump=True)          # compile the tick op
+    client.start_ticker()
+    try:
+        backend.sever_server(dead)
+        t0 = time.perf_counter()
+        while dead not in backend._dead:
+            time.sleep(0.01)
+            assert time.perf_counter() - t0 < 30, "idle detector must fire"
+        t_idle = time.perf_counter() - t0
+    finally:
+        client.stop_ticker()
+    report("fig13_wall_idle_detection", n=n, devices=G,
+           lease_timeout_s=wcfg.lease_timeout_s,
+           lease_interval_s=wcfg.lease_interval_s,
+           seconds=round(t_idle, 4), detected_idle=True)
     # --- online catch-up vs stop-the-world recovery ---------------------
     # metric: RETURN-TO-SERVICE latency of the rebuild itself — the
     # online mode hands the backlog to the incremental apply stream

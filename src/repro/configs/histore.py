@@ -34,11 +34,25 @@ class HiStoreConfig:
     # distribution ---------------------------------------------------------
     groups_per_device: int = 1
     # failure detection ----------------------------------------------------
-    lease_misses: int = 3          # op rounds a server may miss heartbeats
-                                   # before the client demotes it to degraded
-                                   # routing (paper §5's lease timeout,
-                                   # measured in observation rounds rather
-                                   # than wall time; 0 disables detection)
+    lease_misses: int = 3          # master switch: 0 disables detection
+                                   # entirely (no heartbeat reads).  In
+                                   # "rounds" mode it is also the bound:
+                                   # observation rounds a server may miss
+                                   # heartbeats before the client demotes
+                                   # it to degraded routing
+    lease_clock: str = "wall"      # "wall": leases age by elapsed
+                                   # time.monotonic() — the paper §5
+                                   # semantics; an idle client detects via
+                                   # the background ticker.  "rounds": age
+                                   # by observation rounds (deterministic
+                                   # test mode — the exact lease_misses
+                                   # detection bound)
+    lease_timeout_s: float = 1.0   # wall mode: a heartbeat stalled this
+                                   # long demotes the server
+    lease_interval_s: float = 0.25  # wall mode: the client-side background
+                                   # ticker issues a heartbeat-only tick
+                                   # round whenever no foreground traffic
+                                   # ran for this long
     # batching -------------------------------------------------------------
     async_apply_batch: int = 4096  # log entries merged into the sorted index
                                    # per asynchronous apply

@@ -36,7 +36,10 @@ the migration table from the old surfaces.
 from __future__ import annotations
 
 import functools
+import threading
+import time
 import warnings
+import weakref
 from typing import Optional, Protocol, Tuple, runtime_checkable
 
 import jax
@@ -61,7 +64,9 @@ class Backend(Protocol):
     routing capacity).  ``put`` returns (acked, addrs, replicas) and
     ``delete`` (acked, found, replicas) so the client can retry push-back
     without re-writing and report replication honestly; ``get`` returns
-    (addrs, found, accesses, vals, routed, hops)."""
+    (addrs, found, accesses, vals, routed, hops); ``scan`` returns
+    (keys, addrs, count, covered) where covered[g] is False for a group
+    with zero live, unsevered holders (the scan-completeness flag)."""
 
     batch_multiple: int   # padded batch sizes must divide by this
     value_words: int      # payload width W of values [Q, W]
@@ -195,7 +200,9 @@ class LocalBackend:
     def scan(self, lo, hi, limit: int):
         (k, a, n), self.group = ig.scan(self.group, lo, hi, limit, self.cfg)
         self._pending_bound = 0          # scan drained the logs
-        return k, a, n
+        # single node: the process answering IS the store — a scan that
+        # returns at all covered its one group
+        return k, a, n, jnp.ones((1,), bool)
 
     def apply_async(self):
         self.group = ig.apply_async(self.group, self.cfg)
@@ -241,6 +248,51 @@ class LocalBackend:
 # ---------------------------------------------------------------------------
 # Distributed backend: the shard_map'd store (one index group per device)
 # ---------------------------------------------------------------------------
+def _lease_ticker_loop(ref, stop: threading.Event) -> None:
+    """Background ticker body (module-level: the thread must only hold a
+    WEAK reference to the backend).  Polls at a fraction of the idle
+    interval so a tick lands within one interval of the threshold being
+    crossed; ``stop`` is this thread's own event, so a ticker orphaned
+    by a timed-out stop_ticker() stays stopped even after
+    start_ticker() installs a replacement; a garbage-collected backend
+    ends the loop at the next wake-up."""
+    fails = 0
+    while True:
+        be = ref()
+        if be is None:
+            return
+        quantum = max(be.lease_interval_s / 5.0, 0.01)
+        interval = be.lease_interval_s
+        be = None                      # never hold the ref across a wait
+        if stop.wait(quantum):
+            return
+        be = ref()
+        if be is None:
+            return
+        try:
+            if time.monotonic() - be._last_traffic_t < interval:
+                continue
+            with be._mu:
+                # re-check under the lock: a foreground op may have
+                # just run (its _lease_tick refreshed the timestamp)
+                if time.monotonic() - be._last_traffic_t < interval:
+                    continue
+                be._lease_tick(bump=True)
+            fails = 0
+        except Exception as e:   # noqa: BLE001 — a daemon thread must
+            # not die silently on a transient dispatch error:
+            # idle-client detection would be disabled with no signal
+            fails += 1
+            warnings.warn(
+                f"lease ticker tick failed ({e!r}); "
+                f"{'giving up' if fails >= 3 else 'retrying'}",
+                RuntimeWarning)
+            if fails >= 3:
+                return
+        finally:
+            be = None
+
+
 class DistributedBackend:
     """Wraps the kvstore shard_map ops: routed two-sided PUT/DELETE with
     ppermute log replication, one-sided GET with second-hop fetch,
@@ -263,15 +315,48 @@ class DistributedBackend:
         self._data_dead: set[int] = set()   # data servers masked dead
         self._pending_bound = 0        # host-side upper bound, no dev sync
         # --- lease-based failure detection (paper §5) --------------------
-        # every routed op bumps per-device heartbeat counters on the mesh;
-        # the client ages them here and demotes a server to degraded
-        # routing after ``cfg.lease_misses`` observation rounds without an
-        # advance — no oracle fail_server call anywhere in that path
+        # every routed op bumps per-device heartbeat counters on the mesh
+        # for BOTH planes (index hb + data hb); the client ages them here
+        # and demotes a server to degraded routing once its lease expires
+        # — no oracle fail_server/fail_data_server call anywhere in that
+        # path.  Two clocks: "wall" (default — elapsed monotonic time
+        # since the counter last advanced exceeds cfg.lease_timeout_s)
+        # and "rounds" (the deterministic test mode: cfg.lease_misses
+        # stalled observation rounds).  lease_misses == 0 disables
+        # detection entirely in either mode.
         self.lease_misses = int(getattr(cfg, "lease_misses", 0) or 0)
-        self._severed: set[int] = set()     # injector-crashed servers
+        self.lease_clock = str(getattr(cfg, "lease_clock", "rounds"))
+        self.lease_timeout_s = float(getattr(cfg, "lease_timeout_s", 0.0))
+        self.lease_interval_s = float(
+            getattr(cfg, "lease_interval_s", 0.0) or 0.25)
+        # misconfiguration must fail loudly: silently-disabled detection
+        # is the exact availability gap the liveness plane closes
+        if self.lease_clock not in ("wall", "rounds"):
+            raise ValueError(
+                f"cfg.lease_clock must be 'wall' or 'rounds', got "
+                f"{self.lease_clock!r}")
+        if (self.lease_misses > 0 and self.lease_clock == "wall"
+                and self.lease_timeout_s <= 0):
+            raise ValueError(
+                "wall-clock leases need cfg.lease_timeout_s > 0 "
+                "(set lease_misses=0 to disable detection instead)")
+        self._severed: set[int] = set()     # injector-crashed index srvs
+        self._data_severed: set[int] = set()  # injector-crashed data srvs
+        now = time.monotonic()
         self._last_hb = np.zeros((self.G,), np.int64)
         self._hb_misses = np.zeros((self.G,), np.int64)
-        self.detected: list[int] = []       # demotions the detector made
+        self._hb_t = np.full((self.G,), now, np.float64)   # last advance
+        self._last_data_hb = np.zeros((self.G,), np.int64)
+        self._data_hb_misses = np.zeros((self.G,), np.int64)
+        self._data_hb_t = np.full((self.G,), now, np.float64)
+        self.detected: list[int] = []       # index demotions the detector
+        self.detected_data: list[int] = []  # data demotions the detector
+        # the store and the lease state are shared with the background
+        # ticker thread: one reentrant lock serializes every op
+        self._mu = threading.RLock()
+        self._last_traffic_t = now
+        self._ticker: Optional[threading.Thread] = None
+        self._ticker_stop: Optional[threading.Event] = None
 
     def _ensure_log_room(self, n: int):
         # drain up front when a batch might not fit the worst backup log
@@ -285,140 +370,251 @@ class DistributedBackend:
         return bool(self._dead or self._data_dead)
 
     # -- lease detector ----------------------------------------------------
+    def _lease_expired(self, misses: np.ndarray, last_t: np.ndarray,
+                       g: int, now: float) -> bool:
+        """One server's lease verdict after a stalled observation: rounds
+        mode counts stalled rounds against ``lease_misses``; wall mode
+        measures elapsed monotonic time since the counter last advanced
+        against ``lease_timeout_s`` (the paper's §5 semantics)."""
+        if self.lease_clock == "wall":
+            return now - last_t[g] >= self.lease_timeout_s
+        return misses[g] >= self.lease_misses
+
     def _lease_tick(self, bump: bool = False):
-        """Age the leases after an observation round: a server whose
-        heartbeat counter did not advance accumulates a miss; at
-        ``lease_misses`` misses it is demoted to degraded routing.
-        ``bump`` runs the heartbeat-only tick op first — read-only rounds
-        (GET) age leases through it, mutating ops bump in-body."""
+        """Age the leases of BOTH planes after an observation round: a
+        server whose heartbeat counter did not advance accumulates a
+        stalled round (and its wall-clock stall timer keeps running); an
+        expired lease demotes it to degraded routing.  ``bump`` runs the
+        heartbeat-only tick op first — read-only rounds (GET) and the
+        idle ticker age leases through it, mutating ops bump in-body."""
         if self.lease_misses <= 0:
             return
         if bump:
             self.store = self.ops["tick"](self.store)
-        hb = np.asarray(self.store.hb)
-        for g in range(self.G):
-            if g in self._dead:
-                continue
-            if hb[g] != self._last_hb[g]:
-                self._hb_misses[g] = 0
-            else:
-                self._hb_misses[g] += 1
-                if self._hb_misses[g] >= self.lease_misses:
-                    self._demote(g, detected=True)
+        now = time.monotonic()
+        self._last_traffic_t = now
+        # one combined device->host fetch for both planes' counters (a
+        # second sequential sync would double the per-op detection tax)
+        hb, dhb = jax.device_get((self.store.hb, self.store.data.hb))
+        self._age_plane(hb, self._last_hb, self._hb_misses, self._hb_t,
+                        self._dead, self._demote, now)
+        self._age_plane(dhb, self._last_data_hb, self._data_hb_misses,
+                        self._data_hb_t, self._data_dead,
+                        self._demote_data, now)
         self._last_hb = hb
+        self._last_data_hb = dhb
+
+    def _age_plane(self, hb, last, misses, last_t, dead, demote,
+                   now: float):
+        """Age ONE plane's leases against its freshly-read counters —
+        the single aging body both planes share, so every lease-state
+        invariant (renewal resets, stall accounting, expiry) applies to
+        index and data servers by construction."""
+        for g in range(self.G):
+            if g in dead:
+                continue
+            if hb[g] != last[g]:
+                misses[g] = 0
+                last_t[g] = now
+            else:
+                misses[g] += 1
+                if self._lease_expired(misses, last_t, g, now):
+                    demote(g, detected=True)
 
     def _demote(self, g: int, detected: bool = False):
-        """Degraded routing for server ``g`` — the client-side half of a
-        failure, with no oracle call and no state wipe (whatever state
-        the server lost, it lost when it crashed)."""
+        """Degraded routing for index server ``g`` — the client-side half
+        of a failure, with no oracle call and no state wipe (whatever
+        state the server lost, it lost when it crashed)."""
         self.store = self.store._replace(
             alive=self.store.alive.at[g].set(False))
         self._dead.add(g)
+        self._hb_misses[g] = 0   # a demoted server no longer "stalls"
         if detected:
             self.detected.append(g)
 
+    def _demote_data(self, g: int, detected: bool = False):
+        """Degraded routing for DATA server ``g``: GETs of its shard fail
+        over to mirror-served fetches, PUTs displace one hop (the
+        degraded put variant compiles in) — the value-plane half of the
+        unified liveness view, again with no oracle call."""
+        self.store = self.store._replace(data=self.store.data._replace(
+            alive=self.store.data.alive.at[g].set(False)))
+        self._data_dead.add(g)
+        self._data_hb_misses[g] = 0
+        if detected:
+            self.detected_data.append(g)
+
+    def lease_stalled(self) -> bool:
+        """Did the last observation round see a not-yet-demoted server's
+        heartbeat stalled (either plane)?  The client's wall-mode retry
+        pacing keys on this, so healthy push-back retries — capacity
+        overflow with every heartbeat advancing — never pay the
+        lease-timeout tax."""
+        return bool((self._hb_misses > 0).any()
+                    or (self._data_hb_misses > 0).any())
+
+    # -- background ticker (idle-client wall-clock detection) --------------
+    def start_ticker(self) -> bool:
+        """Start the client-side background ticker thread: whenever no
+        foreground traffic has run for ``cfg.lease_interval_s`` it issues
+        a heartbeat-only tick round, so wall-clock leases expire (and
+        failures are detected) with ZERO foreground ops.  No-op when
+        detection is disabled.  Returns True if a ticker is running."""
+        if self.lease_misses <= 0:
+            return False
+        if self._ticker is not None and self._ticker.is_alive():
+            return True
+        stop = threading.Event()
+        self._ticker_stop = stop
+        # the thread holds only a WEAK reference to this backend (and a
+        # finalizer sets its stop event): a client dropped without
+        # stop_ticker() must not pin the device-resident store nor keep
+        # dispatching tick ops for the rest of the process lifetime
+        self._ticker = threading.Thread(
+            target=_lease_ticker_loop, args=(weakref.ref(self), stop),
+            name="histore-lease-ticker", daemon=True)
+        weakref.finalize(self, stop.set)
+        self._ticker.start()
+        return True
+
+    def stop_ticker(self) -> None:
+        if self._ticker is None:
+            return
+        self._ticker_stop.set()
+        self._ticker.join(timeout=60.0)
+        if self._ticker.is_alive():
+            # still inside a long first-tick jit compile; its own stop
+            # event is set, so it exits at the next loop check — and a
+            # fresh start_ticker() gets a NEW event, so the straggler
+            # can never be revived by it
+            warnings.warn("lease ticker still draining a tick in flight "
+                          "(exits at the next loop check)", RuntimeWarning)
+        self._ticker = None
+        self._ticker_stop = None
+
+    # (the ticker body lives in the module-level _lease_ticker_loop so
+    # the thread never holds a strong reference to the backend)
+
     def put(self, keys, vals, valid):
-        n = int(valid.sum())
-        self._ensure_log_room(n)
-        self._pending_bound += n
-        # healthy cluster -> the lean variant; any masked-dead server ->
-        # the variant with the old-slot replica probe (frees stay exact at
-        # temporary primaries) and the off-dead-shard value displacement
-        op = self.ops["put_degraded" if self._degraded() else "put"]
-        self.store, ok, addrs, nrep = op(self.store, keys, vals, valid)
-        self._lease_tick()
-        return ok, addrs, nrep
+        with self._mu:
+            n = int(valid.sum())
+            self._ensure_log_room(n)
+            self._pending_bound += n
+            # healthy cluster -> the lean variant; any masked-dead server
+            # -> the variant with the old-slot replica probe (frees stay
+            # exact at temporary primaries) and the off-dead-shard value
+            # displacement
+            op = self.ops["put_degraded" if self._degraded() else "put"]
+            self.store, ok, addrs, nrep = op(self.store, keys, vals, valid)
+            self._lease_tick()
+            return ok, addrs, nrep
 
     def get(self, keys, valid):
-        addrs, found, acc, vals, routed, val_ok = self.ops["get"](
-            self.store, keys, valid)
-        found = found & valid
-        hops = valid.astype(I32)
-        # second hop (paper: the client reads the value from the data
-        # server given the address): values written on another shard
-        # during a degraded write are fetched by address; a fetch-overflow
-        # lane re-enters the client's retry loop as un-routed
-        need = found & ~val_ok
-        if bool(need.any()):
-            fvals, fok = self.ops["fetch"](self.store, addrs, need)
-            vals = jnp.where(need[:, None], fvals, vals)
-            routed = routed & (~need | fok)
-            hops = hops + need.astype(I32)
-        self._lease_tick(bump=True)
-        return addrs, found, acc, vals, routed & valid, hops
+        with self._mu:
+            addrs, found, acc, vals, routed, val_ok = self.ops["get"](
+                self.store, keys, valid)
+            found = found & valid
+            hops = valid.astype(I32)
+            # second hop (paper: the client reads the value from the data
+            # server given the address): values written on another shard
+            # during a degraded write — or homed on a crashed data server
+            # — are fetched by address from the first effective-alive
+            # holder (mirror failover); a fetch-overflow lane re-enters
+            # the client's retry loop as un-routed
+            need = found & ~val_ok
+            if bool(need.any()):
+                self.store, fvals, fok = self.ops["fetch"](
+                    self.store, addrs, need)
+                vals = jnp.where(need[:, None], fvals, vals)
+                routed = routed & (~need | fok)
+                hops = hops + need.astype(I32)
+            self._lease_tick(bump=True)
+            return addrs, found, acc, vals, routed & valid, hops
 
     def delete(self, keys, valid):
-        n = int(valid.sum())
-        self._ensure_log_room(n)
-        self._pending_bound += n
-        # healthy cluster -> probe-free variant (all requests land on true
-        # primaries); any masked-dead server -> the degraded variant that
-        # answers found at temporary primaries via the replica probe
-        op = self.ops["delete_degraded" if self._degraded() else "delete"]
-        self.store, ok, found, nrep = op(self.store, keys, valid)
-        self._lease_tick()
-        return ok, found & valid, nrep
+        with self._mu:
+            n = int(valid.sum())
+            self._ensure_log_room(n)
+            self._pending_bound += n
+            # healthy cluster -> probe-free variant (all requests land on
+            # true primaries); any masked-dead server -> the degraded
+            # variant that answers found at temporary primaries via the
+            # replica probe
+            op = self.ops[
+                "delete_degraded" if self._degraded() else "delete"]
+            self.store, ok, found, nrep = op(self.store, keys, valid)
+            self._lease_tick()
+            return ok, found & valid, nrep
 
     def scan(self, lo, hi, limit: int):
-        kd = key_dtype()
-        loa = jnp.full((self.G,), lo, kd)
-        hia = jnp.full((self.G,), hi, kd)
-        # the result width is a static shape: compile (and cache, via
-        # make_ops' lru_cache) one scan op per distinct limit so a caller
-        # asking for more than the construction-time default is honored
-        if limit == self.scan_limit:
-            scan_op = self.ops["scan"]
-        else:
-            scan_op = kv.make_ops(self.mesh, self.cfg,
-                                  capacity_q=self.capacity_q,
-                                  scan_limit=limit)["scan"]
-        k, a, self.store = scan_op(self.store, loa, hia)
-        n = (k != key_inf(k.dtype)).sum().astype(I32)
-        self._pending_bound = 0          # scan drained the logs
-        self._lease_tick()
-        return k, a, n
+        with self._mu:
+            kd = key_dtype()
+            loa = jnp.full((self.G,), lo, kd)
+            hia = jnp.full((self.G,), hi, kd)
+            # the result width is a static shape: compile (and cache, via
+            # make_ops' lru_cache) one scan op per distinct limit so a
+            # caller asking for more than the construction-time default
+            # is honored
+            if limit == self.scan_limit:
+                scan_op = self.ops["scan"]
+            else:
+                scan_op = kv.make_ops(self.mesh, self.cfg,
+                                      capacity_q=self.capacity_q,
+                                      scan_limit=limit)["scan"]
+            k, a, covered, self.store = scan_op(self.store, loa, hia)
+            n = (k != key_inf(k.dtype)).sum().astype(I32)
+            self._pending_bound = 0          # scan drained the logs
+            self._lease_tick()
+            return k, a, n, covered
 
     def apply_async(self):
-        self.store = self.ops["apply"](self.store)
-        self._pending_bound = max(
-            0, self._pending_bound - self.cfg.async_apply_batch)
-        self._lease_tick()
+        with self._mu:
+            self.store = self.ops["apply"](self.store)
+            self._pending_bound = max(
+                0, self._pending_bound - self.cfg.async_apply_batch)
+            self._lease_tick()
 
     def gc_round(self):
         """One routed flush of the pending free queues (slots freed on a
         remote shard travel home and become allocatable)."""
-        self.store = self.ops["gc"](self.store)
-        self._lease_tick()
+        with self._mu:
+            self.store = self.ops["gc"](self.store)
+            self._lease_tick()
 
     def pending_frees(self) -> int:
-        return int(lg.pending_count(self.store.data.freeq).sum())
+        with self._mu:
+            return int(lg.pending_count(self.store.data.freeq).sum())
 
     def drain(self):
-        while self.pending_ops() > 0:
-            self.apply_async()
-        self._pending_bound = 0
-        # flush the free queues until empty or stuck (frees addressed to a
-        # masked-dead data shard stay queued; the recovery sweep reclaims
-        # them if the queue itself is lost)
-        prev = -1
-        while True:
-            cur = self.pending_frees()
-            if cur == 0 or cur == prev:
-                break
-            prev = cur
-            self.gc_round()
+        with self._mu:
+            while self.pending_ops() > 0:
+                self.apply_async()
+            self._pending_bound = 0
+            # flush the free queues until empty or stuck (frees addressed
+            # to a masked-dead data shard stay queued; the recovery sweep
+            # reclaims them if the queue itself is lost)
+            prev = -1
+            while True:
+                cur = self.pending_frees()
+                if cur == 0 or cur == prev:
+                    break
+                prev = cur
+                self.gc_round()
 
     def pending_ops(self) -> int:
-        return int(jnp.max(self.store.blog.tail - self.store.blog.applied))
+        with self._mu:
+            return int(jnp.max(self.store.blog.tail
+                               - self.store.blog.applied))
 
     def migrate_values(self) -> int:
         """Background value migration (host-side): move degraded-write
         strays home and patch index addresses; the pass's log barrier
         runs as incremental shard_map'd apply rounds.  Returns values
         moved."""
-        self.store, moved = kv.migrate_values(self.store, self.cfg,
-                                              apply_fn=self.ops["apply"])
-        return moved
+        with self._mu:
+            self.store, moved = kv.migrate_values(
+                self.store, self.cfg, apply_fn=self.ops["apply"])
+            return moved
 
     def _wipe_capability(self, what: str) -> bool:
         # wiping needs a surviving copy to exist; a 1-device mesh folds
@@ -435,10 +631,15 @@ class DistributedBackend:
         return False
 
     def fail_server(self, server: int) -> FailResult:
-        wiped = self._wipe_capability("fail_server")
-        self.store = kv.fail_server(self.store, server, wipe=wiped)
-        self._dead.add(server)
-        return FailResult(server, wiped)
+        with self._mu:
+            wiped = self._wipe_capability("fail_server")
+            self.store = kv.fail_server(self.store, server, wipe=wiped)
+            self._dead.add(server)
+            # a known-dead server no longer "stalls": stale misses must
+            # not latch lease_stalled() and tax healthy retries
+            self._hb_misses[server] = 0
+            self._hb_t[server] = time.monotonic()
+            return FailResult(server, wiped)
 
     def sever_server(self, server: int) -> FailResult:
         """Crash ``server`` WITHOUT updating the routing view: its
@@ -447,10 +648,11 @@ class DistributedBackend:
         recovery) brings the client's view back in line.  This is the
         fault injector's kill switch for detector schedules; the oracle
         ``fail_server`` stays for tests that want instant masking."""
-        wiped = self._wipe_capability("sever_server")
-        self.store = kv.sever_server(self.store, server, wipe=wiped)
-        self._severed.add(server)
-        return FailResult(server, wiped)
+        with self._mu:
+            wiped = self._wipe_capability("sever_server")
+            self.store = kv.sever_server(self.store, server, wipe=wiped)
+            self._severed.add(server)
+            return FailResult(server, wiped)
 
     def recover_server(self, server: int, online: bool = True,
                        re_replicate: bool = True) -> RecoverResult:
@@ -460,34 +662,68 @@ class DistributedBackend:
         foreground traffic continues; ``re_replicate`` then verifies
         every live holder against the group authorities and rebuilds
         divergent copies (the multi-failure window closer)."""
-        if server in self._severed and server not in self._dead:
-            # operator-initiated recovery implies the failure is known:
-            # align routing even if the lease had not expired yet
-            self._demote(server)
-        # a RecoveryError propagates with the host-side sever/dead
-        # tracking untouched (kv.recover_server is functional, so the
-        # store is unchanged too): the server stays routed-dead and
-        # severed until a recovery actually succeeds
-        self.store = kv.recover_server(self.store, server, self.cfg,
-                                       online=online)
-        n_reb = 0
-        if re_replicate:
-            self.store, n_reb = kv.re_replicate(self.store, self.cfg)
-        self._severed.discard(server)
-        self._dead.discard(server)
-        self._hb_misses[server] = 0
-        return RecoverResult(server, online, n_reb, self.pending_ops())
+        with self._mu:
+            if server in self._severed and server not in self._dead:
+                # operator-initiated recovery implies the failure is
+                # known: align routing even if the lease had not expired
+                self._demote(server)
+            # a RecoveryError propagates with the host-side sever/dead
+            # tracking untouched (kv.recover_server is functional, so the
+            # store is unchanged too): the server stays routed-dead and
+            # severed until a recovery actually succeeds
+            self.store = kv.recover_server(self.store, server, self.cfg,
+                                           online=online)
+            n_reb = 0
+            if re_replicate:
+                self.store, n_reb = kv.re_replicate(self.store, self.cfg)
+            self._severed.discard(server)
+            self._dead.discard(server)
+            self._hb_misses[server] = 0
+            self._hb_t[server] = time.monotonic()
+            return RecoverResult(server, online, n_reb, self.pending_ops())
 
     def fail_data_server(self, server: int) -> FailResult:
-        wiped = self._wipe_capability("fail_data_server")
-        self.store = kv.fail_data_server(self.store, server, wipe=wiped)
-        self._data_dead.add(server)
-        return FailResult(server, wiped)
+        with self._mu:
+            wiped = self._wipe_capability("fail_data_server")
+            self.store = kv.fail_data_server(self.store, server,
+                                             wipe=wiped)
+            self._data_dead.add(server)
+            self._data_hb_misses[server] = 0   # see fail_server
+            self._data_hb_t[server] = time.monotonic()
+            return FailResult(server, wiped)
+
+    def sever_data_server(self, server: int) -> FailResult:
+        """Crash ``server``'s DATA server WITHOUT updating the routing
+        view — the value plane's counterpart of ``sever_server``: its
+        data heartbeats stop and its shard state is destroyed, but
+        ``data.alive`` still says up.  Reads of its shard fail over to
+        the mirrors per-op at once; writes nack and retry until the
+        lease detector demotes it (mirror-served GETs + displaced PUTs,
+        zero oracle kills)."""
+        with self._mu:
+            wiped = self._wipe_capability("sever_data_server")
+            self.store = kv.sever_data_server(self.store, server,
+                                              wipe=wiped)
+            self._data_severed.add(server)
+            return FailResult(server, wiped)
 
     def recover_data_server(self, server: int):
-        self.store = kv.recover_data_server(self.store, server, self.cfg,
-                                            apply_fn=self.ops["apply"])
-        self._data_dead.discard(server)
+        """Rebuild ``server``'s data shard from its mirrors and re-admit
+        it — works the same from the oracle-masked and the lease-DETECTED
+        state (the detector found the failure; re-provisioning the
+        machine is the operator's move)."""
+        with self._mu:
+            if server in self._data_severed and \
+                    server not in self._data_dead:
+                # operator recovery implies the failure is known: align
+                # the routing view even if the lease had not expired yet
+                self._demote_data(server)
+            self.store = kv.recover_data_server(
+                self.store, server, self.cfg, apply_fn=self.ops["apply"])
+            self._data_severed.discard(server)
+            self._data_dead.discard(server)
+            self._data_hb_misses[server] = 0
+            self._data_hb_t[server] = time.monotonic()
 
 
 # ---------------------------------------------------------------------------
@@ -585,13 +821,39 @@ class HiStoreClient:
         if limit <= 0:
             kd_inf = jnp.zeros((0,), kd)
             return ScanResult(kd_inf, jnp.zeros((0,), I32),
-                              jnp.zeros((), I32))
-        k, a, n = self.backend.scan(jnp.asarray(lo, kd), jnp.asarray(hi, kd),
-                                    limit)
+                              jnp.zeros((), I32), True, ())
+        k, a, n, covered = self.backend.scan(
+            jnp.asarray(lo, kd), jnp.asarray(hi, kd), limit)
         self.stats["scans"] += 1
+        # scan-completeness retry: a group with zero live, unsevered
+        # holders answered nothing.  Each rescan is an observation round
+        # — paced by _retry_pause under wall-clock leases — so the
+        # bounded retries let the lease detector demote the crashed
+        # holders (the routing view aligns — retry-AFTER-detection);
+        # coverage itself only returns once the operator recovers them,
+        # so afterwards we report honestly instead of looping
+        budget = min(self.max_retries,
+                     max(getattr(self.backend, "lease_misses", 0), 0) + 1)
+        tries = 0
+        while (not bool(np.asarray(covered).all())) and tries < budget:
+            # rescans only help while the detector is still watching a
+            # stalled heartbeat; once detection settles (holders already
+            # demoted — or oracle-failed), coverage can only return via
+            # recovery, so report honestly after ONE round, not five
+            stalled = getattr(self.backend, "lease_stalled", None)
+            if stalled is not None and not stalled():
+                break
+            tries += 1
+            self.stats["retries"] += 1
+            self._retry_pause(budget)
+            k, a, n, covered = self.backend.scan(
+                jnp.asarray(lo, kd), jnp.asarray(hi, kd), limit)
+        cov = np.asarray(covered)
+        missing = tuple(int(g) for g in np.nonzero(~cov)[0].tolist())
         lim = min(limit, k.shape[0])
         return ScanResult(k[:lim], a[:lim],
-                          jnp.minimum(n, lim).astype(I32))
+                          jnp.minimum(n, lim).astype(I32),
+                          not missing, missing)
 
     def apply(self) -> None:
         """One asynchronous log->sorted merge round on every backup."""
@@ -637,10 +899,36 @@ class HiStoreClient:
     def fail_data_server(self, server: int):
         return self.backend.fail_data_server(server)
 
+    def sever_data_server(self, server: int):
+        """Crash a DATA server the lease detector must DISCOVER (data
+        heartbeats severed, routing view untouched) — the fault
+        injector's value-plane switch for oracle-free failure schedules
+        (distributed backend only)."""
+        fn = getattr(self.backend, "sever_data_server", None)
+        if fn is None:
+            raise NotImplementedError(
+                "data-server heartbeat severing needs the distributed "
+                "backend's lease detector; LocalBackend owns a single "
+                "unreplicated shard")
+        return fn(server)
+
     def recover_data_server(self, server: int) -> None:
         self.backend.recover_data_server(server)
         if self.migrate_on_recover:
             self.migrate()
+
+    def start_ticker(self) -> bool:
+        """Start the backend's background lease ticker (idle-client
+        wall-clock failure detection).  Returns True when one is
+        running; False for backends without leases (LocalBackend tracks
+        liveness host-side)."""
+        fn = getattr(self.backend, "start_ticker", None)
+        return bool(fn()) if fn else False
+
+    def stop_ticker(self) -> None:
+        fn = getattr(self.backend, "stop_ticker", None)
+        if fn:
+            fn()
 
     # -- batching / retry internals ---------------------------------------
     def _as_keys(self, keys):
@@ -681,6 +969,30 @@ class HiStoreClient:
         if gc:
             gc()
 
+    def _retry_pause(self, budget: Optional[int] = None):
+        """Wall-clock leases expire by ELAPSED TIME, not retry count: on
+        fast hardware an unpaced retry loop would exhaust max_retries in
+        milliseconds, long before a crashed server's lease can expire —
+        returning failures the rounds clock used to recover.  Pace the
+        loop (the RPC client's backoff) so its remaining retry budget
+        spans at least one lease timeout, keeping detection-within-the-
+        loop true in BOTH clock modes.  Paces ONLY while the detector is
+        actually watching a stalled heartbeat — a healthy push-back
+        retry (capacity overflow) stays millisecond-fast.  No-op in
+        rounds mode, with detection off, and for lease-less backends."""
+        be = self.backend
+        if getattr(be, "lease_clock", "") != "wall":
+            return
+        if getattr(be, "lease_misses", 0) <= 0:
+            return
+        stalled = getattr(be, "lease_stalled", None)
+        if stalled is not None and not stalled():
+            return
+        # the first stalled round goes unpaced (the stall is only
+        # observable after it), so spread the timeout over budget-1
+        n = max(budget if budget is not None else self.max_retries, 2)
+        time.sleep(be.lease_timeout_s / (n - 1))
+
     def _put_chunk(self, keys, vals):
         q = keys.shape[0]
         kp, pending = self._pad(keys)
@@ -701,6 +1013,7 @@ class HiStoreClient:
                 break
             retries += 1
             self.stats["retries"] += 1
+            self._retry_pause()
             self._make_room()
         return ok_all[:q], addr_all[:q], rep_all[:q], retries
 
@@ -722,6 +1035,7 @@ class HiStoreClient:
                 break
             retries += 1
             self.stats["retries"] += 1
+            self._retry_pause()
             self._make_room()
         return acked[:q], found_all[:q], rep_all[:q], retries
 
@@ -750,6 +1064,7 @@ class HiStoreClient:
                 break
             retries += 1
             self.stats["retries"] += 1
+            self._retry_pause()
         # lanes still pending exhausted the retry budget: reported as
         # un-routed so push-back is distinguishable from a genuine miss
         return (addr_all[:q], found_all[:q], acc_all[:q], vals_all[:q],

@@ -83,6 +83,15 @@ class DataPlane(NamedTuple):
     fq_spill: jnp.ndarray  # [G] int32      frees REJECTED by a full free
     #                      queue (push-back makes this unreachable on the
     #                      op paths; any non-zero count fails the audit)
+    hb: jnp.ndarray      # [G] int32        data-server heartbeat counters —
+    #                      bumped by every routed op body (same _bump_hb as
+    #                      the index plane) unless severed; the client ages
+    #                      them host-side, so data-server leases expire with
+    #                      no oracle involvement
+    sever: jnp.ndarray   # [G] bool         data server crashed but the
+    #                      client has not noticed: heartbeats stop, local
+    #                      value writes are rejected (lanes nack for a
+    #                      client retry), reads fail over to the mirrors
 
 
 def create(G: int, dcap: int, cfg, key_dt=None) -> DataPlane:
@@ -100,6 +109,8 @@ def create(G: int, dcap: int, cfg, key_dt=None) -> DataPlane:
         keys=jnp.zeros((G, dcap), kd),
         kmirror=jnp.zeros((cfg.n_value_replicas, G, dcap), kd),
         fq_spill=jnp.zeros((G,), I32),
+        hb=jnp.zeros((G,), I32),
+        sever=jnp.zeros((G,), bool),
     )
 
 
@@ -116,6 +127,8 @@ def sharding(mesh, axis: str):
         keys=NamedSharding(mesh, P(axis)),
         kmirror=NamedSharding(mesh, P(None, axis)),
         fq_spill=NamedSharding(mesh, P(axis)),
+        hb=NamedSharding(mesh, P(axis)),
+        sever=NamedSharding(mesh, P()),
     )
 
 
@@ -125,7 +138,8 @@ def specs(axis: str):
     return DataPlane(
         vals=P(axis), used=P(axis), mirror=P(None, axis),
         freeq=lg.UpdateLog(*[P(axis)] * 5), alive=P(),
-        keys=P(axis), kmirror=P(None, axis), fq_spill=P(axis))
+        keys=P(axis), kmirror=P(None, axis), fq_spill=P(axis),
+        hb=P(axis), sever=P())
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +188,14 @@ def spread_winner_addr(rk, valid, winner, addr_lane):
 # ---------------------------------------------------------------------------
 # Host-side control plane (eager, like kvstore's failure protocol)
 # ---------------------------------------------------------------------------
+def effective_alive(data) -> np.ndarray:
+    """TRUE data-server liveness for the omniscient control plane: a
+    severed-but-undetected server is dead (its shard, hosted mirrors and
+    free queue were destroyed in the crash), whatever the client's
+    routing view still says."""
+    return np.asarray(data.alive) & ~np.asarray(data.sever)
+
+
 def drain_pair(srt, blog, cfg):
     """Eagerly apply ALL pending entries of one (sorted, log) pair — THE
     drain primitive every control-plane pass shares (kvstore's recovery
@@ -281,7 +303,7 @@ def keys_for_addrs(store, addrs: np.ndarray) -> np.ndarray:
     G = int(store.alive.shape[0])
     dcap = int(store.data.vals.shape[1])
     Rv = int(store.data.kmirror.shape[0])
-    dalive = np.asarray(store.data.alive)
+    dalive = effective_alive(store.data)
     dkeys = np.asarray(store.data.keys)
     kmir = np.asarray(store.data.kmirror)
     out = np.zeros((len(addrs),), dkeys.dtype)
@@ -312,7 +334,7 @@ def group_items_from_data(store, cfg, g: int, owner_group_fn):
     (its allocator bitmap is lost until data recovery)."""
     G = int(store.alive.shape[0])
     dcap = int(store.data.vals.shape[1])
-    dalive = np.asarray(store.data.alive)
+    dalive = effective_alive(store.data)
     dead_shards = [int(s) for s in range(G) if not dalive[s]]
     if dead_shards:
         raise RecoveryError(
@@ -355,7 +377,7 @@ def value_slot_audit(store, cfg, apply_fn=None) -> dict:
     st = drain_all_logs(store, cfg, apply_fn)
     G = int(st.alive.shape[0])
     dcap = int(st.data.vals.shape[1])
-    dalive = np.asarray(st.data.alive)
+    dalive = effective_alive(st.data)
     used = np.asarray(st.data.used)
     refs = []
     for g in range(G):
@@ -388,23 +410,47 @@ def value_slot_audit(store, cfg, apply_fn=None) -> dict:
             and spill == 0}
 
 
+def _wipe_data_state(data: DataPlane, dev: int) -> DataPlane:
+    """Destroy the data-plane state device ``dev`` held: its shard, every
+    mirror it hosts, and its pending free queue (the crash's data loss)."""
+    fq = data.freeq
+    empty = lg.clear(jax.tree.map(lambda a: a[dev], fq))
+    return data._replace(
+        vals=data.vals.at[dev].set(0),
+        used=data.used.at[dev].set(False),
+        mirror=data.mirror.at[:, dev].set(0),
+        keys=data.keys.at[dev].set(0),
+        kmirror=data.kmirror.at[:, dev].set(0),
+        freeq=jax.tree.map(lambda f, v: f.at[dev].set(v), fq, empty))
+
+
 def fail_data_server(store, dev: int, wipe: bool = True):
-    """Mask device ``dev``'s DATA server dead — a failure domain separate
-    from the index server (paper §2).  ``wipe`` (default) destroys the
-    shard, the mirrors it hosts, and its pending free queue, so recovery
-    must rebuild from surviving mirrors; leaked frees are reclaimed by the
-    recovery mark-sweep."""
+    """ORACLE kill switch for the value plane: mask device ``dev``'s DATA
+    server dead with the client told immediately — a failure domain
+    separate from the index server (paper §2).  ``wipe`` (default)
+    destroys the shard, the mirrors it hosts, and its pending free queue,
+    so recovery must rebuild from surviving mirrors; leaked frees are
+    reclaimed by the recovery mark-sweep.  For failures the client must
+    DISCOVER via its leases, use ``sever_data_server`` instead."""
     data = store.data._replace(alive=store.data.alive.at[dev].set(False))
     if wipe:
-        fq = data.freeq
-        empty = lg.clear(jax.tree.map(lambda a: a[dev], fq))
-        data = data._replace(
-            vals=data.vals.at[dev].set(0),
-            used=data.used.at[dev].set(False),
-            mirror=data.mirror.at[:, dev].set(0),
-            keys=data.keys.at[dev].set(0),
-            kmirror=data.kmirror.at[:, dev].set(0),
-            freeq=jax.tree.map(lambda f, v: f.at[dev].set(v), fq, empty))
+        data = _wipe_data_state(data, dev)
+    return store._replace(data=data)
+
+
+def sever_data_server(store, dev: int, wipe: bool = True):
+    """Crash device ``dev``'s DATA server WITHOUT telling the client: its
+    shard state is destroyed (``wipe``) and its heartbeats stop, but
+    ``data.alive`` — the client's routing view — still says up.  Local
+    value writes there are rejected (lanes nack for a client retry),
+    reads fail over to the surviving mirrors per-op (the RPC-timeout
+    failover), and the client's lease detector demotes the device once
+    its data heartbeat stalls past the lease — the paper's §5 detection
+    story applied to the value plane, with no oracle fail_data_server
+    call anywhere."""
+    data = store.data._replace(sever=store.data.sever.at[dev].set(True))
+    if wipe:
+        data = _wipe_data_state(data, dev)
     return store._replace(data=data)
 
 
@@ -416,7 +462,7 @@ def sweep(store, cfg, apply_fn=None):
     st = drain_all_logs(store, cfg, apply_fn)
     G = int(st.alive.shape[0])
     dcap = int(st.data.vals.shape[1])
-    dalive = np.asarray(st.data.alive)
+    dalive = effective_alive(st.data)
     used = np.asarray(st.data.used).copy()
     marked = np.zeros_like(used)
     for g in range(G):
@@ -440,13 +486,21 @@ def recover_data_server(store, dev: int, cfg, apply_fn=None):
          surviving mirror) of the same group;
       3. mark-sweep the allocator bitmaps against the live index (also
          reclaims frees leaked when the crash dropped ``dev``'s queue);
-      4. flip ``data.alive[dev]``.
+      4. flip ``data.alive[dev]`` (and clear a severed heartbeat, so the
+         recovered server leases normally again — recovery works the same
+         whether the failure was oracle-masked or lease-DETECTED).
     """
     G = int(store.alive.shape[0])
     Rv = int(store.data.mirror.shape[0])
-    dalive = np.asarray(store.data.alive)
+    dalive = effective_alive(store.data)
     if bool(dalive[dev]):
         return store
+    # the recovered server heartbeats again; rebuild below reads TRUE
+    # liveness, so a severed-but-undetected sibling is never a source
+    store = store._replace(data=store.data._replace(
+        sever=store.data.sever.at[dev].set(False)))
+    dalive = dalive.copy()
+    dalive[dev] = False
     data = store.data
     if G > 1:
         src = None
@@ -504,7 +558,7 @@ def migrate_values(store, cfg, owner_group_fn, apply_fn=None):
     R = int(st.blog.tail.shape[0])
     dcap = int(st.data.vals.shape[1])
     Rv = int(st.data.mirror.shape[0])
-    dalive = np.asarray(st.data.alive)
+    dalive = effective_alive(st.data)
     data = st.data
     # flush pending frees first so their slots are reusable for homing
     used = np.asarray(data.used).copy()

@@ -66,10 +66,11 @@ def main() -> int:
     # --- SCAN (drains logs) -------------------------------------------------
     lo = jnp.full((Q,), 0, KD)
     hi = jnp.full((Q,), 10 ** 7, KD)
-    sk, sa, store = ops["scan"](store, lo, hi)
+    sk, sa, cov, store = ops["scan"](store, lo, hi)
     sk = np.asarray(sk)
     want = np.sort(np.asarray(keys))[:128]
     np.testing.assert_array_equal(sk, want)
+    assert bool(np.asarray(cov).all()), "healthy scan must cover all groups"
     print("scan ok")
 
     # --- distributed DELETE round-trip --------------------------------------
@@ -81,7 +82,7 @@ def main() -> int:
     fa = np.asarray(found_after)
     assert not fa[:G].any(), "deleted keys must miss"
     assert fa[G:].all(), "surviving keys must hit"
-    sk2, _, store = ops["scan"](store, lo, hi)
+    sk2, _, _, store = ops["scan"](store, lo, hi)
     deleted = set(int(k) for k in np.asarray(keys[:G]))
     assert not (set(np.asarray(sk2).tolist()) & deleted), \
         "scan must exclude deleted keys"
@@ -124,8 +125,10 @@ def main() -> int:
     addr3, found3, _, _, _, _ = ops["get"](store, nk, nvalid)
     assert bool(np.asarray(found3).all()), "degraded put visible to get"
     # --- scans still complete under failure ---------------------------------
-    sk3, _, store = ops["scan"](store, lo, hi)
+    sk3, _, cov3, store = ops["scan"](store, lo, hi)
     np.testing.assert_array_equal(np.asarray(sk3), np.asarray(sk2))
+    assert bool(np.asarray(cov3).all()), \
+        "a single failure leaves every group >= 1 live holder: covered"
     # --- recovery: rebuild hash from replica, re-clone replicas -------------
     store = kv.recover_server(store, 2, cfg)
     assert int(store.hash.fill[2].sum()) > 0, "recovery must rebuild hash"
@@ -183,6 +186,33 @@ def main() -> int:
                for p in kv.parity_report(client.backend.store, cfg)), \
         "client-side recovery must restore parity"
     print("client ops ok")
+
+    # --- R=3 scan serve-duty: alive-dead-alive must not double-serve --------
+    # with three sorted replicas per group, killing the MIDDLE holder
+    # leaves replicas 0 and 2 alive; exactly one may serve (the
+    # regression: serve-duty only checked the immediately-lower holder,
+    # so the ladder emitted the group's keys twice and inflated count)
+    cfg3 = scaled(log_capacity=512, async_apply_batch=128, n_backups=3,
+                  lease_clock="rounds")
+    client3 = HiStoreClient(
+        DistributedBackend(mesh, cfg3, 512, capacity_q=64,
+                           scan_limit=512), batch_quantum=4 * G)
+    k3 = np.random.RandomState(3).choice(10 ** 6, 12 * G,
+                                         replace=False) + 1
+    assert client3.put(k3, np.arange(12 * G)).all_ok
+    client3.drain()
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("ignore")
+        client3.sever_server(3)      # middle holder of group 1 (2,3,4)
+    s3 = client3.scan(0, 10 ** 7, limit=512)
+    ks3 = np.asarray(s3.keys)[: int(s3.count)]
+    assert len(set(ks3.tolist())) == len(ks3), \
+        "R=3 alive-dead-alive scan emitted duplicate keys"
+    assert int(s3.count) == 12 * G, \
+        f"R=3 scan count {int(s3.count)} != {12 * G}"
+    assert s3.complete is True, "one live holder per group -> complete"
+    print("R=3 scan serve-duty ok (no double-serve, count exact)")
 
     print("DIST-SELFTEST-OK")
     return 0

@@ -40,10 +40,14 @@ RDMA-verb mapping):
   gc     — one routed flush round of the pending free queues (frees whose
            slot lives on another shard travel home and clear the bit).
   tick   — heartbeat-only round: every device bumps its per-server
-           heartbeat counter (as every routed op does in-body); the
-           client ages the counters host-side and demotes a server to
-           degraded routing when its lease expires — failure DETECTION
-           without an oracle caller (DESIGN.md §Failure detection).
+           heartbeat counters — index AND data plane (as every routed op
+           does in-body); the client ages the counters host-side
+           (elapsed wall-clock time by default, observation rounds in
+           the deterministic test mode) and demotes a server to degraded
+           routing when its lease expires — failure DETECTION without an
+           oracle caller (DESIGN.md §Failure detection).  An idle
+           client's background ticker thread issues tick rounds so
+           detection needs no foreground traffic.
   fail_server / sever_server / recover_server / re_replicate /
   parity_report — host-side failure control plane: fail WIPES the
            device's index state with the client told at once; sever
@@ -56,10 +60,12 @@ RDMA-verb mapping):
            RecoveryError only when truly no copy exists); re_replicate
            verifies every live holder against the group authorities and
            rebuilds divergent copies (DESIGN.md §Fault tolerance).
-  fail_data_server / recover_data_server / migrate_values — the value
-           plane's control plane (data_plane.py): mirror-rebuild recovery
-           and the background migration that moves degraded-write values
-           home and patches index addresses (second-hop fetch elision).
+  fail_data_server / sever_data_server / recover_data_server /
+  migrate_values — the value plane's control plane (data_plane.py):
+           oracle kill, lease-detected kill (heartbeats cut, routing
+           view untouched), mirror-rebuild recovery, and the background
+           migration that moves degraded-write values home and patches
+           index addresses (second-hop fetch elision).
 
 All mutating ops take a ``valid`` lane mask so the client can pad request
 batches to fixed shapes (DESIGN.md §Client); invalid lanes are routed
@@ -242,12 +248,19 @@ def _fq_pregate(data, may_queue):
 
 
 def _bump_hb(store):
-    """Heartbeat: every device advances its own counter inside each
-    routed op — unless its heartbeats are severed (crashed server).  The
-    client ages the counters host-side (the lease)."""
+    """Heartbeat: every device advances its own INDEX-server counter and
+    its own DATA-server counter inside each routed op — unless the
+    respective server's heartbeats are severed (crashed).  Bumping both
+    planes everywhere keeps either lease from stalling spuriously under
+    a one-sided workload (e.g. a drain's apply rounds must not expire
+    healthy data-server leases).  The client ages both counter arrays
+    host-side (the unified liveness plane)."""
     me = jax.lax.axis_index(AXIS)
+    d = store.data
     return store._replace(
-        hb=store.hb + jnp.where(store.sever[me], 0, 1).astype(I32))
+        hb=store.hb + jnp.where(store.sever[me], 0, 1).astype(I32),
+        data=d._replace(
+            hb=d.hb + jnp.where(d.sever[me], 0, 1).astype(I32)))
 
 
 def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid,
@@ -269,7 +282,11 @@ def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid,
     am_primary = rg == me
     data = store.data
     dcap = data.vals.shape[1]
-    dalive_me = data.alive[me]
+    # effective data-server liveness: a severed (crashed-but-undetected)
+    # data server accepts no writes — its lanes fail allocation and nack
+    # for a client retry (the RPC timeout), until the lease detector
+    # demotes it and the degraded variant displaces instead
+    dalive_me = data.alive[me] & ~data.sever[me]
     winner = dp.winner_mask(rk, valid)
     # pre-batch address of the overwritten key: hash at the true primary,
     # replica + pending log at a temporary primary
@@ -299,7 +316,7 @@ def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid,
         may_queue = may_queue | (allocw & ~dalive_me)
     fq_ok = _fq_pregate(data, may_queue)
     allocw = allocw & fq_ok
-    want = (allocw & dalive_me) if degraded else allocw
+    want = allocw & dalive_me
     used, slot_d, aok = dp.alloc(data.used[0], want)
     wslot = jnp.where(inplace, old_a % dcap, jnp.where(aok, slot_d, dcap))
     wmask = inplace | aok
@@ -519,8 +536,9 @@ def _delete_body(cfg, G, capacity, store: KVStore, keys, valid,
     # winner by the post-gate dedupe and append its free to the very
     # queue that had no room
     winner0 = dp.winner_mask(rk, valid)
+    deff_me = data.alive[me] & ~data.sever[me]   # effective data liveness
     may_queue = (winner0 & old_f & (old_a >= 0)
-                 & ~((old_a // dcap == me) & data.alive[me]))
+                 & ~((old_a // dcap == me) & deff_me))
     bad = may_queue & ~_fq_pregate(data, may_queue)
     same = (rk[None, :] == rk[:, None]) & valid[None, :] & valid[:, None]
     valid = valid & ~(same & bad[None, :]).any(axis=1)
@@ -542,7 +560,7 @@ def _delete_body(cfg, G, capacity, store: KVStore, keys, valid,
     # wider replication acked or not
     gate = jnp.where(am_primary, found, ok_loc & old_f)
     freed = dp.winner_mask(rk, valid) & gate & (old_a >= 0)
-    free_local = freed & (old_a // dcap == me) & data.alive[me]
+    free_local = freed & (old_a // dcap == me) & deff_me
     used = dp.free_slots(data.used[0], old_a % dcap, free_local)
     freeq, fq_acc = _queue_remote_frees(data, rk, old_a,
                                         freed & ~free_local)
@@ -579,8 +597,11 @@ def _get_body(cfg, G, capacity, store: KVStore, keys, valid):
     found = jnp.where(am_primary, found_p, found_b)
     acc = jnp.where(am_primary, acc_p, acc_b)
     # --- value gather: one-sided read from the LOCAL data shard ---------
+    # a severed data server's bytes are gone: flag its addresses for the
+    # second-hop fetch, which fails over to a surviving mirror per-op
     dcap = store.data.vals.shape[1]
-    val_ok = found & (addr // dcap == me) & store.data.alive[me]
+    val_ok = (found & (addr // dcap == me) & store.data.alive[me]
+              & ~store.data.sever[me])
     local_slot = jnp.where(val_ok, addr % dcap, dcap)
     vals = jnp.concatenate(
         [store.data.vals[0], jnp.zeros((1,) + store.data.vals.shape[2:],
@@ -613,13 +634,18 @@ def _fetch_body(G, capacity, store: KVStore, addrs, valid):
     paper's client-side one-sided READ from the data server.  The data
     servers are a separate failure domain from the index servers (paper
     §2), so a fetch is answered even when the device's INDEX state is
-    masked dead, and the mirrors answer when the DATA server is."""
+    masked dead, and the mirrors answer when the DATA server is — masked
+    OR severed: the failover keys on effective liveness, so mirror-served
+    reads start the moment the data server crashes, ahead of the slower
+    lease demotion.  Returns the store too (the fetch round renews the
+    answering data servers' heartbeats)."""
     data = store.data
     dcap = data.vals.shape[1]
     Rv = data.mirror.shape[0]
+    deff = data.alive & ~data.sever
     shard = jnp.where(addrs >= 0, addrs // dcap, 0)
     dest, servable = jax.vmap(
-        lambda s: _first_alive_data_holder(s, data.alive, Rv))(shard)
+        lambda s: _first_alive_data_holder(s, deff, Rv))(shard)
     dest = jnp.where(valid & (addrs >= 0) & servable, dest, G)
     bufs, slot, ok_route = route_build(dest, {"a": (addrs, -1)}, G, capacity)
     recv = exchange(bufs, AXIS)
@@ -639,7 +665,8 @@ def _fetch_body(G, capacity, store: KVStore, addrs, valid):
     back = route_return({"val": vals}, slot, AXIS)
     # a lane whose every holder is dead reports un-routed (push-back the
     # client surfaces as routed=False), never a fabricated zero value
-    return back["val"], ok_route & (servable | ~valid | (addrs < 0))
+    return (_bump_hb(store), back["val"],
+            ok_route & (servable | ~valid | (addrs < 0)))
 
 
 def _gc_body(G, capacity, store: KVStore):
@@ -654,7 +681,8 @@ def _gc_body(G, capacity, store: KVStore):
     k, a, o, freeq = lg.take_pending(freeq, B)
     pend = o > 0
     dest_s = jnp.where(pend & (a >= 0), a // dcap, G)
-    deliver = pend & (dest_s < G) & data.alive[jnp.clip(dest_s, 0, G - 1)]
+    deff = data.alive & ~data.sever   # a severed shard's allocator is gone
+    deliver = pend & (dest_s < G) & deff[jnp.clip(dest_s, 0, G - 1)]
     dest = jnp.where(deliver, dest_s, G)
     bufs, _, okq = route_build(dest, {"a": (a, -1)}, G, capacity)
     recv = exchange(bufs, AXIS)
@@ -721,10 +749,14 @@ def _scan_body(cfg, G, limit, store: KVStore, lo, hi):
         srt = jax.tree.map(lambda a: a[r, 0], st.bsorted)
         k, a, n = six.range_query(srt, lo[0], hi[0], limit)
         g = (me - r - 1) % G
-        # serve replica r of group g iff I'm alive and (r==0 or the r-1
-        # holder (device g+r) is dead)
-        holder_prev_ok = eff[(g + r) % G] if r > 0 else jnp.array(False)
-        serve = eff[me] & ((r == 0) | ~holder_prev_ok)
+        # serve replica r of group g iff I'm alive and EVERY
+        # lower-replica holder (devices g+1 .. g+r) is dead — exactly
+        # one live holder serves whatever the dead/alive pattern (with
+        # R >= 3 an alive-dead-alive ladder must not double-serve)
+        prev_ok = jnp.zeros((), bool)
+        for rp in range(r):
+            prev_ok = prev_ok | eff[(g + rp + 1) % G]
+        serve = eff[me] & ~prev_ok
         k = jnp.where(serve, k, key_inf(k.dtype))
         a = jnp.where(serve, a, -1)
         outs_k.append(k)
@@ -734,7 +766,17 @@ def _scan_body(cfg, G, limit, store: KVStore, lo, hi):
     allk = jax.lax.all_gather(mk, AXIS).reshape(-1)   # [G*R*limit]
     alla = jax.lax.all_gather(ma, AXIS).reshape(-1)
     order = jnp.argsort(allk)
-    return allk[order][:limit], alla[order][:limit], _bump_hb(st)
+    # scan-completeness contract: group g is COVERED iff at least one of
+    # its R holders is effective-alive (scans are backup-served; the
+    # primary's hash cannot answer a range query).  A group with zero
+    # live, unsevered holders was silently absent from the merge above —
+    # the honest flag lets the client retry/report instead (eff is
+    # replicated, so every device computes the identical mask)
+    gidx = jnp.arange(G)
+    covered = jnp.zeros((G,), bool)
+    for r in range(store.blog.tail.shape[0]):
+        covered = covered | eff[(gidx + r + 1) % G]
+    return allk[order][:limit], alla[order][:limit], covered, _bump_hb(st)
 
 
 # ---------------------------------------------------------------------------
@@ -756,14 +798,19 @@ def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
                                    (use while any server is masked dead)
     get(st, keys, valid)        -> (addrs, found, accesses, vals, routed,
                                     val_ok)
-    fetch(st, addrs, valid)     -> (vals, routed)   second-hop value read
+    fetch(st, addrs, valid)     -> (st, vals, routed)  second-hop value
+                                   read (returns the store: the round
+                                   renews data-server heartbeats)
     delete(st, keys, valid)     -> (st, ok, found, nrep)
     delete_degraded(...)        -> as delete, plus the replica probe that
                                    answers found at a temporary primary
                                    (use while any server is masked dead)
     apply(st)                   -> st
     gc(st)                      -> st   one free-queue flush round
-    scan(st, lo, hi)            -> (keys, addrs, st)
+    scan(st, lo, hi)            -> (keys, addrs, covered, st) —
+                                   covered[g] False when group g had no
+                                   live, unsevered holder to serve it
+                                   (the scan-completeness contract)
     tick(st)                    -> st   heartbeat-only round: read-heavy
                                    clients age their leases without a
                                    mutating op in flight
@@ -783,7 +830,7 @@ def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
                 (P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS)))
     fetch = _smap(mesh,
                   lambda st, a, m: _fetch_body(G, capacity_q, st, a, m),
-                  (S, P(AXIS), P(AXIS)), (P(AXIS), P(AXIS)))
+                  (S, P(AXIS), P(AXIS)), (S, P(AXIS), P(AXIS)))
     delete, delete_degraded = (
         _smap(mesh,
               lambda st, k, m, d=d: _delete_body(cfg, G, capacity_q,
@@ -797,7 +844,7 @@ def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
     gc = _smap(mesh, lambda st: _gc_body(G, capacity_q, st), (S,), S)
     scan = _smap(mesh, lambda st, lo, hi: _scan_body(cfg, G, scan_limit,
                                                      st, lo, hi),
-                 (S, P(AXIS), P(AXIS)), (P(), P(), S))
+                 (S, P(AXIS), P(AXIS)), (P(), P(), P(), S))
     tick = _smap(mesh, _tick_body, (S,), S)
     return {"put": put, "put_degraded": put_degraded, "get": get,
             "fetch": fetch, "delete": delete,
@@ -860,6 +907,13 @@ def sever_server(store: KVStore, dev: int, wipe: bool = True) -> KVStore:
 def fail_data_server(store: KVStore, dev: int, wipe: bool = True) -> KVStore:
     """Mask device ``dev``'s DATA server dead (see data_plane.py)."""
     return dp.fail_data_server(store, dev, wipe)
+
+
+def sever_data_server(store: KVStore, dev: int,
+                      wipe: bool = True) -> KVStore:
+    """Crash device ``dev``'s DATA server without telling the client —
+    the value plane's lease-detection kill switch (see data_plane.py)."""
+    return dp.sever_data_server(store, dev, wipe)
 
 
 def recover_data_server(store: KVStore, dev: int, cfg,

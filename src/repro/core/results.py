@@ -68,6 +68,20 @@ class ScanResult(NamedTuple):
     keys: jnp.ndarray     # [limit] ascending; key_inf-padded past ``count``
     addrs: jnp.ndarray    # int32 [limit]
     count: jnp.ndarray    # int32 scalar: live entries in [lo, hi]
+    complete: Optional[bool] = None
+    # False when some group had ZERO live, unsevered holders during the
+    # scan — its range silently contributed nothing, so ``keys``/``count``
+    # under-report.  The client retries a few observation rounds first
+    # (so the lease detector aligns the routing view), then reports
+    # honestly instead of pretending the store answered.  None on legacy
+    # constructions that carry no coverage information.
+    missing_groups: tuple = ()
+    # the group ids a False ``complete`` names (empty when complete)
+
+    @property
+    def is_complete(self) -> bool:
+        """True unless the scan is KNOWN to have missed a group."""
+        return self.complete is not False
 
 
 class FailResult(NamedTuple):

@@ -1,0 +1,56 @@
+"""Shared runner for the multi-device subprocess batteries.
+
+The dry-run rule keeps the pytest process single-device: every
+multi-device selftest is a standalone script spawned with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  This helper
+centralizes the spawn AND tees the battery's stdout/stderr to
+``test-logs/<name>.{out,err}`` so a CI failure can upload the full
+transcript as an artifact (the in-process assertion message only keeps
+the tail).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+LOG_DIR = ROOT / "test-logs"
+
+
+def _as_text(buf) -> str:
+    if buf is None:
+        return ""
+    return buf.decode(errors="replace") if isinstance(buf, bytes) else buf
+
+
+def _persist(name: str, stdout, stderr) -> None:
+    LOG_DIR.mkdir(exist_ok=True)
+    (LOG_DIR / f"{name}.out").write_text(_as_text(stdout))
+    (LOG_DIR / f"{name}.err").write_text(_as_text(stderr))
+
+
+def run_battery(script, name: str, extra_pythonpath=(), timeout: int = 900,
+                devices: int = 8) -> subprocess.CompletedProcess:
+    """Spawn ``script`` on ``devices`` host devices, capture its output,
+    and persist it under test-logs/ regardless of outcome — including a
+    HUNG battery: on TimeoutExpired the partial transcript is written
+    before the exception propagates (a deadlock is exactly the failure
+    the forensics artifacts exist for)."""
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.pathsep.join(
+            [str(ROOT / "src"), *map(str, extra_pythonpath)]),
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    try:
+        proc = subprocess.run(
+            [sys.executable, str(script)], env=env, capture_output=True,
+            text=True, timeout=timeout)
+    except subprocess.TimeoutExpired as e:
+        _persist(name, e.stdout,
+                 _as_text(e.stderr) + f"\n[run_battery: killed after "
+                 f"{timeout}s timeout]\n")
+        raise
+    _persist(name, proc.stdout, proc.stderr)
+    return proc

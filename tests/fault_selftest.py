@@ -60,6 +60,12 @@ def phase_parity_hook(client, event) -> None:
             assert p["agree"], f"value audit broke after {event}: {p}"
         elif p["primary_alive"] and p["holder_alive"]:
             assert p["agree"], f"live parity broke after {event}: {p}"
+    # single failures leave every group >= 1 live holder, so scans must
+    # report complete in EVERY phase (the completeness flag may only
+    # trip when a whole group loses both holders)
+    s = client.scan(0, 2 ** 31 - 1)
+    assert s.complete is True and s.missing_groups == (), \
+        f"scan completeness broke after {event}: {s.missing_groups}"
 
 
 def run_mix(mesh, mix: str, seed: int, dead_dev: int) -> None:

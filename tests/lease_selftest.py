@@ -11,7 +11,21 @@ client must discover each failure through its lease detector (paper §5):
 
   * detection bound — after a sever, the client demotes the server to
     degraded routing in EXACTLY ``cfg.lease_misses`` observation rounds
-    (heartbeat counters bumped on the mesh, aged host-side);
+    (heartbeat counters bumped on the mesh, aged host-side) — the
+    rounds-clock regression guard: wall-clock leases (the default) must
+    not change the deterministic bound of ``lease_clock="rounds"``;
+  * idle wall-clock detection — ``lease_clock="wall"``: a severed server
+    is demoted by the background ticker alone, with ZERO foreground ops,
+    within ``lease_timeout_s`` plus one tick interval;
+  * data-server leases — a DATA-server kill delivered only through cut
+    heartbeats: GETs fail over to mirror-served second-hop fetches
+    immediately, the data lease expires within the bound, displaced PUTs
+    land post-detection, and recovery from the DETECTED state (plus
+    migration) restores one-RTT GETs — zero oracle kills;
+  * scan completeness — while BOTH holders of a group are severed, SCAN
+    names the uncovered group (``ScanResult.complete=False``) instead of
+    silently omitting its range; the retry loop drives detection, and
+    recovery restores ``complete=True``;
   * differential trace — a seeded op trace with sever/recover events
     spliced in replays result-for-result against the fault-oblivious
     oracle: pre-detection timeouts are retried, post-detection degraded
@@ -29,6 +43,7 @@ client must discover each failure through its lease detector (paper §5):
     actionable blockers instead.
 """
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
@@ -46,14 +61,17 @@ from repro.core.hashing import key_dtype
 from oracle import (FaultInjector, Oracle, assert_equivalent, gen_ops,
                     replay, splice_faults)
 
-CFG = scaled(log_capacity=512, async_apply_batch=128, lease_misses=3)
+# rounds clock: the deterministic detection bound these phases assert;
+# run_idle_wall_clock builds its own wall-clock config
+CFG = scaled(log_capacity=512, async_apply_batch=128, lease_misses=3,
+             lease_clock="rounds")
 CAP = 512
 N_EVENTS = 10
 
 
-def make_client(mesh, **kw):
+def make_client(mesh, cfg=CFG, **kw):
     return HiStoreClient(
-        DistributedBackend(mesh, CFG, CAP, capacity_q=64, scan_limit=128),
+        DistributedBackend(mesh, cfg, CAP, capacity_q=64, scan_limit=128),
         batch_quantum=4 * mesh.devices.size, max_retries=32, **kw)
 
 
@@ -258,12 +276,157 @@ def run_multi_failure(mesh) -> None:
           "truly-lost)", flush=True)
 
 
+def run_data_server_detection(mesh) -> None:
+    """Value-plane liveness: a data-server kill delivered ONLY through
+    cut heartbeats.  Pre-detection GETs of the severed shard's keys are
+    mirror-served (second-hop fetch, right answers, hops == 2); the data
+    lease expires within the rounds bound; post-detection PUTs displace
+    one hop and land; recovery from the DETECTED state + migration
+    restores one-RTT reads — with zero oracle kills and zero spurious
+    index demotions."""
+    G = mesh.devices.size
+    client = make_client(mesh)
+    backend = client.backend
+    rng = np.random.RandomState(13)
+    keys = rng.choice(10 ** 6, 16 * G, replace=False) + 1
+    vals = np.arange(16 * G)
+    assert client.put(keys, vals).all_ok
+    client.drain()
+    dead = 4
+    inj = FaultInjector(client)
+    inj.sever_data(dead)
+    assert dead not in backend._data_dead, \
+        "sever_data must NOT update the routing view"
+    dk = owned_by(keys, dead, G)
+    assert len(dk), "need keys homed on the severed shard"
+    r = client.get(dk)
+    assert r.all_found, "pre-detection GETs must be mirror-served"
+    assert bool((np.asarray(r.hops) == 2).all()), \
+        "severed-shard values must arrive via the second-hop fetch"
+    probe = owned_by(keys, dead, G, invert=True)[:G]
+    rounds = 0
+    while dead not in backend._data_dead:
+        client.get(probe)
+        rounds += 1
+        assert rounds <= 2 * CFG.lease_misses, \
+            "data lease must expire within the bound"
+    assert backend.detected_data == [dead], \
+        "the detector (and nothing else) must demote the data server"
+    assert backend.detected == [] and not backend._dead, \
+        "no index server may be demoted by a data-server failure"
+    # post-detection: the degraded put variant displaces writes off the
+    # dead shard (the neighbour holds them until migration)
+    nk = rng.choice(10 ** 6, 8 * G, replace=False) + 3 * 10 ** 6
+    nv = np.arange(8 * G) + 100
+    assert client.put(nk, nv).all_ok, "displaced PUTs must land"
+    assert client.get(nk).all_found
+    inj.recover_data(dead)          # operator repair of a DETECTED fail
+    assert dead not in backend._data_dead and not backend._data_severed
+    model = dict(zip(keys.tolist(), vals.tolist()))
+    model.update(zip(nk.tolist(), nv.tolist()))
+    allk = np.fromiter(model.keys(), np.int64)
+    g_all = client.get(allk)
+    assert g_all.all_found
+    np.testing.assert_array_equal(np.asarray(g_all.values)[:, 0],
+                                  [model[k] for k in allk.tolist()])
+    assert bool((np.asarray(g_all.hops) == 1).all()), \
+        "post-recovery migration must restore one-RTT GETs"
+    assert inj.oracle_kills == 0
+    client.drain()
+    assert all(p["agree"] for p in kv.parity_report(backend.store, CFG))
+    print(f"data-server detection ok (demoted data dev {dead} in "
+          f"{rounds} rounds, mirror-served through the window)",
+          flush=True)
+
+
+def run_idle_wall_clock(mesh) -> None:
+    """Wall-clock leases with an IDLE client: after the sever, not one
+    foreground op runs — the background ticker alone must age the lease
+    and demote within lease_timeout_s + one tick interval (+ scheduling
+    slack for a loaded CI host)."""
+    wcfg = scaled(log_capacity=512, async_apply_batch=128, lease_misses=3,
+                  lease_clock="wall", lease_timeout_s=0.8,
+                  lease_interval_s=0.2)
+    client = make_client(mesh, cfg=wcfg)
+    backend = client.backend
+    rng = np.random.RandomState(17)
+    keys = rng.choice(10 ** 6, 8 * mesh.devices.size, replace=False) + 1
+    assert client.put(keys, np.arange(len(keys))).all_ok
+    client.drain()
+    backend._lease_tick(bump=True)   # compile the tick op pre-sever
+    assert client.start_ticker(), "wall cfg must start a ticker"
+    try:
+        dead = 3
+        inj = FaultInjector(client)
+        inj.sever(dead)
+        stats0 = dict(client.stats)
+        budget = wcfg.lease_timeout_s + wcfg.lease_interval_s + 3.0
+        t0 = time.monotonic()
+        while dead not in backend._dead:
+            time.sleep(0.02)
+            assert time.monotonic() - t0 <= budget, \
+                f"idle detection must fire within {budget:.1f}s"
+        t_detect = time.monotonic() - t0
+        assert backend.detected == [dead]
+        assert dict(client.stats) == stats0, \
+            "detection must have used ZERO foreground ops"
+        assert inj.oracle_kills == 0
+    finally:
+        client.stop_ticker()
+    inj.recover(dead)
+    assert client.get(keys).all_found
+    assert all(p["agree"] for p in kv.parity_report(backend.store, wcfg))
+    print(f"idle wall-clock detection ok ({t_detect:.2f}s elapsed, "
+          f"timeout {wcfg.lease_timeout_s}s + tick "
+          f"{wcfg.lease_interval_s}s, zero foreground ops)", flush=True)
+
+
+def run_scan_completeness(mesh) -> None:
+    """While BOTH holders of group 1 (devices 2 and 3) are severed, SCAN
+    must name the uncovered group instead of silently omitting its range;
+    the completeness retries double as observation rounds (the detector
+    demotes the dead holders), and recovery restores complete=True with
+    the full key set back."""
+    G = mesh.devices.size
+    client = make_client(mesh)
+    backend = client.backend
+    rng = np.random.RandomState(19)
+    keys = rng.choice(10 ** 6, 16 * G, replace=False) + 1
+    assert client.put(keys, np.arange(16 * G)).all_ok
+    client.drain()
+    s0 = client.scan(0, 10 ** 7, limit=CAP)
+    assert s0.complete is True and s0.missing_groups == ()
+    n0 = int(s0.count)
+    inj = FaultInjector(client)
+    inj.sever(2)
+    inj.sever(3)                     # group 1 now has zero live holders
+    s1 = client.scan(0, 10 ** 7, limit=CAP)
+    assert s1.complete is False and s1.missing_groups == (1,), \
+        f"scan must name the uncovered group (got {s1.missing_groups})"
+    assert int(s1.count) < n0, "the missing group's range is absent"
+    assert {2, 3} <= set(backend.detected), \
+        "the completeness retries must have driven detection"
+    inj.recover(2)
+    inj.recover(3)
+    s2 = client.scan(0, 10 ** 7, limit=CAP)
+    assert s2.complete is True and s2.missing_groups == ()
+    assert int(s2.count) == n0, "recovery must restore the full range"
+    assert inj.oracle_kills == 0
+    assert all(p["agree"] for p in kv.parity_report(backend.store, CFG))
+    print(f"scan completeness ok (named group 1 while holders 2+3 were "
+          f"severed; {n0 - int(s1.count)} keys honestly reported "
+          "missing)", flush=True)
+
+
 def main() -> int:
     mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
     run_detection_bound(mesh)
     run_detector_trace(mesh, "uniform", 21, 5)
     run_online_catch_up(mesh)
     run_multi_failure(mesh)
+    run_data_server_detection(mesh)
+    run_idle_wall_clock(mesh)
+    run_scan_completeness(mesh)
     print("LEASE-SELFTEST-OK")
     return 0
 

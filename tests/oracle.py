@@ -78,7 +78,7 @@ class Oracle:
         ks = sorted(k for k in self.model if int(lo) <= k <= int(hi))[:limit]
         return ScanResult(np.array(ks, np.int64),
                           np.full((len(ks),), -1, np.int32),
-                          np.int32(len(ks)))
+                          np.int32(len(ks)), True, ())
 
     # fault events are no-ops: the model IS the always-healthy truth
     def fail_server(self, server: int) -> None:
@@ -91,6 +91,9 @@ class Oracle:
         pass
 
     def fail_data_server(self, server: int) -> None:
+        pass
+
+    def sever_data_server(self, server: int) -> None:
         pass
 
     def recover_data_server(self, server: int) -> None:
@@ -113,11 +116,24 @@ class FaultInjector:
         self.injected.append(("sever", server))
         return self.system.sever_server(server)
 
+    def sever_data(self, server: int):
+        """Value-plane kill through cut heartbeats: the client's data
+        lease must expire before its routing view changes (the unified
+        liveness plane's detector covers data servers too)."""
+        self.injected.append(("sever_data", server))
+        return self.system.sever_data_server(server)
+
     def fail(self, server: int):
         """Oracle kill (client told instantly) — recorded so a detector
         schedule's ``oracle_kills == 0`` assertion is falsifiable."""
         self.injected.append(("fail", server))
         return self.system.fail_server(server)
+
+    def fail_data(self, server: int):
+        """Oracle data-server kill — also counted against the detector
+        schedule's ``oracle_kills == 0`` assertion."""
+        self.injected.append(("fail_data", server))
+        return self.system.fail_data_server(server)
 
     def recover(self, server: int):
         """Operator-initiated repair (detection is the client's job;
@@ -125,11 +141,16 @@ class FaultInjector:
         self.injected.append(("recover", server))
         return self.system.recover_server(server)
 
+    def recover_data(self, server: int):
+        self.injected.append(("recover_data", server))
+        return self.system.recover_data_server(server)
+
     @property
     def oracle_kills(self) -> int:
-        """Count of direct fail_server calls made through this injector
-        — a detector schedule asserts it stays 0."""
-        return sum(1 for k, _ in self.injected if k == "fail")
+        """Count of direct fail_server/fail_data_server calls made
+        through this injector — a detector schedule asserts it stays 0."""
+        return sum(1 for k, _ in self.injected
+                   if k in ("fail", "fail_data"))
 
 
 # ---------------------------------------------------------------------------
@@ -189,15 +210,16 @@ def gen_ops(seed: int, mix: str = "uniform", n_events: int = 12,
     return events
 
 
-FAULT_KINDS = ("fail", "sever", "recover", "fail_data", "recover_data")
+FAULT_KINDS = ("fail", "sever", "recover", "fail_data", "sever_data",
+               "recover_data")
 
 
 def splice_faults(events: list, schedule: list) -> list:
-    """Insert ("fail"|"sever"|"recover"|"fail_data"|"recover_data",
-    server) events at trace offsets — index-server and data-server
-    failures are separate domains (paper §2), and "sever" delivers an
-    index-server kill through cut heartbeats that the client must detect
-    itself (no oracle fail_server).  ``schedule``: [(offset, kind,
+    """Insert ("fail"|"sever"|"recover"|"fail_data"|"sever_data"|
+    "recover_data", server) events at trace offsets — index-server and
+    data-server failures are separate domains (paper §2), and
+    "sever"/"sever_data" deliver a kill through cut heartbeats that the
+    client must detect itself (no oracle fail_server).  ``schedule``: [(offset, kind,
     server), ...]; offsets index the ORIGINAL op trace, so a schedule is
     portable across backends."""
     out = list(events)

@@ -1,0 +1,123 @@
+"""Unit tests for the CI bench-regression gate (tools/bench_check.py).
+
+Pure-stdlib (no jax): the gate itself must stay runnable on any CI
+runner before the heavy deps install.  Exercised through the CLI (the
+exact surface ci.sh calls) on synthetic JSON files, including the
+acceptance case: a 2x-regressed run must exit non-zero.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+CHECK = ROOT / "tools" / "bench_check.py"
+
+BASELINE = [
+    {"name": "fig13_dist_recover_server", "n": 4000, "seconds": 10.0},
+    {"name": "fig13_post_migration_get", "us_per_op": 800.0,
+     "mean_hops": 1.0, "one_rtt": True},
+    {"name": "fig13_detection_latency", "rounds": 3, "seconds": 2.0,
+     "detected": True},
+]
+
+
+def _run(tmp_path, new_rows, base_rows=BASELINE, extra=()):
+    new = tmp_path / "new.json"
+    base = tmp_path / "base.json"
+    new.write_text(json.dumps(new_rows))
+    base.write_text(json.dumps(base_rows))
+    return subprocess.run(
+        [sys.executable, str(CHECK), str(new), str(base), *extra],
+        capture_output=True, text=True)
+
+
+def test_identical_run_passes(tmp_path):
+    p = _run(tmp_path, BASELINE)
+    assert p.returncode == 0, p.stderr
+    assert "bench-check OK" in p.stdout
+
+
+def test_regression_within_threshold_passes(tmp_path):
+    rows = json.loads(json.dumps(BASELINE))
+    rows[0]["seconds"] = 11.0           # +10% < 25% gate
+    assert _run(tmp_path, rows).returncode == 0
+
+
+def test_two_x_latency_regression_fails(tmp_path):
+    """The acceptance case: a synthetic 2x-regressed JSON exits
+    non-zero and names the offending row."""
+    rows = json.loads(json.dumps(BASELINE))
+    rows[0]["seconds"] = 20.0
+    p = _run(tmp_path, rows)
+    assert p.returncode != 0
+    assert "fig13_dist_recover_server.seconds" in p.stderr
+    assert "regression" in p.stderr
+
+
+def test_lost_capability_flag_fails(tmp_path):
+    rows = json.loads(json.dumps(BASELINE))
+    rows[1]["one_rtt"] = False          # GETs no longer one-RTT
+    p = _run(tmp_path, rows)
+    assert p.returncode != 0
+    assert "one_rtt" in p.stderr and "capability" in p.stderr
+
+
+def test_missing_row_and_newly_skipped_fail(tmp_path):
+    p = _run(tmp_path, BASELINE[:2])    # detection row vanished
+    assert p.returncode != 0
+    assert "missing" in p.stderr
+    rows = json.loads(json.dumps(BASELINE))
+    rows[2] = {"name": "fig13_detection_latency",
+               "skipped": "needs >=3 devices, have 1"}
+    p = _run(tmp_path, rows)
+    assert p.returncode != 0
+    assert "skipped" in p.stderr
+
+
+def test_speedups_and_extra_rows_never_fail(tmp_path):
+    rows = json.loads(json.dumps(BASELINE))
+    rows[0]["seconds"] = 1.0            # 10x faster
+    rows.append({"name": "fig13_new_metric", "seconds": 99.0})
+    assert _run(tmp_path, rows).returncode == 0
+
+
+def test_rtol_flag_overrides_default(tmp_path):
+    rows = json.loads(json.dumps(BASELINE))
+    rows[0]["seconds"] = 14.0           # +40%: fails at 0.25, ok at 0.5
+    assert _run(tmp_path, rows).returncode != 0
+    assert _run(tmp_path, rows, extra=("--rtol", "0.5")).returncode == 0
+
+
+def test_small_absolute_noise_is_absorbed(tmp_path):
+    """Sub-atol timings are scheduler noise: 0.01s -> 0.02s is a '2x
+    regression' only nominally — the absolute slack must absorb it."""
+    base = [{"name": "tiny", "seconds": 0.01}]
+    rows = [{"name": "tiny", "seconds": 0.02}]
+    assert _run(tmp_path, rows, base_rows=base).returncode == 0
+
+
+def test_wall_idle_row_gates_on_flag_not_timing(tmp_path):
+    """fig13_wall_idle_detection's wall time is a fixed lease timeout
+    plus thread scheduling, not code speed: a descheduled-ticker 3x
+    'regression' must pass, but losing detected_idle must still fail."""
+    base = [{"name": "fig13_wall_idle_detection", "seconds": 0.47,
+             "detected_idle": True}]
+    slow = [{"name": "fig13_wall_idle_detection", "seconds": 1.6,
+             "detected_idle": True}]
+    assert _run(tmp_path, slow, base_rows=base).returncode == 0
+    lost = [{"name": "fig13_wall_idle_detection", "seconds": 0.47,
+             "detected_idle": False}]
+    p = _run(tmp_path, lost, base_rows=base)
+    assert p.returncode != 0 and "detected_idle" in p.stderr
+
+
+def test_zero_baseline_reports_without_crashing(tmp_path):
+    """A 0.0 baseline timing (round(t, 4) of a very fast row) must gate
+    through the absolute slack and report cleanly — no
+    ZeroDivisionError swallowing the failure list."""
+    base = [{"name": "zed", "seconds": 0.0}]
+    rows = [{"name": "zed", "seconds": 0.9}]
+    p = _run(tmp_path, rows, base_rows=base)
+    assert p.returncode != 0
+    assert "zed.seconds" in p.stderr and "Traceback" not in p.stderr

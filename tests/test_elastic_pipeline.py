@@ -1,22 +1,17 @@
 """Elastic re-mesh + pipeline-parallel + compressed-DP protocol tests
 (8-device subprocess; see src/repro/train/elastic_selftest.py)."""
-import os
-import subprocess
-import sys
 from pathlib import Path
 
 import pytest
+
+from _battery import run_battery
 
 ROOT = Path(__file__).resolve().parents[1]
 
 
 @pytest.mark.slow
 def test_elastic_pipeline_compression():
-    env = dict(os.environ,
-               PYTHONPATH=str(ROOT / "src"),
-               XLA_FLAGS="--xla_force_host_platform_device_count=8")
-    proc = subprocess.run(
-        [sys.executable, str(ROOT / "src/repro/train/elastic_selftest.py")],
-        env=env, capture_output=True, text=True, timeout=900)
+    proc = run_battery(ROOT / "src/repro/train/elastic_selftest.py",
+                       "elastic_selftest")
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
     assert "ELASTIC-SELFTEST-OK" in proc.stdout

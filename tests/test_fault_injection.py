@@ -15,9 +15,6 @@ Three rigs:
   * the 8-device subprocess battery (tests/fault_selftest.py) — the real
     distributed kill/recover protocol, marked ``slow``.
 """
-import os
-import subprocess
-import sys
 from pathlib import Path
 
 import jax
@@ -162,12 +159,8 @@ def test_local_replication_reported_honestly():
 def test_fault_injection_distributed_8dev():
     """The real distributed kill/recover protocol, differentially checked
     against the oracle on an 8-device host mesh (subprocess)."""
-    env = dict(os.environ,
-               PYTHONPATH=os.pathsep.join(
-                   [str(ROOT / "src"), str(ROOT / "tests")]),
-               XLA_FLAGS="--xla_force_host_platform_device_count=8")
-    proc = subprocess.run(
-        [sys.executable, str(ROOT / "tests/fault_selftest.py")],
-        env=env, capture_output=True, text=True, timeout=900)
+    from _battery import run_battery
+    proc = run_battery(ROOT / "tests/fault_selftest.py", "fault_selftest",
+                       extra_pythonpath=[ROOT / "tests"])
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
     assert "FAULT-SELFTEST-OK" in proc.stdout

@@ -6,23 +6,18 @@ keeps its 1-device view).  See src/repro/core/dist_selftest.py for the
 checks: routed PUT/GET roundtrip, value payloads, SCAN serializability,
 degraded GET/PUT under primary failure, recovery.
 """
-import os
-import subprocess
-import sys
 from pathlib import Path
 
 import pytest
+
+from _battery import run_battery
 
 ROOT = Path(__file__).resolve().parents[1]
 
 
 @pytest.mark.slow
 def test_distributed_kvstore_protocol():
-    env = dict(os.environ,
-               PYTHONPATH=str(ROOT / "src"),
-               XLA_FLAGS="--xla_force_host_platform_device_count=8")
-    proc = subprocess.run(
-        [sys.executable, str(ROOT / "src/repro/core/dist_selftest.py")],
-        env=env, capture_output=True, text=True, timeout=900)
+    proc = run_battery(ROOT / "src/repro/core/dist_selftest.py",
+                       "dist_selftest")
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
     assert "DIST-SELFTEST-OK" in proc.stdout

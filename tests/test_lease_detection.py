@@ -12,9 +12,7 @@ Two rigs:
     explicit FailResult/warning surface of that divergence, and the
     detector's demote-on-stalled-heartbeats logic.
 """
-import os
-import subprocess
-import sys
+import time
 import warnings
 from pathlib import Path
 
@@ -26,13 +24,18 @@ from repro.configs.histore import scaled
 from repro.core import kvstore as kv
 from repro.core.client import DistributedBackend, HiStoreClient
 
+from _battery import run_battery
+
 ROOT = Path(__file__).resolve().parents[1]
-CFG = scaled(log_capacity=1 << 10, async_apply_batch=256, lease_misses=3)
+# rounds clock: these tests assert the deterministic observation-round
+# bound; the wall-clock (default) path has its own tests below
+CFG = scaled(log_capacity=1 << 10, async_apply_batch=256, lease_misses=3,
+             lease_clock="rounds")
 
 
-def _one_dev_client(**kw):
+def _one_dev_client(cfg=CFG, **kw):
     mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
-    return HiStoreClient(DistributedBackend(mesh, CFG, 512, capacity_q=64),
+    return HiStoreClient(DistributedBackend(mesh, cfg, 512, capacity_q=64),
                          batch_quantum=16, **kw)
 
 
@@ -89,7 +92,7 @@ def test_sever_timeouts_then_detector_demotes():
 
 def test_detector_disabled_without_lease_misses():
     """lease_misses=0 turns detection off: no heartbeat reads, no
-    demotions — the oracle kill switches still work as before."""
+    demotions, no ticker — the oracle kill switches still work."""
     mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
     cfg0 = scaled(log_capacity=1 << 10, async_apply_batch=256,
                   lease_misses=0)
@@ -101,6 +104,201 @@ def test_detector_disabled_without_lease_misses():
     assert client.backend.lease_misses == 0
     client.get(keys)
     assert client.backend.detected == []
+    assert client.start_ticker() is False, \
+        "a disabled detector must not spawn a ticker thread"
+
+
+def test_rounds_mode_exact_bound_regression():
+    """The deterministic rounds-clock bound is UNCHANGED by the wall
+    clock: a severed server is demoted on exactly the lease_misses-th
+    stalled observation round — no sooner, no later."""
+    client = _one_dev_client()
+    backend = client.backend
+    keys = np.arange(1, 17)
+    assert client.put(keys, keys).all_ok
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")    # 1-dev mask-only warning
+        client.sever_server(0)
+    for i in range(CFG.lease_misses):
+        assert 0 not in backend._dead, \
+            f"demoted after only {i} rounds (bound is {CFG.lease_misses})"
+        backend._lease_tick(bump=True)     # one observation round
+    assert backend.detected == [0]
+
+
+def test_oracle_fail_resets_stall_accounting():
+    """An oracle kill after a partially-aged lease must clear the stall
+    flag: a known-dead server can no longer 'stall', so healthy
+    push-back retries never latch onto wall-mode pacing."""
+    client = _one_dev_client()
+    backend = client.backend
+    keys = np.arange(1, 17)
+    assert client.put(keys, keys).all_ok
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")    # 1-dev mask-only warnings
+        client.sever_server(0)
+        backend._lease_tick(bump=True)     # one stalled observation
+        assert backend.lease_stalled()
+        client.fail_server(0)              # oracle masking takes over
+    assert not backend.lease_stalled(), \
+        "a known-dead server must not latch the stall flag"
+
+
+def test_wall_clock_ticker_detects_while_idle():
+    """Wall-clock leases (the default): after a sever the background
+    ticker alone — zero foreground ops — demotes within lease_timeout_s
+    plus one tick interval (plus scheduling slack)."""
+    wcfg = scaled(log_capacity=1 << 10, async_apply_batch=256,
+                  lease_misses=3, lease_clock="wall",
+                  lease_timeout_s=0.5, lease_interval_s=0.1)
+    client = _one_dev_client(cfg=wcfg)
+    backend = client.backend
+    keys = np.arange(1, 17)
+    assert client.put(keys, keys).all_ok
+    backend._lease_tick(bump=True)     # compile the tick op pre-sever
+    assert client.start_ticker()
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            client.sever_server(0)
+        stats0 = dict(client.stats)
+        budget = wcfg.lease_timeout_s + wcfg.lease_interval_s + 3.0
+        t0 = time.monotonic()
+        while 0 not in backend._dead:
+            time.sleep(0.02)
+            assert time.monotonic() - t0 <= budget, \
+                "idle wall-clock detection must fire within the lease"
+    finally:
+        client.stop_ticker()
+    assert backend.detected == [0]
+    assert dict(client.stats) == stats0, \
+        "the ticker must not have issued foreground ops"
+    client.recover_server(0)
+    assert client.get(keys).all_found
+
+
+def test_wall_clock_detection_completes_within_retry_loop():
+    """Wall-mode retry pacing: on hardware where retries burn in
+    milliseconds, the paced loop must still span a lease timeout, so a
+    single client op against a severed server DETECTS within its own
+    retry budget (the rounds-mode guarantee, preserved)."""
+    wcfg = scaled(log_capacity=1 << 10, async_apply_batch=256,
+                  lease_misses=3, lease_clock="wall",
+                  lease_timeout_s=0.4, lease_interval_s=0.1)
+    client = _one_dev_client(cfg=wcfg)
+    backend = client.backend
+    keys = np.arange(1, 17)
+    assert client.put(keys, keys).all_ok
+    client.get(keys)                    # warm the compiled get+tick
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        client.sever_server(0)
+    g = client.get(keys)                # one op: paced retries inside
+    assert not bool(np.asarray(g.routed).any())
+    assert backend.detected == [0], \
+        "the paced retry loop must outlast the wall-clock lease"
+    client.recover_server(0)
+    assert client.get(keys).all_found
+
+
+def test_data_server_lease_detection_one_dev():
+    """The unified plane covers DATA servers: severed data heartbeats
+    age the data lease; demotion lands in detected_data (never in the
+    index detector's list); recovery from the detected state re-admits."""
+    client = _one_dev_client()
+    backend = client.backend
+    keys = np.arange(1, 17)
+    assert client.put(keys, keys).all_ok
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")    # 1-dev mask-only warning
+        r = client.sever_data_server(0)
+    assert r.wiped is False
+    assert 0 not in backend._data_dead, \
+        "sever_data must NOT update the routing view"
+    g = client.get(keys)   # each retry is an observation round
+    assert not bool(np.asarray(g.routed).any()), \
+        "reads of a crashed data shard push back, never fabricate"
+    assert backend.detected_data == [0] and backend.detected == []
+    client.recover_data_server(0)
+    g2 = client.get(keys)
+    assert g2.all_found, "mask-only sever preserves state to recovery"
+
+
+def test_ticker_does_not_pin_a_dropped_backend():
+    """The ticker thread holds only a weakref: dropping the last client
+    reference without stop_ticker() must stop the loop (and release the
+    device-resident store) instead of ticking forever."""
+    import gc
+    wcfg = scaled(log_capacity=1 << 10, async_apply_batch=256,
+                  lease_misses=3, lease_clock="wall",
+                  lease_timeout_s=0.5, lease_interval_s=0.05)
+    client = _one_dev_client(cfg=wcfg)
+    assert client.start_ticker()
+    t = client.backend._ticker
+    del client
+    gc.collect()
+    t.join(timeout=10.0)
+    assert not t.is_alive(), \
+        "a garbage-collected backend must end its ticker thread"
+
+
+def test_lease_misconfiguration_raises():
+    """A liveness plane that silently disables itself is the exact gap
+    this subsystem closes: an unknown clock or a wall clock without a
+    timeout must fail construction, not fall back quietly."""
+    mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
+    with pytest.raises(ValueError, match="lease_clock"):
+        DistributedBackend(mesh, scaled(lease_clock="Wall"), 64,
+                           capacity_q=16)
+    with pytest.raises(ValueError, match="lease_timeout_s"):
+        DistributedBackend(mesh, scaled(lease_timeout_s=0.0), 64,
+                           capacity_q=16)
+    # lease_misses=0 is the sanctioned off switch — no timeout needed
+    b = DistributedBackend(mesh, scaled(lease_misses=0,
+                                        lease_timeout_s=0.0), 64,
+                           capacity_q=16)
+    assert b.lease_misses == 0
+
+
+def test_run_battery_persists_logs_on_timeout(tmp_path):
+    """A HUNG battery must still leave its partial transcript in
+    test-logs/ (the CI artifact) before TimeoutExpired propagates."""
+    import subprocess
+    from _battery import LOG_DIR, run_battery
+    stub = tmp_path / "hang.py"
+    stub.write_text("import sys, time\n"
+                    "print('partial line', flush=True)\n"
+                    "time.sleep(60)\n")
+    with pytest.raises(subprocess.TimeoutExpired):
+        run_battery(stub, "hang_stub", timeout=3)
+    out = (LOG_DIR / "hang_stub.out").read_text()
+    err = (LOG_DIR / "hang_stub.err").read_text()
+    assert "partial line" in out
+    assert "killed after 3s timeout" in err
+    (LOG_DIR / "hang_stub.out").unlink()
+    (LOG_DIR / "hang_stub.err").unlink()
+
+
+def test_scan_completeness_flag_one_dev():
+    """ScanResult.complete: a scan that cannot cover a group names it;
+    recovery restores complete=True with the range back."""
+    client = _one_dev_client()
+    keys = np.arange(1, 33)
+    assert client.put(keys, keys).all_ok
+    s0 = client.scan(0, 10 ** 6)
+    assert s0.complete is True and s0.missing_groups == ()
+    assert s0.is_complete
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        client.sever_server(0)
+    s1 = client.scan(0, 10 ** 6)
+    assert s1.complete is False and s1.missing_groups == (0,)
+    assert not s1.is_complete
+    assert client.backend.detected == [0], \
+        "the completeness retries must drive detection"
+    client.recover_server(0)
+    s2 = client.scan(0, 10 ** 6)
+    assert s2.complete is True and int(s2.count) == 32
 
 
 def test_recover_result_reports_online_mode():
@@ -120,13 +318,10 @@ def test_recover_result_reports_online_mode():
 def test_lease_battery_8dev():
     """The full detector battery (see tests/lease_selftest.py): severed
     heartbeats only, detection bound, online catch-up under foreground
-    load, multi-failure fallback rebuilds, typed RecoveryError."""
-    env = dict(os.environ,
-               PYTHONPATH=os.pathsep.join(
-                   [str(ROOT / "src"), str(ROOT / "tests")]),
-               XLA_FLAGS="--xla_force_host_platform_device_count=8")
-    proc = subprocess.run(
-        [sys.executable, str(ROOT / "tests/lease_selftest.py")],
-        env=env, capture_output=True, text=True, timeout=900)
+    load, multi-failure fallback rebuilds, typed RecoveryError, the
+    data-server lease phase, the idle wall-clock ticker phase, and the
+    scan-completeness phase."""
+    proc = run_battery(ROOT / "tests/lease_selftest.py", "lease_selftest",
+                       extra_pythonpath=[ROOT / "tests"], timeout=1500)
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
     assert "LEASE-SELFTEST-OK" in proc.stdout

@@ -9,8 +9,13 @@
 #                                   # --detection mode (lease detection
 #                                   # latency + online-vs-stop-the-world
 #                                   # recovery) into
-#                                   # bench_smoke_fig13_detection.json
-#                                   # (CI uploads both)
+#                                   # bench_smoke_fig13_detection.json, and
+#                                   # gates BOTH against the committed
+#                                   # BENCH_baseline_fig13*.json via
+#                                   # tools/bench_check.py (>25% latency
+#                                   # regression or a lost capability flag
+#                                   # fails; BENCH_CHECK_RTOL loosens the
+#                                   # threshold for slow runners)
 #
 # The fast tier includes the lease-detector battery
 # (tests/test_lease_detection.py spawns tests/lease_selftest.py on 8 host
@@ -23,22 +28,39 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--all" ]]; then
   echo "== tier-1: pytest (full) =="
-  python -m pytest -q
+  python -m pytest -q --durations=15
   echo "== smoke: examples/quickstart.py =="
   python examples/quickstart.py
   echo "== smoke: examples/histore_cluster.py (8 host devices) =="
   python examples/histore_cluster.py
 elif [[ "${1:-}" == "--bench-smoke" ]]; then
-  echo "== bench smoke: fig13 distributed recovery + value migration (8 host devices) =="
-  XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
-    python -m benchmarks.fig13_recovery --smoke --json bench_smoke_fig13.json
-  echo "== bench smoke: fig13 lease detection + online catch-up (8 host devices) =="
-  XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
-    python -m benchmarks.fig13_recovery --detection --smoke \
-      --json bench_smoke_fig13_detection.json
+  export XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}"
+  echo "XLA_FLAGS=${XLA_FLAGS}"
+  # fail fast if the host mesh did not materialize: benching a 1-device
+  # degenerate mesh would silently skip every distributed row and then
+  # trip the gate's lost-capability check with a confusing message
+  python - <<'PY'
+import os, sys
+import jax
+n = len(jax.devices())
+if n < 8:
+    sys.exit(f"bench-smoke needs 8 host devices, got {n} "
+             f"(XLA_FLAGS={os.environ.get('XLA_FLAGS')!r} not honored? "
+             "a GPU/TPU jaxlib build ignores the host-platform flag)")
+print(f"bench-smoke preflight: {n} host devices OK")
+PY
+  set -x
+  python -m benchmarks.fig13_recovery --smoke --json bench_smoke_fig13.json
+  python -m benchmarks.fig13_recovery --detection --smoke \
+    --json bench_smoke_fig13_detection.json
+  python tools/bench_check.py bench_smoke_fig13.json \
+    BENCH_baseline_fig13.json
+  python tools/bench_check.py bench_smoke_fig13_detection.json \
+    BENCH_baseline_fig13_detection.json
+  set +x
 else
   echo "== tier-1: pytest (fast tier; --all for the multi-minute batteries) =="
-  python -m pytest -q -m "not slow"
+  python -m pytest -q -m "not slow" --durations=15
 fi
 
 echo "CI OK"
