@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs.histore import scaled
 from repro.core import hash_index as hix
+from repro.core import telemetry as tm
 from repro.core import log as lg
 from repro.core import sorted_index as six
 from repro.core.client import HiStoreClient, LocalBackend
@@ -38,6 +39,31 @@ def timeit(fn, *args, warmup=2, iters=5):
         out = fn(*args)
         jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters, out
+
+
+def timeit_hist(fn, *args, warmup=2, iters=5):
+    """Like ``timeit`` but records every iteration into a latency
+    histogram so figure scripts can report percentiles (the paper's §6
+    reports p50/p99, not means).  Returns (LatencySnapshot, out)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    h = tm.LatencyHistogram()
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        h.record(time.perf_counter() - t0)
+    return h.snapshot(), out
+
+
+def percentile_fields(snap, per_op=1):
+    """Flatten a LatencySnapshot into bench-row fields (µs, divided by
+    ``per_op`` for batch timings).  Percentile fields are informational:
+    bench_check gates only the mean-based fields (see LATENCY_FIELDS)."""
+    scale = 1e6 / max(per_op, 1)
+    return {"p50_us": snap.p50 * scale, "p95_us": snap.p95 * scale,
+            "p99_us": snap.p99 * scale}
 
 
 def uniform_keys(n, seed=0, space=1 << 28):

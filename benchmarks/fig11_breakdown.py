@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import CFG, KD, timeit, uniform_keys
+from benchmarks.common import (CFG, KD, percentile_fields, timeit,
+                               timeit_hist, uniform_keys)
 from repro.core import hash_index as hix
 from repro.core import index_group as ig
 from repro.core import log as lg
@@ -28,30 +29,38 @@ def run(report, n_load=200_000, batch=4096):
     na = jnp.arange(batch, dtype=jnp.int32)
     ops = jnp.full((batch,), six.OP_PUT, jnp.int8)
 
-    # PUT phases
-    t_log, _ = timeit(lambda: lg.append(g.plog, nk, na, ops))
-    t_sync, _ = timeit(lambda: jax.vmap(
+    # PUT phases (histogram per phase: percentiles over timed iterations)
+    h_log, _ = timeit_hist(lambda: lg.append(g.plog, nk, na, ops))
+    h_sync, _ = timeit_hist(lambda: jax.vmap(
         lambda l: lg.append(l, nk, na, ops))(g.blogs))
-    t_hash, _ = timeit(lambda: hix.insert(g.hash, nk, na, CFG))
+    h_hash, _ = timeit_hist(lambda: hix.insert(g.hash, nk, na, CFG))
+    t_log, t_sync, t_hash = h_log.mean, h_sync.mean, h_hash.mean
     total_put = t_log + t_sync + t_hash
     report("fig11_put_log_append", share=round(t_log / total_put, 3),
-           us_per_op=t_log / batch * 1e6)
+           us_per_op=t_log / batch * 1e6,
+           **percentile_fields(h_log, per_op=batch))
     report("fig11_put_log_sync", share=round(t_sync / total_put, 3),
-           us_per_op=t_sync / batch * 1e6)
+           us_per_op=t_sync / batch * 1e6,
+           **percentile_fields(h_sync, per_op=batch))
     report("fig11_put_index_access", share=round(t_hash / total_put, 3),
-           us_per_op=t_hash / batch * 1e6)
+           us_per_op=t_hash / batch * 1e6,
+           **percentile_fields(h_hash, per_op=batch))
 
     # GET phases
     gq = jnp.asarray(keys[:batch], KD)
-    t_idx, out = timeit(lambda: hix.lookup(g.hash, gq, CFG))
+    h_idx, out = timeit_hist(lambda: hix.lookup(g.hash, gq, CFG))
     addr = out[0]
-    t_data, _ = timeit(lambda: vals[jnp.clip(addr, 0, vals.shape[0] - 1)])
+    h_data, _ = timeit_hist(
+        lambda: vals[jnp.clip(addr, 0, vals.shape[0] - 1)])
+    t_idx, t_data = h_idx.mean, h_data.mean
     report("fig11_get_index_access",
            share=round(t_idx / (t_idx + t_data), 3),
-           us_per_op=t_idx / batch * 1e6)
+           us_per_op=t_idx / batch * 1e6,
+           **percentile_fields(h_idx, per_op=batch))
     report("fig11_get_data_access",
            share=round(t_data / (t_idx + t_data), 3),
-           us_per_op=t_data / batch * 1e6)
+           us_per_op=t_data / batch * 1e6,
+           **percentile_fields(h_data, per_op=batch))
 
     # SCAN phases: drain + search + data fetch (100 keys)
     g2, _ = ig.put(g, nk, na, CFG)

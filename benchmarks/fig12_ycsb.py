@@ -10,7 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (AllHashSys, AllSkipSys, HiStoreSys, KD,
-                               uniform_keys, zipf_indices)
+                               percentile_fields, uniform_keys, zipf_indices)
+from repro.core import telemetry as tm
 
 WORKLOADS = {
     "A": {"read": 0.5, "update": 0.5},
@@ -28,18 +29,26 @@ def run(report, n_load=100_000, n_ops=16_384, batch=4096):
     results = {}
     for SysCls in (AllSkipSys, HiStoreSys, AllHashSys):
         sys_ = SysCls(n_load * 6)
+        t_load0 = time.perf_counter()
         for i in range(0, n_load, 16384):
             sys_.load(jnp.asarray(keys[i:i + 16384], KD),
                       jnp.asarray(addrs[i:i + 16384]))
+        # per-phase row (load vs run): informational only — single-pass
+        # phase timings are too noisy to gate, so bench_check skips them
+        report(f"fig12_load_{sys_.name}", non_gating=True,
+               seconds=round(time.perf_counter() - t_load0, 4),
+               ops_per_s=round(n_load / (time.perf_counter() - t_load0), 1))
         for wl, mix in WORKLOADS.items():
             if "scan" in mix and not sys_.supports_scan:
                 results[(sys_.name, wl)] = float("nan")
                 continue
             rng = np.random.default_rng(42)
+            hist = tm.LatencyHistogram()    # per-batch run latencies
             t0 = time.perf_counter()
             done = 0
             insert_base = 1 << 29
             while done < n_ops:
+                tb0 = time.perf_counter()
                 r = rng.random()
                 acc = 0.0
                 kind = "read"
@@ -69,9 +78,13 @@ def run(report, n_load=100_000, n_ops=16_384, batch=4096):
                     lo = jnp.asarray(int(keys[done % n_load]), KD)
                     out = sys_.scan(lo, jnp.asarray(1 << 30, KD), 100)
                     jax.block_until_ready(out)
+                hist.record(time.perf_counter() - tb0)
                 done += batch
             dt = time.perf_counter() - t0
             results[(sys_.name, wl)] = n_ops / dt
+            report(f"fig12_run_{wl}_{sys_.name}", non_gating=True,
+                   seconds=round(dt, 4), ops_per_s=round(n_ops / dt, 1),
+                   **percentile_fields(hist.snapshot(), per_op=batch))
     for wl in WORKLOADS:
         base = results[("all-skiplist", wl)]
         for name in ("histore", "all-hashtable", "all-skiplist"):

@@ -33,7 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import CFG, KD, timeit, uniform_keys
+from benchmarks.common import (CFG, KD, percentile_fields, timeit,
+                               timeit_hist, uniform_keys)
 from repro.core import index_group as ig
 from repro.core import kvstore as kv
 from repro.core.client import (DistributedBackend, HiStoreClient,
@@ -153,18 +154,22 @@ def run_value_migration(report, n=20_000):
     assert client.put(dk, np.arange(len(dk)) + 1).all_ok
     client.recover_server(dead)
     probe = dk[: min(len(dk), 16 * G)]
-    t2, r2 = timeit(lambda: client.get(probe), iters=3)
+    h2, r2 = timeit_hist(lambda: client.get(probe), iters=3)
+    t2 = h2.mean
     hops2 = float(np.asarray(r2.hops).mean())
     t0 = time.perf_counter()
     moved = client.migrate()
     t_mig = time.perf_counter() - t0
-    t1, r1 = timeit(lambda: client.get(probe), iters=3)
+    h1, r1 = timeit_hist(lambda: client.get(probe), iters=3)
+    t1 = h1.mean
     hops1 = float(np.asarray(r1.hops).mean())
     report("fig13_degraded_get_second_hop", n=n, devices=G,
-           us_per_op=t2 / len(probe) * 1e6, mean_hops=round(hops2, 3))
+           us_per_op=t2 / len(probe) * 1e6, mean_hops=round(hops2, 3),
+           **percentile_fields(h2, per_op=len(probe)))
     report("fig13_post_migration_get", n=n, devices=G,
            us_per_op=t1 / len(probe) * 1e6, mean_hops=round(hops1, 3),
-           one_rtt=bool(r1.one_rtt))
+           one_rtt=bool(r1.one_rtt),
+           **percentile_fields(h1, per_op=len(probe)))
     report("fig13_value_migration", n=n, devices=G, moved=moved,
            seconds=round(t_mig, 4),
            speedup_2hop_vs_1hop=round(t2 / t1, 3))
@@ -261,11 +266,12 @@ def run_detection(report, n=8_000):
            lease_misses=cfg.lease_misses, rounds=rounds,
            seconds=round(t_detect, 4), detected=True)
     dk = keys[own == dead][: 8 * G]
-    t2, r2 = timeit(lambda: client.get(dk), iters=3)
+    h2, r2 = timeit_hist(lambda: client.get(dk), iters=3)
     report("fig13_mirror_served_get", n=n, devices=G,
-           us_per_op=t2 / max(len(dk), 1) * 1e6,
+           us_per_op=h2.mean / max(len(dk), 1) * 1e6,
            mean_hops=round(float(np.asarray(r2.hops).mean()), 3),
-           served_under_data_failure=bool(r2.all_found))
+           served_under_data_failure=bool(r2.all_found),
+           **percentile_fields(h2, per_op=max(len(dk), 1)))
     backend.recover_data_server(dead)
     moved = client.migrate()
     t1, r1 = timeit(lambda: client.get(dk), iters=3)

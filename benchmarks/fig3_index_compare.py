@@ -12,7 +12,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import CFG, KD, timeit, uniform_keys
+from benchmarks.common import (CFG, KD, percentile_fields, timeit,
+                               timeit_hist, uniform_keys)
 from repro.core import hash_index as hix
 from repro.core import sorted_index as six
 
@@ -29,14 +30,16 @@ def run(report):
         s = six.bulk_load(s, keys, addrs)  # grow with data amount (Fig 3a)
         probe = keys[:q]
 
-        t_h, out_h = timeit(lambda: hix.lookup(h, probe, CFG))
+        h_h, out_h = timeit_hist(lambda: hix.lookup(h, probe, CFG))
         acc_h = float(jnp.mean(out_h[2]))
-        t_s, out_s = timeit(lambda: six.search(s, probe, CFG.fanout))
+        h_s, out_s = timeit_hist(lambda: six.search(s, probe, CFG.fanout))
         acc_s = float(jnp.mean(out_s[2]))
         report("fig3a_hash_accesses", n=n, value=round(acc_h, 2))
         report("fig3a_sorted_accesses", n=n, value=round(acc_s, 2))
-        report("fig3b_hash_lookup", n=n, us_per_op=t_h / q * 1e6)
-        report("fig3b_sorted_lookup", n=n, us_per_op=t_s / q * 1e6)
+        report("fig3b_hash_lookup", n=n, us_per_op=h_h.mean / q * 1e6,
+               **percentile_fields(h_h, per_op=q))
+        report("fig3b_sorted_lookup", n=n, us_per_op=h_s.mean / q * 1e6,
+               **percentile_fields(h_s, per_op=q))
 
     # 3c/3d: indexing share of full op (index + 32B value access)
     n = 1_000_000

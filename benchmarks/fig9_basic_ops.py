@@ -6,7 +6,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (CFG, KD, SYSTEMS, timeit, uniform_keys)
+from benchmarks.common import (CFG, KD, SYSTEMS, percentile_fields,
+                               timeit_hist, uniform_keys)
 
 
 def run(report, n_load=200_000, batch=4096):
@@ -28,21 +29,24 @@ def run(report, n_load=200_000, batch=4096):
             sys_.apply_async()
             return ok
 
-        t_put, _ = timeit(do_put, warmup=1, iters=3)
-        report(f"fig9a_put_{sys_.name}", us_per_op=t_put / batch * 1e6,
-               mops=batch / t_put / 1e6)
+        h_put, _ = timeit_hist(do_put, warmup=1, iters=3)
+        report(f"fig9a_put_{sys_.name}", us_per_op=h_put.mean / batch * 1e6,
+               mops=batch / h_put.mean / 1e6,
+               **percentile_fields(h_put, per_op=batch))
 
         # GET: uniform over loaded keys
         gq = jnp.asarray(rng.choice(keys, batch), KD)
-        t_get, out = timeit(lambda: sys_.get(gq), iters=3)
+        h_get, out = timeit_hist(lambda: sys_.get(gq), iters=3)
         assert bool(out[1].all()), sys_.name
-        report(f"fig9b_get_{sys_.name}", us_per_op=t_get / batch * 1e6,
-               mops=batch / t_get / 1e6)
+        report(f"fig9b_get_{sys_.name}", us_per_op=h_get.mean / batch * 1e6,
+               mops=batch / h_get.mean / 1e6,
+               **percentile_fields(h_get, per_op=batch))
 
         # SCAN: 100-key ranges (paper setting)
         if sys_.supports_scan:
             lo = jnp.asarray(int(np.median(keys)), KD)
             hi = jnp.asarray((1 << 30), KD)
-            t_scan, _ = timeit(lambda: sys_.scan(lo, hi, 100),
-                               warmup=1, iters=3)
-            report(f"fig9c_scan_{sys_.name}", us_per_op=t_scan * 1e6)
+            h_scan, _ = timeit_hist(lambda: sys_.scan(lo, hi, 100),
+                                    warmup=1, iters=3)
+            report(f"fig9c_scan_{sys_.name}", us_per_op=h_scan.mean * 1e6,
+                   **percentile_fields(h_scan))

@@ -50,6 +50,11 @@ def main():
     print(f"post-recovery GET hits={g.found.tolist()} "
           f"accesses={g.accesses.tolist()}")
     assert g.all_found
+
+    # telemetry: every op above was counted + histogrammed (the default
+    # cfg.telemetry="counters"); scrape-ready Prometheus text
+    print("\n--- client.metrics_text() ---")
+    print(client.metrics_text())
     print("quickstart OK")
 
 

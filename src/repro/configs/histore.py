@@ -53,6 +53,14 @@ class HiStoreConfig:
                                    # ticker issues a heartbeat-only tick
                                    # round whenever no foreground traffic
                                    # ran for this long
+    # telemetry ------------------------------------------------------------
+    telemetry: str = "counters"    # "off": record nothing (snapshots never
+                                   # change); "counters": op counters +
+                                   # log-bucketed latency histograms (the
+                                   # default — no device syncs added);
+                                   # "trace": counters + a bounded ring of
+                                   # per-op spans for forensics
+                                   # (core/telemetry.py)
     # batching -------------------------------------------------------------
     async_apply_batch: int = 4096  # log entries merged into the sorted index
                                    # per asynchronous apply

@@ -50,6 +50,7 @@ from repro.core import data_plane as dpl
 from repro.core import index_group as ig
 from repro.core import kvstore as kv
 from repro.core import log as lg
+from repro.core import telemetry as tm
 from repro.core.hashing import key_dtype, key_inf, next_pow2
 from repro.core.results import (DeleteResult, FailResult, GetResult,
                                 PutResult, RecoverResult, ScanResult)
@@ -149,6 +150,8 @@ class LocalBackend:
 
     def __init__(self, capacity: int, cfg, value_words: Optional[int] = None):
         self.cfg = cfg
+        self.telemetry = tm.Telemetry(getattr(cfg, "telemetry",
+                                              "counters"))
         self.capacity = capacity
         self.group = ig.create(capacity, cfg)
         self.value_words = value_words or cfg.value_words
@@ -216,6 +219,19 @@ class LocalBackend:
     def pending_ops(self) -> int:
         return int(lg.pending_count(self.group.blogs).max())
 
+    def telemetry_gauges(self) -> dict:
+        """Snapshot-time gauges: the single node's liveness is host-side
+        and its one shard has no free queue, so only the pending-log
+        depth needs a device fetch."""
+        return {
+            "live_index_servers": (int(self._primary_alive)
+                                   + sum(map(int, self._backups_alive))),
+            "live_data_servers": 1,
+            "pending_log_ops": self.pending_ops(),
+            "freeq_pending": 0,
+            "fq_spill": 0,
+        }
+
     def migrate_values(self) -> int:
         return 0   # one shard: every value is already home
 
@@ -233,6 +249,9 @@ class LocalBackend:
             self._primary_alive = False
         else:
             self._backups_alive[server - 1] = False
+        self.telemetry.count("index_demotions")
+        self.telemetry.span({"event": "demote", "plane": "index",
+                             "server": server, "detected": False})
 
     def recover_server(self, server: int = 0, online: bool = True):
         if server == 0:
@@ -243,6 +262,9 @@ class LocalBackend:
             self.group = ig.recover_backup(self.group, server - 1,
                                            self.cfg, online=online)
             self._backups_alive[server - 1] = True
+        self.telemetry.count("index_recoveries")
+        self.telemetry.span({"event": "recover", "plane": "index",
+                             "server": server, "online": online})
 
 
 # ---------------------------------------------------------------------------
@@ -278,16 +300,23 @@ def _lease_ticker_loop(ref, stop: threading.Event) -> None:
                 if time.monotonic() - be._last_traffic_t < interval:
                     continue
                 be._lease_tick(bump=True)
+            be.telemetry.count("ticker_rounds")
             fails = 0
         except Exception as e:   # noqa: BLE001 — a daemon thread must
             # not die silently on a transient dispatch error:
             # idle-client detection would be disabled with no signal
             fails += 1
+            be.telemetry.count("ticker_errors")
             warnings.warn(
                 f"lease ticker tick failed ({e!r}); "
                 f"{'giving up' if fails >= 3 else 'retrying'}",
                 RuntimeWarning)
             if fails >= 3:
+                # a dead ticker means idle detection is OFF: latch the
+                # give-up so start_ticker() stops claiming one is
+                # running and the counters carry the signal
+                be._ticker_gave_up = True
+                be.telemetry.count("ticker_gave_up")
                 return
         finally:
             be = None
@@ -302,6 +331,10 @@ class DistributedBackend:
                  capacity_q: int = 64, scan_limit: int = 128):
         self.mesh = mesh
         self.cfg = cfg
+        # the telemetry plane this backend (and the client over it)
+        # reports through; validates cfg.telemetry before any device work
+        self.telemetry = tm.Telemetry(getattr(cfg, "telemetry",
+                                              "counters"))
         self.G = mesh.devices.size
         self.store = kv.create(mesh, capacity_per_group, cfg)
         self.ops = kv.make_ops(mesh, cfg, capacity_q=capacity_q,
@@ -357,6 +390,7 @@ class DistributedBackend:
         self._last_traffic_t = now
         self._ticker: Optional[threading.Thread] = None
         self._ticker_stop: Optional[threading.Event] = None
+        self._ticker_gave_up = False   # the loop died on repeated errors
 
     def _ensure_log_room(self, n: int):
         # drain up front when a batch might not fit the worst backup log
@@ -389,6 +423,7 @@ class DistributedBackend:
         idle ticker age leases through it, mutating ops bump in-body."""
         if self.lease_misses <= 0:
             return
+        self.telemetry.count("lease_ticks")
         if bump:
             self.store = self.ops["tick"](self.store)
         now = time.monotonic()
@@ -431,6 +466,9 @@ class DistributedBackend:
         self._hb_misses[g] = 0   # a demoted server no longer "stalls"
         if detected:
             self.detected.append(g)
+        self.telemetry.count("index_demotions")
+        self.telemetry.span({"event": "demote", "plane": "index",
+                             "server": g, "detected": detected})
 
     def _demote_data(self, g: int, detected: bool = False):
         """Degraded routing for DATA server ``g``: GETs of its shard fail
@@ -443,6 +481,9 @@ class DistributedBackend:
         self._data_hb_misses[g] = 0
         if detected:
             self.detected_data.append(g)
+        self.telemetry.count("data_demotions")
+        self.telemetry.span({"event": "demote", "plane": "data",
+                             "server": g, "detected": detected})
 
     def lease_stalled(self) -> bool:
         """Did the last observation round see a not-yet-demoted server's
@@ -459,8 +500,14 @@ class DistributedBackend:
         foreground traffic has run for ``cfg.lease_interval_s`` it issues
         a heartbeat-only tick round, so wall-clock leases expire (and
         failures are detected) with ZERO foreground ops.  No-op when
-        detection is disabled.  Returns True if a ticker is running."""
+        detection is disabled.  Returns True if a ticker is running —
+        and False when a previous ticker GAVE UP after repeated tick
+        errors (``ticker_gave_up`` in the metrics): pretending one is
+        running would silently disable idle detection.  ``stop_ticker()``
+        clears the latch for an explicit restart."""
         if self.lease_misses <= 0:
+            return False
+        if self._ticker_gave_up:
             return False
         if self._ticker is not None and self._ticker.is_alive():
             return True
@@ -478,6 +525,9 @@ class DistributedBackend:
         return True
 
     def stop_ticker(self) -> None:
+        # an explicit stop also clears the give-up latch: the operator
+        # acknowledged the dead ticker, a fresh start_ticker() may retry
+        self._ticker_gave_up = False
         if self._ticker is None:
             return
         self._ticker_stop.set()
@@ -680,6 +730,9 @@ class DistributedBackend:
             self._dead.discard(server)
             self._hb_misses[server] = 0
             self._hb_t[server] = time.monotonic()
+            self.telemetry.count("index_recoveries")
+            self.telemetry.span({"event": "recover", "plane": "index",
+                                 "server": server, "online": online})
             return RecoverResult(server, online, n_reb, self.pending_ops())
 
     def fail_data_server(self, server: int) -> FailResult:
@@ -724,6 +777,18 @@ class DistributedBackend:
             self._data_dead.discard(server)
             self._data_hb_misses[server] = 0
             self._data_hb_t[server] = time.monotonic()
+            self.telemetry.count("data_recoveries")
+            self.telemetry.span({"event": "recover", "plane": "data",
+                                 "server": server})
+
+    def telemetry_gauges(self) -> dict:
+        """Snapshot-time gauges for ``client.metrics()``: the store's
+        device-resident counters (live servers per plane, pending-log
+        depth, free-queue occupancy, ``fq_spill``) fetched in one go —
+        this is the ONLY place telemetry touches the device, so enabling
+        it adds no sync to any op body."""
+        with self._mu:
+            return kv.device_counters(self.store)
 
 
 # ---------------------------------------------------------------------------
@@ -760,6 +825,12 @@ class HiStoreClient:
         self._mutations_since_apply = 0
         self.stats = {"puts": 0, "gets": 0, "deletes": 0, "scans": 0,
                       "retries": 0, "applies": 0, "migrated": 0}
+        # the backend OWNS the telemetry plane (constructed from its
+        # cfg.telemetry knob) so detector/ticker events and client op
+        # metrics land in one snapshot; lease-less custom backends
+        # without one get an inert "off" instance
+        self.telemetry = (getattr(backend, "telemetry", None)
+                          or tm.Telemetry("off"))
 
     # -- public ops --------------------------------------------------------
     def put(self, keys, values=None) -> PutResult:
@@ -769,6 +840,7 @@ class HiStoreClient:
             return PutResult(jnp.zeros((0,), bool), jnp.zeros((0,), I32), 0,
                              jnp.zeros((0,), I32))
         vals = self._as_values(values, q)
+        t0 = time.perf_counter()
         oks, addrs, reps, retries = [], [], [], 0
         for s in range(0, q, self.max_batch):
             o, a, rep, r = self._put_chunk(keys[s:s + self.max_batch],
@@ -778,6 +850,10 @@ class HiStoreClient:
             reps.append(rep)
             retries = max(retries, r)
         self.stats["puts"] += q
+        tel = self.telemetry
+        if tel.enabled:
+            tel.count("put_ops", q)
+            tel.observe("put", time.perf_counter() - t0)
         self._note_mutations(q)
         return PutResult(jnp.concatenate(oks), jnp.concatenate(addrs),
                          retries, jnp.concatenate(reps))
@@ -790,10 +866,23 @@ class HiStoreClient:
             return GetResult(jnp.zeros((0,), I32), jnp.zeros((0,), bool),
                              jnp.zeros((0,), I32), jnp.zeros((0, W), I32),
                              jnp.zeros((0,), bool), jnp.zeros((0,), I32))
+        t0 = time.perf_counter()
         outs = [self._get_chunk(keys[s:s + self.max_batch])
                 for s in range(0, q, self.max_batch)]
         self.stats["gets"] += q
-        return GetResult(*[jnp.concatenate(p) for p in zip(*outs)])
+        res = GetResult(*[jnp.concatenate(p) for p in zip(*outs)])
+        tel = self.telemetry
+        if tel.enabled:
+            tel.count("get_ops", q)
+            tel.observe("get", time.perf_counter() - t0)
+            # hops == 2: reads served by the second-hop value fetch
+            # (degraded-write strays / mirror failover) — the paper's
+            # extra RTT the migration pass exists to elide.  The hops
+            # lanes are already resolved (the retry loop synced), so
+            # this is a cheap host transfer, not an extra dispatch.
+            tel.count("hops2_gets",
+                      int((np.asarray(res.hops) == 2).sum()))
+        return res
 
     def delete(self, keys) -> DeleteResult:
         keys = self._as_keys(keys)
@@ -802,6 +891,7 @@ class HiStoreClient:
             return DeleteResult(jnp.zeros((0,), bool),
                                 jnp.zeros((0,), bool), 0,
                                 jnp.zeros((0,), I32))
+        t0 = time.perf_counter()
         oks, founds, reps, retries = [], [], [], 0
         for s in range(0, q, self.max_batch):
             o, f, rep, r = self._delete_chunk(keys[s:s + self.max_batch])
@@ -810,6 +900,10 @@ class HiStoreClient:
             reps.append(rep)
             retries = max(retries, r)
         self.stats["deletes"] += q
+        tel = self.telemetry
+        if tel.enabled:
+            tel.count("delete_ops", q)
+            tel.observe("delete", time.perf_counter() - t0)
         self._note_mutations(q)
         return DeleteResult(jnp.concatenate(oks), jnp.concatenate(founds),
                             retries, jnp.concatenate(reps))
@@ -822,6 +916,7 @@ class HiStoreClient:
             kd_inf = jnp.zeros((0,), kd)
             return ScanResult(kd_inf, jnp.zeros((0,), I32),
                               jnp.zeros((), I32), True, ())
+        t0 = time.perf_counter()
         k, a, n, covered = self.backend.scan(
             jnp.asarray(lo, kd), jnp.asarray(hi, kd), limit)
         self.stats["scans"] += 1
@@ -845,11 +940,21 @@ class HiStoreClient:
                 break
             tries += 1
             self.stats["retries"] += 1
+            self.telemetry.count("retries")
             self._retry_pause(budget)
             k, a, n, covered = self.backend.scan(
                 jnp.asarray(lo, kd), jnp.asarray(hi, kd), limit)
         cov = np.asarray(covered)
         missing = tuple(int(g) for g in np.nonzero(~cov)[0].tolist())
+        tel = self.telemetry
+        if tel.enabled:
+            tel.count("scan_ops")
+            tel.observe("scan", time.perf_counter() - t0)
+            if missing:
+                tel.count("incomplete_scans")
+            tel.span({"op": "scan", "limit": limit, "retries": tries,
+                      "seconds": time.perf_counter() - t0,
+                      "missing_groups": list(missing)})
         lim = min(limit, k.shape[0])
         return ScanResult(k[:lim], a[:lim],
                           jnp.minimum(n, lim).astype(I32),
@@ -930,6 +1035,28 @@ class HiStoreClient:
         if fn:
             fn()
 
+    # -- telemetry ---------------------------------------------------------
+    def metrics(self) -> tm.MetricsSnapshot:
+        """Typed point-in-time snapshot of the telemetry plane: op
+        counters, per-op latency percentiles, and the backend's
+        device-side gauges (live servers, pending-log depth, free-queue
+        occupancy, ``fq_spill``).  The gauge fetch is the only device
+        access telemetry ever makes — and only here, never per op."""
+        gauges = {}
+        fn = getattr(self.backend, "telemetry_gauges", None)
+        if fn is not None and self.telemetry.enabled:
+            gauges = fn()
+        return self.telemetry.snapshot(gauges=gauges)
+
+    def metrics_text(self) -> str:
+        """The snapshot in Prometheus text exposition format."""
+        return tm.render_text(self.metrics())
+
+    def dump_trace(self, path) -> None:
+        """Write the op-trace ring (``cfg.telemetry="trace"``) as JSON;
+        an empty list in the other modes."""
+        self.telemetry.dump_trace(path)
+
     # -- batching / retry internals ---------------------------------------
     def _as_keys(self, keys):
         k = jnp.asarray(keys, key_dtype())
@@ -994,54 +1121,87 @@ class HiStoreClient:
         time.sleep(be.lease_timeout_s / (n - 1))
 
     def _put_chunk(self, keys, vals):
+        tel = self.telemetry
+        tr = tel.tracing
+        t0 = time.perf_counter()
         q = keys.shape[0]
         kp, pending = self._pad(keys)
         vp = jnp.zeros((kp.shape[0], vals.shape[1]), vals.dtype
                        ).at[:q].set(vals)
+        ev = ([{"phase": "route", "seconds": time.perf_counter() - t0}]
+              if tr else None)
         ok_all = jnp.zeros_like(pending)
         addr_all = jnp.full(kp.shape, -1, I32)
         rep_all = jnp.zeros(kp.shape, I32)
         retries = 0
         while True:
+            td = time.perf_counter()
             ok, addrs, nrep = self.backend.put(kp, vp, pending)
             newly = pending & ok
             ok_all = ok_all | newly
             addr_all = jnp.where(newly, addrs, addr_all)
             rep_all = jnp.where(newly, nrep, rep_all)
             pending = pending & ~ok
+            if tr:
+                ev.append({"phase": "dispatch", "try": retries,
+                           "seconds": time.perf_counter() - td})
             if not bool(pending.any()) or retries >= self.max_retries:
                 break
             retries += 1
             self.stats["retries"] += 1
+            tel.count("retries")
+            tel.count("pushbacks")   # capacity push-back on a mutation
             self._retry_pause()
             self._make_room()
+        if tr:
+            tel.span({"op": "put", "n": q, "retries": retries,
+                      "seconds": time.perf_counter() - t0, "events": ev})
         return ok_all[:q], addr_all[:q], rep_all[:q], retries
 
     def _delete_chunk(self, keys):
+        tel = self.telemetry
+        tr = tel.tracing
+        t0 = time.perf_counter()
         q = keys.shape[0]
         kp, pending = self._pad(keys)
+        ev = ([{"phase": "route", "seconds": time.perf_counter() - t0}]
+              if tr else None)
         acked = jnp.zeros_like(pending)
         found_all = jnp.zeros_like(pending)
         rep_all = jnp.zeros(kp.shape, I32)
         retries = 0
         while True:
+            td = time.perf_counter()
             ack, found, nrep = self.backend.delete(kp, pending)
             newly = pending & ack
             acked = acked | newly
             found_all = found_all | (newly & found)
             rep_all = jnp.where(newly, nrep, rep_all)
             pending = pending & ~ack
+            if tr:
+                ev.append({"phase": "dispatch", "try": retries,
+                           "seconds": time.perf_counter() - td})
             if not bool(pending.any()) or retries >= self.max_retries:
                 break
             retries += 1
             self.stats["retries"] += 1
+            tel.count("retries")
+            tel.count("pushbacks")
             self._retry_pause()
             self._make_room()
+        if tr:
+            tel.span({"op": "delete", "n": q, "retries": retries,
+                      "seconds": time.perf_counter() - t0, "events": ev})
         return acked[:q], found_all[:q], rep_all[:q], retries
 
     def _get_chunk(self, keys):
+        tel = self.telemetry
+        tr = tel.tracing
+        t0 = time.perf_counter()
         q = keys.shape[0]
         kp, pending = self._pad(keys)
+        ev = ([{"phase": "route", "seconds": time.perf_counter() - t0}]
+              if tr else None)
         addr_all = jnp.full(kp.shape, -1, I32)
         found_all = jnp.zeros_like(pending)
         acc_all = jnp.zeros(kp.shape, I32)
@@ -1049,6 +1209,7 @@ class HiStoreClient:
         vals_all = None
         retries = 0
         while True:
+            td = time.perf_counter()
             addrs, found, acc, vals, routed, hops = self.backend.get(
                 kp, pending)
             if vals_all is None:
@@ -1060,11 +1221,18 @@ class HiStoreClient:
             hops_all = jnp.where(newly, hops, hops_all)
             vals_all = jnp.where(newly[:, None], vals, vals_all)
             pending = pending & ~routed
+            if tr:
+                ev.append({"phase": "dispatch", "try": retries,
+                           "seconds": time.perf_counter() - td})
             if not bool(pending.any()) or retries >= self.max_retries:
                 break
             retries += 1
             self.stats["retries"] += 1
+            tel.count("retries")
             self._retry_pause()
+        if tr:
+            tel.span({"op": "get", "n": q, "retries": retries,
+                      "seconds": time.perf_counter() - t0, "events": ev})
         # lanes still pending exhausted the retry budget: reported as
         # un-routed so push-back is distinguishable from a genuine miss
         return (addr_all[:q], found_all[:q], acc_all[:q], vals_all[:q],

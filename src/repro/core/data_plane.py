@@ -196,6 +196,22 @@ def effective_alive(data) -> np.ndarray:
     return np.asarray(data.alive) & ~np.asarray(data.sever)
 
 
+def device_counters(data: DataPlane) -> dict:
+    """Surface the value plane's device-resident counters as host ints
+    for the telemetry snapshot (one combined fetch, snapshot-time only —
+    never on an op hot path): live data servers, heartbeat total, frees
+    rejected by a full free queue (``fq_spill``), and the free queues'
+    pending occupancy."""
+    alive, hb, spill, pend = jax.device_get(
+        (data.alive, data.hb, data.fq_spill, lg.pending_count(data.freeq)))
+    return {
+        "live_data_servers": int(np.asarray(alive).sum()),
+        "data_heartbeats": int(np.asarray(hb).sum()),
+        "fq_spill": int(np.asarray(spill).sum()),
+        "freeq_pending": int(np.asarray(pend).sum()),
+    }
+
+
 def drain_pair(srt, blog, cfg):
     """Eagerly apply ALL pending entries of one (sorted, log) pair — THE
     drain primitive every control-plane pass shares (kvstore's recovery

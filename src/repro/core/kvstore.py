@@ -852,6 +852,25 @@ def make_ops(mesh, cfg, capacity_q: int = 64, scan_limit: int = 128):
             "gc": gc, "scan": scan, "tick": tick}
 
 
+def device_counters(store: KVStore) -> dict:
+    """Surface the store's device-resident counters as host ints for the
+    telemetry snapshot: live servers per plane, heartbeat totals, the
+    worst backup log's pending depth, plus the value plane's counters
+    (``fq_spill``, free-queue occupancy).  Called only at snapshot time
+    (``client.metrics()``), never from an op body — telemetry adds no
+    device syncs to the hot path."""
+    alive, hb, pending = jax.device_get(
+        (store.alive, store.hb, store.blog.tail - store.blog.applied))
+    import numpy as np
+    out = {
+        "live_index_servers": int(np.asarray(alive).sum()),
+        "index_heartbeats": int(np.asarray(hb).sum()),
+        "pending_log_ops": int(np.asarray(pending).max()),
+    }
+    out.update(dp.device_counters(store.data))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Failure & recovery protocol (paper §4.3, host-side control plane)
 # ---------------------------------------------------------------------------

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.configs.histore import scaled
 from repro.core import kvstore as kv
+from repro.core import telemetry as tm
 from repro.core.client import DistributedBackend, HiStoreClient
 from repro.core.hashing import key_dtype
 
@@ -146,7 +147,13 @@ def run_gc_battery(mesh) -> None:
             == used_before - len(dk)), "delivered frees clear the bits"
     report = kv.parity_report(backend.store, CFG)
     assert report[-1]["agree"], report[-1]
-    print(f"gc battery ok ({len(dk)} routed frees delivered)", flush=True)
+    # ship this battery's counter state with the CI artifacts: a later
+    # hang or failure in the suite still leaves the forensics behind
+    logs = Path(__file__).resolve().parents[1] / "test-logs"
+    logs.mkdir(exist_ok=True)
+    tm.dump_metrics(client.metrics(), logs / "fault_selftest.metrics.json")
+    print(f"gc battery ok ({len(dk)} routed frees delivered; metrics -> "
+          "test-logs/fault_selftest.metrics.json)", flush=True)
 
 
 def main() -> int:

@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.configs.histore import scaled
 from repro.core import kvstore as kv
+from repro.core import telemetry as tm
 from repro.core.client import DistributedBackend, HiStoreClient
 from repro.core.hashing import key_dtype
 
@@ -418,6 +419,81 @@ def run_scan_completeness(mesh) -> None:
           "missing)", flush=True)
 
 
+def run_telemetry_differential(mesh) -> None:
+    """Telemetry counters vs the trace ground truth on the real 8-device
+    protocol, kills delivered only through severed heartbeats: hops==2
+    GETs counted exactly, demotions == the schedule's kills (one per
+    plane), retries == the client's own accounting, zero oracle kills —
+    and the final snapshot lands in test-logs/ as the CI artifact."""
+    G = mesh.devices.size
+    client = make_client(mesh)
+    backend = client.backend
+    rng = np.random.RandomState(23)
+    keys = rng.choice(10 ** 6, 16 * G, replace=False) + 1
+    vals = np.arange(16 * G)
+    assert client.put(keys, vals).all_ok
+    client.drain()
+    inj = FaultInjector(client)
+    # -- data-server sever: mirror-served GETs count as hops2 ------------
+    dead_data = 5
+    inj.sever_data(dead_data)
+    dk = owned_by(keys, dead_data, G)
+    assert len(dk), "need keys homed on the severed data shard"
+    hops2_truth = 0
+    r = client.get(dk)                  # mirror-served (undetected window)
+    assert r.all_found
+    hops2_truth += int((np.asarray(r.hops) == 2).sum())
+    probe = owned_by(keys, dead_data, G, invert=True)[:G]
+    rounds = 0
+    while dead_data not in backend._data_dead:
+        r = client.get(probe)
+        hops2_truth += int((np.asarray(r.hops) == 2).sum())
+        rounds += 1
+        assert rounds <= 2 * CFG.lease_misses, "data detector must fire"
+    inj.recover_data(dead_data)
+    # -- index-server sever: detected demotion, then recovery ------------
+    dead_idx = 2
+    inj.sever(dead_idx)
+    rounds = 0
+    while dead_idx not in backend._dead:
+        r = client.get(probe)
+        hops2_truth += int((np.asarray(r.hops) == 2).sum())
+        rounds += 1
+        assert rounds <= 2 * CFG.lease_misses, "index detector must fire"
+    inj.recover(dead_idx)
+    g_all = client.get(keys)
+    assert g_all.all_found
+    hops2_truth += int((np.asarray(g_all.hops) == 2).sum())
+    # -- the differential: counters == trace ground truth ----------------
+    snap = client.metrics()
+    c = snap.counters
+    assert inj.oracle_kills == 0, "no oracle fail_server anywhere"
+    assert c.get("put_ops", 0) == client.stats["puts"] == 16 * G
+    assert c.get("get_ops", 0) == client.stats["gets"]
+    assert c.get("retries", 0) == client.stats["retries"]
+    assert c.get("hops2_gets", 0) == hops2_truth > 0, \
+        (c.get("hops2_gets"), hops2_truth)
+    assert c.get("data_demotions", 0) == 1, \
+        "exactly the schedule's one data-plane kill"
+    assert c.get("index_demotions", 0) == 1, \
+        "exactly the schedule's one index-plane kill"
+    assert c.get("data_recoveries", 0) == 1
+    assert c.get("index_recoveries", 0) == 1
+    assert c.get("lease_ticks", 0) > 0
+    assert snap.gauges["live_index_servers"] == G
+    assert snap.gauges["live_data_servers"] == G
+    lat = snap.latency
+    assert lat["put"].count > 0 and lat["get"].count > 0
+    assert lat["get"].p99 >= lat["get"].p50 > 0.0
+    logs = Path(__file__).resolve().parents[1] / "test-logs"
+    logs.mkdir(exist_ok=True)
+    tm.dump_metrics(snap, logs / "lease_selftest.metrics.json")
+    print(f"telemetry differential ok (hops2 {hops2_truth}, retries "
+          f"{c.get('retries', 0)}, one demotion per plane, zero oracle "
+          "kills; snapshot -> test-logs/lease_selftest.metrics.json)",
+          flush=True)
+
+
 def main() -> int:
     mesh = jax.make_mesh((len(jax.devices()),), (kv.AXIS,))
     run_detection_bound(mesh)
@@ -427,6 +503,7 @@ def main() -> int:
     run_data_server_detection(mesh)
     run_idle_wall_clock(mesh)
     run_scan_completeness(mesh)
+    run_telemetry_differential(mesh)
     print("LEASE-SELFTEST-OK")
     return 0
 

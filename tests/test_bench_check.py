@@ -121,3 +121,91 @@ def test_zero_baseline_reports_without_crashing(tmp_path):
     p = _run(tmp_path, rows, base_rows=base)
     assert p.returncode != 0
     assert "zed.seconds" in p.stderr and "Traceback" not in p.stderr
+
+
+def test_non_gating_rows_are_skipped(tmp_path):
+    """Rows flagged non_gating (single-pass phase timings, e.g. the
+    fig12 load/run split) never fail the gate — not on regression, not
+    on disappearing."""
+    base = [{"name": "fig12_load_histore", "non_gating": True,
+             "seconds": 1.0},
+            {"name": "fig13_dist_recover_server", "seconds": 10.0}]
+    rows = [{"name": "fig12_load_histore", "non_gating": True,
+             "seconds": 50.0},
+            {"name": "fig13_dist_recover_server", "seconds": 10.0}]
+    assert _run(tmp_path, rows, base_rows=base).returncode == 0
+    gone = [{"name": "fig13_dist_recover_server", "seconds": 10.0}]
+    assert _run(tmp_path, gone, base_rows=base).returncode == 0
+
+
+# ---------------------------------------------------------------------------
+# Trend mode (--trend): monotone drift across a run history
+# ---------------------------------------------------------------------------
+def _run_trend(tmp_path, histories, extra=()):
+    hist = tmp_path / "bench-history"
+    hist.mkdir(exist_ok=True)
+    for i, rows in enumerate(histories):
+        (hist / f"2026010{i}T000000_fig13.json").write_text(
+            json.dumps(rows))
+    out = tmp_path / "bench_trend.json"
+    p = subprocess.run(
+        [sys.executable, str(CHECK), "--trend", str(hist),
+         "--trend-out", str(out), *extra],
+        capture_output=True, text=True)
+    return p, out
+
+
+def _series(seconds_list, name="fig13_dist_recover_server"):
+    return [[{"name": name, "seconds": s}] for s in seconds_list]
+
+
+def test_trend_monotone_creep_fails(tmp_path):
+    """Three consecutive +10% steps (each under the 25% single-baseline
+    gate) compound past it — the trend gate must catch the drift."""
+    p, out = _run_trend(tmp_path, _series([10.0, 11.0, 12.1, 13.3]))
+    assert p.returncode != 0
+    assert "monotone creep" in p.stderr
+    report = json.loads(out.read_text())
+    assert report["failures"]
+    assert report["series"]["fig13_dist_recover_server.seconds"] == \
+        [10.0, 11.0, 12.1, 13.3]
+
+
+def test_trend_stable_history_passes(tmp_path):
+    p, out = _run_trend(tmp_path, _series([10.0, 10.4, 9.8, 10.2, 10.1]))
+    assert p.returncode == 0, p.stderr
+    assert "bench-trend OK" in p.stdout
+    assert json.loads(out.read_text())["failures"] == []
+
+
+def test_trend_short_history_passes(tmp_path):
+    """Fewer than 3 runs: nothing to call a trend yet."""
+    p, _ = _run_trend(tmp_path, _series([10.0, 13.3]))
+    assert p.returncode == 0, p.stderr
+    p, _ = _run_trend(tmp_path, [])
+    assert p.returncode == 0, p.stderr
+
+
+def test_trend_growth_within_rtol_passes(tmp_path):
+    """Monotone but small: total growth under rtol+atol is not drift."""
+    p, _ = _run_trend(tmp_path, _series([10.0, 10.2, 10.4, 10.6]))
+    assert p.returncode == 0, p.stderr
+
+
+def test_trend_skips_non_gating_and_ungated_rows(tmp_path):
+    creep = [2.0, 3.0, 4.5, 7.0]
+    hist = [[{"name": "fig12_load_histore", "non_gating": True,
+              "seconds": s},
+             {"name": "fig13_wall_idle_detection", "seconds": s,
+              "detected_idle": True}] for s in creep]
+    p, out = _run_trend(tmp_path, hist)
+    assert p.returncode == 0, p.stderr
+    assert json.loads(out.read_text())["series"] == {}
+
+
+def test_trend_window_limits_lookback(tmp_path):
+    """--window examines only the newest N files: old fast runs outside
+    the window must not manufacture a creep verdict."""
+    p, _ = _run_trend(tmp_path, _series([1.0, 10.0, 10.1, 10.2]),
+                      extra=("--window", "3"))
+    assert p.returncode == 0, p.stderr

@@ -1,8 +1,10 @@
 #!/usr/bin/env python
 """Bench-regression gate: compare a fresh bench-smoke JSON against a
-committed baseline.
+committed baseline, or scan a rolling history for monotone drift.
 
     python tools/bench_check.py NEW.json BASELINE.json [--rtol 0.25]
+    python tools/bench_check.py --trend HISTORY_DIR [--window 20]
+                                [--trend-out bench_trend.json]
 
 Both files are lists of row dicts as written by
 ``benchmarks/fig13_recovery.py --json`` (each row: {"name": ..., metric
@@ -18,9 +20,20 @@ fields...}).  The gate fails (exit 1) on:
     or a baseline row is missing / newly ``skipped`` entirely.
 
 Speedups, extra rows and extra fields never fail the gate.  Rows pair by
-``name`` (duplicate names pair in file order).  ``--rtol`` can also come
-from the BENCH_CHECK_RTOL env var (CI escape hatch for slow runners);
+``name`` (duplicate names pair in file order).  Rows flagged
+``non_gating: true`` (single-pass phase timings, e.g. the fig12
+load/run split) are skipped entirely.  ``--rtol`` can also come from
+the BENCH_CHECK_RTOL env var (CI escape hatch for slow runners);
 explicit flags win.
+
+**Trend mode** (``--trend DIR``) reads the newest ``--window`` JSON
+files in DIR (sorted by filename — CI stamps them with a UTC
+timestamp), and fails on *monotone creep*: a latency series that rises
+at every step (within 5% per-step noise) and whose total growth clears
+the same rtol+atol bar as the baseline gate.  This catches the 3×8%
+death-by-a-thousand-cuts drift the single-baseline 25% threshold never
+sees.  Results (pass or fail) are written to ``--trend-out`` for CI
+artifact upload.  Fewer than 3 history files always passes.
 
 No third-party imports: the unit tests (tests/test_bench_check.py) and
 the fast CI tier run this without jax.
@@ -28,6 +41,7 @@ the fast CI tier run this without jax.
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import sys
@@ -58,6 +72,8 @@ def compare(new_rows: list, base_rows: list, rtol: float,
     for name, brows in _rows_by_name(base_rows).items():
         nrows = new_by_name.get(name, [])
         for i, base in enumerate(brows):
+            if base.get("non_gating"):
+                continue
             if i >= len(nrows):
                 failures.append(f"{name}: row missing from the new run "
                                 "(lost capability)")
@@ -90,17 +106,113 @@ def compare(new_rows: list, base_rows: list, rtol: float,
     return failures
 
 
+# per-step tolerance for calling a series "monotone": a step may dip up
+# to this fraction and the creep still counts as steady upward drift
+TREND_STEP_NOISE = 0.05
+
+
+def trend(histories: list, rtol: float,
+          atol: dict = DEFAULT_ATOL) -> tuple:
+    """Scan a chronological list of bench-JSON row lists for monotone
+    latency creep.  Returns (failures, series) where series maps
+    "name.field" -> the list of values examined (for bench_trend.json).
+    A series fails when it has >= 3 points, never drops more than
+    TREND_STEP_NOISE per step, and its total growth clears the same
+    rtol+atol bar as the baseline gate."""
+    failures, series = [], {}
+    if len(histories) < 3:
+        return failures, series
+    # collect per-(name, field) chronological series; rows pair by name
+    # + duplicate index as in compare()
+    values: dict = {}
+    for rows in histories:
+        for name, nrows in _rows_by_name(rows).items():
+            if name in UNGATED_LATENCY_ROWS:
+                continue
+            for i, row in enumerate(nrows):
+                if row.get("non_gating"):
+                    continue
+                for f in LATENCY_FIELDS:
+                    if f in row:
+                        values.setdefault((name, i, f), []).append(
+                            float(row[f]))
+    for (name, i, f), vs in sorted(values.items()):
+        label = f"{name}.{f}" if i == 0 else f"{name}[{i}].{f}"
+        series[label] = vs
+        if len(vs) < 3:
+            continue        # row too new to have a trend
+        creeping = all(vs[j + 1] >= vs[j] * (1.0 - TREND_STEP_NOISE)
+                       for j in range(len(vs) - 1))
+        first, last = vs[0], vs[-1]
+        if (creeping and last > first * (1.0 + rtol)
+                and last > first + atol.get(f, 0.0)):
+            pct = (f"+{(last / first - 1) * 100:.0f}%" if first > 0
+                   else "from a 0 start")
+            failures.append(
+                f"{label}: monotone creep over {len(vs)} runs — "
+                f"{first:.6g} -> {last:.6g} ({pct} > "
+                f"{rtol * 100:.0f}% trend gate)")
+    return failures, series
+
+
+def run_trend(history_dir: str, window: int, rtol: float,
+              out_path: str) -> int:
+    paths = sorted(glob.glob(os.path.join(history_dir, "*.json")))
+    paths = paths[-window:]
+    histories = []
+    for p in paths:
+        try:
+            with open(p) as f:
+                histories.append(json.load(f))
+        except (OSError, ValueError) as e:
+            print(f"bench-trend: skipping unreadable {p}: {e}",
+                  file=sys.stderr)
+    failures, series = trend(histories, rtol)
+    report = {"history_dir": history_dir, "window": window,
+              "files": [os.path.basename(p) for p in paths],
+              "rtol": rtol, "failures": failures,
+              "series": {k: v for k, v in sorted(series.items())}}
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+    if failures:
+        print(f"BENCH-TREND FAILED ({len(histories)} runs from "
+              f"{history_dir}, rtol={rtol}):", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print(f"bench-trend OK: no monotone creep across {len(histories)} "
+          f"runs ({len(series)} series examined)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="fail on bench regressions vs a committed baseline")
-    ap.add_argument("new", help="fresh bench-smoke JSON")
-    ap.add_argument("baseline", help="committed BENCH_baseline_*.json")
+        description="fail on bench regressions vs a committed baseline, "
+                    "or on monotone drift across a run history")
+    ap.add_argument("new", nargs="?", help="fresh bench-smoke JSON")
+    ap.add_argument("baseline", nargs="?",
+                    help="committed BENCH_baseline_*.json")
     ap.add_argument("--rtol", type=float,
                     default=float(os.environ.get("BENCH_CHECK_RTOL",
                                                  0.25)),
                     help="relative latency-regression threshold "
                          "(default 0.25 = fail on >25%% slower)")
+    ap.add_argument("--trend", metavar="DIR", default=None,
+                    help="trend mode: scan the newest bench JSONs in DIR "
+                         "for monotone latency creep")
+    ap.add_argument("--window", type=int, default=20,
+                    help="trend mode: how many newest history files to "
+                         "examine (default 20)")
+    ap.add_argument("--trend-out", default="bench_trend.json",
+                    help="trend mode: write the examined series + "
+                         "verdict here (default bench_trend.json)")
     args = ap.parse_args(argv)
+    if args.trend:
+        return run_trend(args.trend, args.window, args.rtol,
+                         args.trend_out)
+    if not args.new or not args.baseline:
+        ap.error("NEW and BASELINE are required outside --trend mode")
     with open(args.new) as f:
         new_rows = json.load(f)
     with open(args.baseline) as f:

@@ -15,7 +15,12 @@
 #                                   # tools/bench_check.py (>25% latency
 #                                   # regression or a lost capability flag
 #                                   # fails; BENCH_CHECK_RTOL loosens the
-#                                   # threshold for slow runners)
+#                                   # threshold for slow runners).  Both
+#                                   # JSONs are then appended (UTC-stamped)
+#                                   # to bench-history/ and the rolling
+#                                   # window is scanned for monotone
+#                                   # latency creep (bench_check --trend,
+#                                   # writes bench_trend.json)
 #
 # The fast tier includes the lease-detector battery
 # (tests/test_lease_detection.py spawns tests/lease_selftest.py on 8 host
@@ -57,6 +62,16 @@ PY
     BENCH_baseline_fig13.json
   python tools/bench_check.py bench_smoke_fig13_detection.json \
     BENCH_baseline_fig13_detection.json
+  # trend gate: append this run to the rolling history (the CI workflow
+  # caches bench-history/ across runs), then scan the window for
+  # monotone creep the single-baseline threshold cannot see
+  stamp="$(date -u +%Y%m%dT%H%M%S)"
+  mkdir -p bench-history
+  cp bench_smoke_fig13.json "bench-history/${stamp}_fig13.json"
+  cp bench_smoke_fig13_detection.json \
+    "bench-history/${stamp}_fig13_detection.json"
+  python tools/bench_check.py --trend bench-history \
+    --trend-out bench_trend.json
   set +x
 else
   echo "== tier-1: pytest (fast tier; --all for the multi-minute batteries) =="
