@@ -25,9 +25,32 @@ from repro.core import log as lg
 from repro.core import sorted_index as six
 from repro.core.client import HiStoreClient, LocalBackend
 from repro.core.hashing import key_dtype
+from repro.kernels import ops as kops
 
 KD = key_dtype()
 CFG = scaled(log_capacity=1 << 14, async_apply_batch=8192)
+
+
+def env_fields(cfg=CFG):
+    """The measurement-environment stamp every bench row carries: which
+    index path served it (``use_kernels`` RESOLVED — an ``auto`` cfg
+    stamps what it actually dispatched to) and the jax platform.  The
+    regression gate (tools/bench_check.py FLAG_FIELDS) refuses to compare
+    rows whose stamps differ: a kernel-path run gated against a jnp-path
+    baseline is a configuration mismatch, not a regression."""
+    return {"use_kernels": "on" if kops.kernels_enabled(cfg) else "off",
+            "platform": jax.default_backend()}
+
+
+def stamped(report, cfg=CFG):
+    """Wrap a report callback so every row carries env_fields(cfg).
+    Per-row kwargs win, so side-by-side kernel-vs-jnp sections can stamp
+    each row with the explicit cfg it measured."""
+    env = env_fields(cfg)
+
+    def report2(name, **kw):
+        report(name, **{**env, **kw})
+    return report2
 
 
 def timeit(fn, *args, warmup=2, iters=5):
@@ -64,6 +87,25 @@ def percentile_fields(snap, per_op=1):
     scale = 1e6 / max(per_op, 1)
     return {"p50_us": snap.p50 * scale, "p95_us": snap.p95 * scale,
             "p99_us": snap.p99 * scale}
+
+
+def interleaved_medians(fns: dict, rounds=15, warmup=2) -> dict:
+    """Median wall-clock seconds per labelled thunk, measured in
+    ALTERNATING rounds (one timed call of each per round).  A/B
+    comparisons on a shared machine drift with load; interleaving puts
+    both sides under the same drift so their ratio is stable where two
+    sequential ``timeit`` blocks are not (the jnp-vs-kernel gate row
+    flapped 1.0x-1.7x sequentially, 0.93x-1.06x interleaved)."""
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    samples = {label: [] for label in fns}
+    for _ in range(rounds):
+        for label, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples[label].append(time.perf_counter() - t0)
+    return {label: float(np.median(s)) for label, s in samples.items()}
 
 
 def uniform_keys(n, seed=0, space=1 << 28):

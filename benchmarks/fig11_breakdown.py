@@ -1,21 +1,33 @@
 """Fig. 11 reproduction: per-phase breakdown of PUT / GET / SCAN in
 HiStore: log append, log replication (backup sync), index access, data
-access, drain-before-scan."""
+access, drain-before-scan — plus the kernel-dispatch section: the three
+kernelized index phases (GET probe, SCAN range query, async-apply
+merge) measured side-by-side under ``use_kernels=off`` and ``on``.
+
+Standalone for CI smoke runs (tools/ci.sh --bench-smoke):
+
+    python -m benchmarks.fig11_breakdown --smoke --json out.json
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (CFG, KD, percentile_fields, timeit,
-                               timeit_hist, uniform_keys)
+from benchmarks.common import (CFG, KD, env_fields, percentile_fields,
+                               stamped, timeit, timeit_hist, uniform_keys)
+from repro.configs.histore import scaled
 from repro.core import hash_index as hix
 from repro.core import index_group as ig
 from repro.core import log as lg
 from repro.core import sorted_index as six
+from repro.kernels import ops as kops
 
 
 def run(report, n_load=200_000, batch=4096):
+    report = stamped(report, CFG)
     keys = uniform_keys(n_load, seed=11)
     addrs = np.arange(n_load, dtype=np.int32)
     g = ig.create(n_load * 4, CFG)
@@ -75,3 +87,91 @@ def run(report, n_load=200_000, batch=4096):
     report("fig11_scan_drain", share=round(t_drain / tot, 3))
     report("fig11_scan_index_query", share=round(t_q / tot, 3))
     report("fig11_scan_data_access", share=round(t_dscan / tot, 3))
+
+
+def run_kernel_dispatch(report, n_load=20_000, batch=2048):
+    """The three kernelized index phases, jnp vs kernel, through the
+    SAME kops dispatch calls the serving path makes (explicit off/on
+    cfgs — never env-resolved ``auto``):
+
+      fig11_get_index_access_{jnp,kernel}   — kops.probe (fused hash
+                                              chain walk)
+      fig11_scan_index_query_{jnp,kernel}   — kops.range_query (kernel
+                                              lower-bound + gather)
+      fig11_apply_merge_{jnp,kernel}        — kops.merge (bitonic
+                                              incremental apply)
+    """
+    keys = uniform_keys(n_load, seed=11)
+    addrs = np.arange(n_load, dtype=np.int32)
+    nk = jnp.asarray(uniform_keys(batch, seed=78) + (1 << 29), KD)
+    na = jnp.arange(batch, dtype=jnp.int32)
+    ops = jnp.full((batch,), six.OP_PUT, jnp.int8)
+    for knob in ("off", "on"):
+        cfg = scaled(use_kernels=knob, log_capacity=1 << 14,
+                     async_apply_batch=8192)
+        label = "kernel" if kops.kernels_enabled(cfg) else "jnp"
+        env = env_fields(cfg)
+        g = ig.create(n_load * 4, cfg)
+        for i in range(0, n_load, 16384):
+            g, _ = ig.put(g, jnp.asarray(keys[i:i + 16384], KD),
+                          jnp.asarray(addrs[i:i + 16384]), cfg)
+            g = ig.drain(g, cfg)
+
+        gq = jnp.asarray(keys[:batch], KD)
+        probe = jax.jit(functools.partial(kops.probe, cfg))
+        h_idx, _ = timeit_hist(lambda: probe(g.hash, gq), iters=7)
+        report(f"fig11_get_index_access_{label}",
+               us_per_op=h_idx.mean / batch * 1e6,
+               **percentile_fields(h_idx, per_op=batch), **env)
+
+        srt = jax.tree.map(lambda a: a[0], g.sorted)
+        lo = jnp.asarray(int(np.median(keys)), KD)
+        hi = jnp.asarray(1 << 30, KD)
+        rq = jax.jit(functools.partial(kops.range_query, cfg, limit=100))
+        h_q, _ = timeit_hist(lambda: rq(srt, lo, hi), iters=7)
+        report(f"fig11_scan_index_query_{label}",
+               us_per_op=h_q.mean * 1e6,
+               **percentile_fields(h_q), **env)
+
+        mg = jax.jit(functools.partial(kops.merge, cfg))
+        h_m, _ = timeit_hist(lambda: mg(srt, nk, na, ops), iters=7)
+        report(f"fig11_apply_merge_{label}",
+               us_per_op=h_m.mean / batch * 1e6,
+               **percentile_fields(h_m, per_op=batch), **env)
+
+
+def main(argv=None) -> int:
+    """Standalone entry (CI bench smoke): run the phase-breakdown
+    benches — always including the jnp-vs-kernel dispatch section —
+    and dump JSON rows for tools/bench_check.py."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write collected rows as JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small n, kernel-dispatch section only (CI tier)")
+    args = ap.parse_args(argv)
+    rows = []
+
+    def report(name, **kw):
+        rows.append({"name": name, **kw})
+        print(name, kw, flush=True)
+
+    if args.smoke:
+        run_kernel_dispatch(report, n_load=20_000, batch=2048)
+    else:
+        run(report)
+        run_kernel_dispatch(report)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2, default=str)
+        print(f"wrote {args.json} ({len(rows)} rows)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main(sys.argv[1:]))

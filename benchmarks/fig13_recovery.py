@@ -33,8 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (CFG, KD, percentile_fields, timeit,
-                               timeit_hist, uniform_keys)
+from benchmarks.common import (CFG, KD, percentile_fields, stamped,
+                               timeit, timeit_hist, uniform_keys)
 from repro.core import index_group as ig
 from repro.core import kvstore as kv
 from repro.core.client import (DistributedBackend, HiStoreClient,
@@ -42,6 +42,7 @@ from repro.core.client import (DistributedBackend, HiStoreClient,
 
 
 def run(report, batch=4096):
+    report = stamped(report, CFG)
     for n in [50_000, 200_000]:
         keys = uniform_keys(n, seed=31)
         addrs = np.arange(n, dtype=np.int32)
@@ -92,6 +93,7 @@ def run(report, batch=4096):
 
 def run_distributed(report, n=20_000):
     """Distributed kill/recover protocol timings (kvstore layer)."""
+    report = stamped(report, CFG)
     G = len(jax.devices())
     if G < 3:
         report("fig13_dist_recovery", skipped=f"needs >=3 devices, have {G}")
@@ -129,6 +131,7 @@ def run_value_migration(report, n=20_000):
     """Value-plane timings: degraded-GET (2-hop fetch) vs post-migration
     (1-hop) latency, the background migration pass, and GC slot-reuse
     throughput."""
+    report = stamped(report, CFG)
     G = len(jax.devices())
     if G < 3:
         report("fig13_value_migration",
@@ -207,6 +210,7 @@ def run_detection(report, n=8_000):
     online-vs-stop-the-world recovery — return-to-service latency of the
     snapshot clone with the log delta still streaming vs the drain-first
     rebuild of the same backlog."""
+    report = stamped(report, CFG)
     G = len(jax.devices())
     if G < 3:
         report("fig13_detection", skipped=f"needs >=3 devices, have {G}")

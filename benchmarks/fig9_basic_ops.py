@@ -1,16 +1,33 @@
 """Fig. 9 + 10 reproduction: throughput/latency of PUT, GET, SCAN for
 histore vs all-hashtable vs all-skiplist vs single-hashtable vs
-single-skiplist (db_bench-style: load N, then timed op batches)."""
+single-skiplist (db_bench-style: load N, then timed op batches), plus
+the kernel-dispatch section: the same serving ops measured side-by-side
+under ``use_kernels=off`` (jnp reference path) and ``use_kernels=on``
+(Pallas kernels), with a gating ``kernel_no_slower`` capability row on
+the GET index-probe p50.
+
+Standalone for CI smoke runs (tools/ci.sh --bench-smoke):
+
+    python -m benchmarks.fig9_basic_ops --smoke --json out.json
+"""
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (CFG, KD, SYSTEMS, percentile_fields,
-                               timeit_hist, uniform_keys)
+from benchmarks.common import (CFG, KD, SYSTEMS, env_fields,
+                               interleaved_medians, percentile_fields,
+                               stamped, timeit_hist, uniform_keys)
+from repro.configs.histore import scaled
+from repro.core.client import LocalBackend
+from repro.kernels import ops as kops
 
 
 def run(report, n_load=200_000, batch=4096):
+    report = stamped(report, CFG)
     keys = uniform_keys(n_load, seed=9)
     addrs = np.arange(n_load, dtype=np.int32)
     rng = np.random.default_rng(3)
@@ -50,3 +67,118 @@ def run(report, n_load=200_000, batch=4096):
                                     warmup=1, iters=3)
             report(f"fig9c_scan_{sys_.name}", us_per_op=h_scan.mean * 1e6,
                    **percentile_fields(h_scan))
+
+
+# threshold for the gating row: same 25% slack as the whole bench gate
+# (tools/bench_check.py --rtol default) — "no slower" is asserted up to
+# the noise envelope the gate already accepts for every latency field
+KERNEL_NO_SLOWER_SLACK = 1.25
+
+
+def run_kernel_dispatch(report, n_load=20_000, batch=2048):
+    """Side-by-side jnp-vs-kernel rows over the SAME backend code: two
+    explicit cfgs (``use_kernels`` off / on — never env-resolved
+    ``auto``, so the pair is meaningful on any machine), one LocalBackend
+    each, identical keys.  Rows:
+
+      fig9b_get_histore_{jnp,kernel}     — full backend GET (probe +
+                                           value fetch), p50 per op
+      fig9b_index_probe_{jnp,kernel}     — the dispatch-level GET index
+                                           probe alone (the op the
+                                           kernel replaces)
+      fig9c_scan_histore_{jnp,kernel}    — backend SCAN (drain + range)
+      fig9_kernel_get_gate               — capability row: True iff the
+                                           kernel probe p50 is no slower
+                                           than jnp (within the gate's
+                                           25% noise slack).  Measured
+                                           INTERLEAVED (one timed call
+                                           of each path per round) so
+                                           machine drift hits both sides
+                                           equally and the ratio is
+                                           stable.
+    """
+    keys = uniform_keys(n_load, seed=9)
+    rng = np.random.default_rng(3)
+    gq = jnp.asarray(rng.choice(keys, batch), KD)
+    valid = jnp.ones((batch,), bool)
+    lo = jnp.asarray(int(np.median(keys)), KD)
+    hi = jnp.asarray((1 << 30), KD)
+    probes, hidx = {}, {}
+    for knob in ("off", "on"):
+        cfg = scaled(use_kernels=knob, log_capacity=1 << 14,
+                     async_apply_batch=8192)
+        label = "kernel" if kops.kernels_enabled(cfg) else "jnp"
+        env = env_fields(cfg)
+        be = LocalBackend(n_load * 4, cfg)
+        vw = be.value_words
+        for i in range(0, n_load, 4096):
+            ch = jnp.asarray(keys[i:i + 4096], KD)
+            be.put(ch, jnp.zeros((ch.shape[0], vw), jnp.int32),
+                   jnp.ones((ch.shape[0],), bool))
+        be.drain()
+
+        h_get, out = timeit_hist(lambda: be.get(gq, valid), iters=9)
+        assert bool(out[1].all()), f"kernel-dispatch GET miss ({label})"
+        report(f"fig9b_get_histore_{label}",
+               us_per_op=h_get.mean / batch * 1e6,
+               **percentile_fields(h_get, per_op=batch), **env)
+
+        probe = jax.jit(functools.partial(kops.probe, cfg))
+        h_probe, _ = timeit_hist(lambda: probe(be.group.hash, gq), iters=9)
+        report(f"fig9b_index_probe_{label}",
+               us_per_op=h_probe.mean / batch * 1e6,
+               **percentile_fields(h_probe, per_op=batch), **env)
+        probes[label], hidx[label] = probe, be.group.hash
+
+        h_scan, _ = timeit_hist(lambda: be.scan(lo, hi, 100),
+                                warmup=1, iters=5)
+        report(f"fig9c_scan_histore_{label}", us_per_op=h_scan.mean * 1e6,
+               **percentile_fields(h_scan), **env)
+
+    med = interleaved_medians(
+        {label: (lambda label=label: probes[label](hidx[label], gq))
+         for label in ("jnp", "kernel")})
+    ratio = med["kernel"] / max(med["jnp"], 1e-12)
+    report("fig9_kernel_get_gate",
+           kernel_no_slower=bool(ratio <= KERNEL_NO_SLOWER_SLACK),
+           probe_p50_ratio=round(ratio, 3),
+           probe_p50_jnp_us=round(med["jnp"] / batch * 1e6, 4),
+           probe_p50_kernel_us=round(med["kernel"] / batch * 1e6, 4),
+           platform=jax.default_backend())
+
+
+def main(argv=None) -> int:
+    """Standalone entry (CI bench smoke): run the basic-op benches —
+    always including the jnp-vs-kernel dispatch section — and dump
+    JSON rows for tools/bench_check.py."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write collected rows as JSON")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small n + histore-only system sweep (CI tier)")
+    args = ap.parse_args(argv)
+    rows = []
+
+    def report(name, **kw):
+        rows.append({"name": name, **kw})
+        print(name, kw, flush=True)
+
+    if args.smoke:
+        run_kernel_dispatch(report, n_load=20_000, batch=2048)
+    else:
+        run(report)
+        run_kernel_dispatch(report)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2, default=str)
+        print(f"wrote {args.json} ({len(rows)} rows)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main(sys.argv[1:]))

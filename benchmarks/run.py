@@ -27,7 +27,9 @@ def main() -> None:
     benches = [
         ("fig3_index_compare", fig3_index_compare.run),
         ("fig9_10_basic_ops", fig9_basic_ops.run),
+        ("fig9_kernel_dispatch", fig9_basic_ops.run_kernel_dispatch),
         ("fig11_breakdown", fig11_breakdown.run),
+        ("fig11_kernel_dispatch", fig11_breakdown.run_kernel_dispatch),
         ("fig12_ycsb", fig12_ycsb.run),
         ("fig13_14_recovery_degraded", fig13_recovery.run),
         ("roofline", roofline.run),

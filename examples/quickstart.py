@@ -6,10 +6,13 @@ One typed client over one index group (1 hash table + 2 sorted replicas +
 logs): PUT / GET / SCAN / DELETE, a primary failure survived mid-stream,
 and recovery — the paper's §3 in miniature, all through `HiStoreClient`.
 """
+import jax
 import numpy as np
 
 from repro.configs.histore import scaled
 from repro.core.client import HiStoreClient, LocalBackend
+from repro.core.hashing import key_dtype
+from repro.kernels import ops as kops
 
 CFG = scaled(log_capacity=1 << 12, async_apply_batch=1024)
 
@@ -17,6 +20,13 @@ CFG = scaled(log_capacity=1 << 12, async_apply_batch=1024)
 def main():
     client = HiStoreClient(LocalBackend(4096, CFG), batch_quantum=64,
                            apply_every_n_ops=2048)
+
+    # which index hot path serves this demo: "kernel" (Pallas GET-probe /
+    # scan / merge kernels) or "jnp" (the reference path) — cfg knob
+    # use_kernels=off|on|auto, auto resolves by platform + HISTORE_USE_KERNELS
+    print(f"index hot path: {kops.active_path(CFG, key_dtype())} "
+          f"(use_kernels={CFG.use_kernels}, "
+          f"platform={jax.default_backend()})")
 
     # PUT a batch (primary log -> backup logs -> hash table, §3.2.2)
     keys = np.random.RandomState(0).choice(10 ** 6, 500, replace=False)

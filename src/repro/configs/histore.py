@@ -64,6 +64,26 @@ class HiStoreConfig:
     # batching -------------------------------------------------------------
     async_apply_batch: int = 4096  # log entries merged into the sorted index
                                    # per asynchronous apply
+    # kernel dispatch -------------------------------------------------------
+    use_kernels: str = "auto"      # "on": serve the index hot path (GET
+                                   # probe, scan bounds, log->sorted merge)
+                                   # through the Pallas kernels in
+                                   # kernels/ops.py; "off": the pure-jnp
+                                   # reference path; "auto" (default):
+                                   # kernels on TPU, jnp elsewhere — the
+                                   # HISTORE_USE_KERNELS env var ("on"/
+                                   # "off") overrides auto, which is how
+                                   # CI runs the interpret-mode kernel
+                                   # leg without touching configs.  Both
+                                   # paths are bit-exact by contract
+                                   # (DESIGN.md §Kernelized index hot
+                                   # path)
+
+    def __post_init__(self):
+        if self.use_kernels not in ("off", "on", "auto"):
+            raise ValueError(
+                f"use_kernels must be 'off', 'on' or 'auto', "
+                f"got {self.use_kernels!r}")
 
 
 DEFAULT = HiStoreConfig()

@@ -11,6 +11,7 @@ Modules:
   results       — PutResult/GetResult/DeleteResult/ScanResult
 """
 from repro.core import hash_index, hashing, index_group, log, sorted_index  # noqa: F401
+from repro.core.backend import Backend  # noqa: F401
 from repro.core.client import (DistributedBackend, HiStoreClient,  # noqa: F401
                                LocalBackend)
 from repro.core.results import (DeleteResult, GetResult, PutResult,  # noqa: F401

@@ -1,0 +1,66 @@
+"""The Backend protocol: the one typed contract between HiStoreClient
+and a store implementation.
+
+The client (core/client.py) types against THIS protocol only — it never
+imports LocalBackend/DistributedBackend internals; both implement every
+member below, so client-side ``getattr`` feature probes are gone.  A
+custom backend that provides these members (``isinstance(be, Backend)``
+— the protocol is runtime-checkable) plugs straight into HiStoreClient.
+
+Three member groups:
+
+  * serving ops — fixed-shape batch ``put``/``get``/``delete``/``scan``
+    plus the async-apply hooks (``apply_async``/``drain``) and the
+    background value migration (``migrate_values``);
+  * observability — ``telemetry_gauges`` (device-side gauge snapshot)
+    and ``lease_stalled`` (did the last observation round see a
+    not-yet-demoted server's heartbeat stalled?  LocalBackend liveness
+    is host-side, so it simply returns False);
+  * fault injection / recovery — ``fail_*`` (detected failures: the
+    routing view updates immediately), ``sever_*`` (crashes the lease
+    detector must DISCOVER; backends without a lease detector raise
+    NotImplementedError), ``recover_*``.
+"""
+from __future__ import annotations
+
+from typing import Protocol, Tuple, runtime_checkable
+
+import jax.numpy as jnp
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Fixed-shape batch ops over one store.  All mutating ops take a
+    ``valid`` lane mask (padding lanes mutate nothing and consume no
+    routing capacity).  ``put`` returns (acked, addrs, replicas) and
+    ``delete`` (acked, found, replicas) so the client can retry push-back
+    without re-writing and report replication honestly; ``get`` returns
+    (addrs, found, accesses, vals, routed, hops); ``scan`` returns
+    (keys, addrs, count, covered) where covered[g] is False for a group
+    with zero live, unsevered holders (the scan-completeness flag)."""
+
+    batch_multiple: int   # padded batch sizes must divide by this
+    value_words: int      # payload width W of values [Q, W]
+
+    # -- serving ops -------------------------------------------------------
+    def put(self, keys, vals, valid) -> Tuple[
+        jnp.ndarray, jnp.ndarray, jnp.ndarray]: ...
+    def get(self, keys, valid) -> tuple: ...
+    def delete(self, keys, valid) -> Tuple[
+        jnp.ndarray, jnp.ndarray, jnp.ndarray]: ...
+    def scan(self, lo, hi, limit: int) -> tuple: ...
+    def apply_async(self) -> None: ...
+    def drain(self) -> None: ...
+    def migrate_values(self) -> int: ...
+
+    # -- observability -----------------------------------------------------
+    def telemetry_gauges(self) -> dict: ...
+    def lease_stalled(self) -> bool: ...
+
+    # -- fault injection / recovery ---------------------------------------
+    def fail_server(self, server: int): ...
+    def sever_server(self, server: int): ...
+    def recover_server(self, server: int, **kw): ...
+    def fail_data_server(self, server: int): ...
+    def sever_data_server(self, server: int): ...
+    def recover_data_server(self, server: int): ...

@@ -30,8 +30,9 @@ Responsibilities the old per-layer surfaces pushed onto every caller:
     GETs (``GetResult.hops`` back to 1); turn it off to measure the
     second-hop fetch cost the paper's data plane would otherwise pay.
 
-Backends implement the small protocol below; see DESIGN.md §Client API for
-the migration table from the old surfaces.
+Backends implement the ``Backend`` protocol (core/backend.py — serving
+ops + telemetry gauges + lease/fault-injection hooks; re-exported here);
+see DESIGN.md §Client API for the migration table from the old surfaces.
 """
 from __future__ import annotations
 
@@ -40,13 +41,14 @@ import threading
 import time
 import warnings
 import weakref
-from typing import Optional, Protocol, Tuple, runtime_checkable
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import data_plane as dpl
+from repro.core.backend import Backend  # noqa: F401  (re-export)
 from repro.core import index_group as ig
 from repro.core import kvstore as kv
 from repro.core import log as lg
@@ -56,30 +58,6 @@ from repro.core.results import (DeleteResult, FailResult, GetResult,
                                 PutResult, RecoverResult, ScanResult)
 
 I32 = jnp.int32
-
-
-@runtime_checkable
-class Backend(Protocol):
-    """Fixed-shape batch ops over one store.  All mutating ops take a
-    ``valid`` lane mask (padding lanes mutate nothing and consume no
-    routing capacity).  ``put`` returns (acked, addrs, replicas) and
-    ``delete`` (acked, found, replicas) so the client can retry push-back
-    without re-writing and report replication honestly; ``get`` returns
-    (addrs, found, accesses, vals, routed, hops); ``scan`` returns
-    (keys, addrs, count, covered) where covered[g] is False for a group
-    with zero live, unsevered holders (the scan-completeness flag)."""
-
-    batch_multiple: int   # padded batch sizes must divide by this
-    value_words: int      # payload width W of values [Q, W]
-
-    def put(self, keys, vals, valid) -> Tuple[
-        jnp.ndarray, jnp.ndarray, jnp.ndarray]: ...
-    def get(self, keys, valid) -> tuple: ...
-    def delete(self, keys, valid) -> Tuple[
-        jnp.ndarray, jnp.ndarray, jnp.ndarray]: ...
-    def scan(self, lo, hi, limit: int) -> tuple: ...
-    def apply_async(self) -> None: ...
-    def drain(self) -> None: ...
 
 
 # ---------------------------------------------------------------------------
@@ -235,6 +213,9 @@ class LocalBackend:
     def migrate_values(self) -> int:
         return 0   # one shard: every value is already home
 
+    def lease_stalled(self) -> bool:
+        return False   # liveness is host-side: no leases to stall
+
     def fail_data_server(self, server: int = 0):
         raise NotImplementedError(
             "LocalBackend owns a single unreplicated value shard — no "
@@ -242,6 +223,17 @@ class LocalBackend:
             "modelled by DistributedBackend (cfg.n_value_replicas)")
 
     recover_data_server = fail_data_server
+
+    def sever_server(self, server: int = 0):
+        raise NotImplementedError(
+            "heartbeat severing needs the distributed backend's "
+            "lease detector; LocalBackend liveness is host-side")
+
+    def sever_data_server(self, server: int = 0):
+        raise NotImplementedError(
+            "data-server heartbeat severing needs the distributed "
+            "backend's lease detector; LocalBackend owns a single "
+            "unreplicated shard")
 
     def fail_server(self, server: int = 0):
         self.group = ig.fail(self.group, server)
@@ -799,7 +791,7 @@ class HiStoreClient:
     docstring).  Thread-compatible with eager callers: all state lives in
     the backend; the client only holds policy."""
 
-    def __init__(self, backend, *, batch_quantum: int = 64,
+    def __init__(self, backend: Backend, *, batch_quantum: int = 64,
                  max_batch: int = 16384, max_retries: int = 8,
                  apply_every_n_ops: Optional[int] = None,
                  migrate_on_recover: bool = True):
@@ -935,8 +927,7 @@ class HiStoreClient:
             # stalled heartbeat; once detection settles (holders already
             # demoted — or oracle-failed), coverage can only return via
             # recovery, so report honestly after ONE round, not five
-            stalled = getattr(self.backend, "lease_stalled", None)
-            if stalled is not None and not stalled():
+            if not self.backend.lease_stalled():
                 break
             tries += 1
             self.stats["retries"] += 1
@@ -972,8 +963,7 @@ class HiStoreClient:
     def migrate(self) -> int:
         """Run the background value migration now (degraded-write strays
         move home; GETs drop back to hops == 1).  Returns values moved."""
-        fn = getattr(self.backend, "migrate_values", None)
-        moved = fn() if fn else 0
+        moved = self.backend.migrate_values()
         self.stats["migrated"] += moved
         return moved
 
@@ -983,13 +973,9 @@ class HiStoreClient:
     def sever_server(self, server: int):
         """Crash a server the lease detector must DISCOVER (heartbeats
         severed, routing view untouched) — the fault injector's switch
-        for oracle-free failure schedules (distributed backend only)."""
-        fn = getattr(self.backend, "sever_server", None)
-        if fn is None:
-            raise NotImplementedError(
-                "heartbeat severing needs the distributed backend's "
-                "lease detector; LocalBackend liveness is host-side")
-        return fn(server)
+        for oracle-free failure schedules; LocalBackend raises (its
+        liveness is host-side)."""
+        return self.backend.sever_server(server)
 
     def recover_server(self, server: int, **kw):
         """Rebuild + re-admit a server.  Keyword knobs are forwarded to
@@ -1008,14 +994,8 @@ class HiStoreClient:
         """Crash a DATA server the lease detector must DISCOVER (data
         heartbeats severed, routing view untouched) — the fault
         injector's value-plane switch for oracle-free failure schedules
-        (distributed backend only)."""
-        fn = getattr(self.backend, "sever_data_server", None)
-        if fn is None:
-            raise NotImplementedError(
-                "data-server heartbeat severing needs the distributed "
-                "backend's lease detector; LocalBackend owns a single "
-                "unreplicated shard")
-        return fn(server)
+        schedules; LocalBackend raises (single unreplicated shard)."""
+        return self.backend.sever_data_server(server)
 
     def recover_data_server(self, server: int) -> None:
         self.backend.recover_data_server(server)
@@ -1112,8 +1092,7 @@ class HiStoreClient:
             return
         if getattr(be, "lease_misses", 0) <= 0:
             return
-        stalled = getattr(be, "lease_stalled", None)
-        if stalled is not None and not stalled():
+        if not be.lease_stalled():
             return
         # the first stalled round goes unpaced (the stall is only
         # observable after it), so spread the timeout over budget-1

@@ -45,6 +45,7 @@ import numpy as np
 from repro.core import hash_index as hix
 from repro.core import log as lg
 from repro.core import sorted_index as six
+from repro.kernels import ops as kops
 
 I32 = jnp.int32
 
@@ -218,7 +219,7 @@ def drain_pair(srt, blog, cfg):
     and parity audit delegate here too, so the semantics cannot drift)."""
     while int(lg.pending_count(blog)) > 0:
         keys, addrs, ops, blog = lg.take_pending(blog, cfg.async_apply_batch)
-        srt = six.merge(srt, keys, addrs, ops)
+        srt = kops.merge(cfg, srt, keys, addrs, ops)
     return srt, blog
 
 
@@ -278,7 +279,7 @@ def _group_items(store, cfg, g: int):
         if srt0 is not None:
             keys, addrs, valid = six.items(srt0)
             k = np.asarray(keys)[np.asarray(valid)]
-            a_h, f_h, _ = hix.lookup(hs, keys, cfg)
+            a_h, f_h, _ = kops.probe(cfg, hs, keys)
             a = np.asarray(a_h)[np.asarray(valid)]
             # replica keys + hash addrs: keys for migration patching,
             # addresses straight from the authority

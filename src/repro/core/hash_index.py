@@ -57,11 +57,19 @@ def create(capacity: int, cfg) -> HashIndex:
     )
 
 
+def descriptors(idx: HashIndex, keys):
+    """Kernel-ready probe descriptors (bucket, signature, fingerprint) —
+    int32 whatever the key dtype, shared by the jnp probe below and the
+    Pallas dispatch layer (kernels/ops.py)."""
+    b = bucket_of(keys, idx.sig.shape[0])
+    sig, fp = sig_fp_of(keys)
+    return b, sig, fp
+
+
 def _locate(idx: HashIndex, keys):
     """Vectorized probe.  Returns (found, slot_flat, addr, n_accesses)."""
     nb, cs = idx.sig.shape
-    b = bucket_of(keys, nb)
-    sig, fp = sig_fp_of(keys)
+    b, sig, fp = descriptors(idx, keys)
     rows_sig = idx.sig[b]                       # [Q, CS]
     rows_fp = idx.fp[b]
     match = (rows_sig == sig[:, None]) & (rows_fp == fp[:, None])

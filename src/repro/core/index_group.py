@@ -27,6 +27,7 @@ from repro.core import log as lg
 from repro.core import sorted_index as si
 from repro.core.hashing import key_inf
 from repro.core.sorted_index import OP_DEL, OP_PUT
+from repro.kernels import ops as kops
 
 I32 = jnp.int32
 
@@ -157,7 +158,7 @@ def apply_async(g: IndexGroup, cfg, batch: int | None = None) -> IndexGroup:
 
     def one(srt, blog):
         keys, addrs, ops, blog2 = lg.take_pending(blog, batch)
-        return si.merge(srt, keys, addrs, ops), blog2
+        return kops.merge(cfg, srt, keys, addrs, ops), blog2
 
     srt, blogs = jax.vmap(one)(g.sorted, g.blogs)
     return g._replace(sorted=srt, blogs=blogs)
@@ -187,13 +188,11 @@ def replica_probe(g: IndexGroup, keys, cfg):
     entries are consulted first (newest wins), then the sorted index.
     Returns (addr, found, n_accesses)."""
     rep = jnp.argmax(g.alive[1:])                # first live backup
-    srt = jax.tree.map(lambda a: a[rep], g.sorted)
-    blog = jax.tree.map(lambda a: a[rep], g.blogs)
-    addr_s, found_s, acc_s = si.search(srt, keys, cfg.fanout)
-    hit, op, praw = lg.pending_lookup(blog, keys)
-    addr_d = jnp.where(hit, jnp.where(op == OP_PUT, praw, -1), addr_s)
-    found_d = jnp.where(hit, op == OP_PUT, found_s)
-    return addr_d, found_d, acc_s + 1
+    R = g.alive.shape[0] - 1
+    rep_sel = jnp.broadcast_to(
+        (jnp.arange(R, dtype=I32)[None, :] == rep).astype(I32),
+        (keys.shape[0], R))
+    return kops.backup_probe(cfg, g.sorted, g.blogs, keys, rep_sel)
 
 
 def owner_addr_probe(g: IndexGroup, keys, cfg,
@@ -205,7 +204,7 @@ def owner_addr_probe(g: IndexGroup, keys, cfg,
     old slot is still found while the primary's table is wiped (writes
     issued after the failure land in the hash, earlier ones only in the
     replicas — prefer the hash when it knows the key)."""
-    a_h, f_h, _ = hi.lookup(g.hash, keys, cfg)
+    a_h, f_h, _ = kops.probe(cfg, g.hash, keys)
     if primary_alive is True:
         return a_h, f_h
     a_d, f_d, _ = replica_probe(g, keys, cfg)
@@ -223,8 +222,8 @@ def get(g: IndexGroup, keys, cfg, *, primary_alive: bool | None = None):
     both-paths select for traced/SPMD use.
     Returns (addr, found, n_accesses)."""
     if primary_alive is True:
-        return hi.lookup(g.hash, keys, cfg)
-    addr_h, found_h, acc_h = hi.lookup(g.hash, keys, cfg)
+        return kops.probe(cfg, g.hash, keys)
+    addr_h, found_h, acc_h = kops.probe(cfg, g.hash, keys)
     addr_d, found_d, acc_d = replica_probe(g, keys, cfg)
     if primary_alive is False:
         return addr_d, found_d, acc_d
@@ -242,7 +241,7 @@ def scan(g: IndexGroup, lo, hi_key, limit: int, cfg):
     g = drain(g, cfg)
     rep = jnp.argmax(g.alive[1:])
     srt = jax.tree.map(lambda a: a[rep], g.sorted)
-    return si.range_query(srt, lo, hi_key, limit), g
+    return kops.range_query(cfg, srt, lo, hi_key, limit), g
 
 
 # ---------------------------------------------------------------------------

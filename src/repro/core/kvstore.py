@@ -88,6 +88,7 @@ from repro.core import hash_index as hix
 from repro.core import log as lg
 from repro.core import sorted_index as six
 from repro.core.hashing import fmix32, key_inf
+from repro.kernels import ops as kops
 from repro.core.verbs import (exchange, replicate_shift, route_build,
                               route_return)
 
@@ -290,11 +291,13 @@ def _put_body(cfg, G, capacity, store: KVStore, keys, vals, valid,
     winner = dp.winner_mask(rk, valid)
     # pre-batch address of the overwritten key: hash at the true primary,
     # replica + pending log at a temporary primary
-    old_a, old_f, _ = hix.lookup(_sq(store.hash), rk, cfg)
     if degraded:
-        old_ab, old_fb, _ = _backup_probe(cfg, store, rk, me, G)
+        old_a, old_f, _, old_ab, old_fb, _ = _index_probe(
+            cfg, store, rk, me, G)
         old_a = jnp.where(am_primary, old_a, old_ab)
         old_f = jnp.where(am_primary, old_f, old_fb)
+    else:
+        old_a, old_f, _ = kops.probe(cfg, _sq(store.hash), rk)
     # --- owner side: place the value -------------------------------------
     # overwrite whose old slot is on MY live shard: update in place (no
     # allocator churn); new keys and remote-old strays: allocate fresh.
@@ -473,26 +476,22 @@ def _replicate_logs(blog, alive, rk, addr, ops, valid, rg, me, G, opcode):
     return blog, ok, nrep, ok_local
 
 
-def _backup_probe(cfg, store: KVStore, rk, me, G):
-    """Degraded lookup at a backup holder: for each replica slot I hold,
-    consult its PENDING log first (newest wins), then the sorted replica.
-    Lane i is answered by replica r iff I hold replica r of lane i's owner
-    group.  Returns (addr, found, n_accesses)."""
-    addr_b = jnp.full(rk.shape, -1, I32)
-    found_b = jnp.zeros(rk.shape, bool)
-    acc_b = jnp.zeros(rk.shape, I32)
-    for r in range(store.blog.tail.shape[0]):
-        srt = jax.tree.map(lambda a: a[r, 0], store.bsorted)
-        blog = jax.tree.map(lambda a: a[r, 0], store.blog)
-        a_s, f_s, c_s = six.search(srt, rk, cfg.fanout)
-        hit, op, praw = lg.pending_lookup(blog, rk)
-        a_r = jnp.where(hit, jnp.where(op == six.OP_PUT, praw, -1), a_s)
-        f_r = jnp.where(hit, op == six.OP_PUT, f_s)
-        sel = (me - r - 1) % G == owner_group(rk, G)
-        addr_b = jnp.where(sel, a_r, addr_b)
-        found_b = jnp.where(sel, f_r, found_b)
-        acc_b = jnp.where(sel, c_s + 1, acc_b)
-    return addr_b, found_b, acc_b
+def _index_probe(cfg, store: KVStore, rk, me, G):
+    """The fused index probe (hash chain walk + per-replica-slot backup
+    probe in one kernel-dispatch call): the hash table answers lanes I
+    own as true primary; for each replica slot I hold, the backup side
+    consults its PENDING log first (newest wins), then the sorted
+    replica — lane i is answered by replica r iff I hold replica r of
+    lane i's owner group.  Returns (addr_p, found_p, acc_p, addr_b,
+    found_b, acc_b); the caller combines the pair with its own
+    ``am_primary`` mask."""
+    R = store.blog.tail.shape[0]
+    og = owner_group(rk, G)
+    rep_sel = jnp.stack(
+        [((me - r - 1) % G == og).astype(I32) for r in range(R)], axis=1)
+    srt = jax.tree.map(lambda a: a[:, 0], store.bsorted)
+    blg = jax.tree.map(lambda a: a[:, 0], store.blog)
+    return kops.group_probe(cfg, _sq(store.hash), srt, blg, rk, rep_sel)
 
 
 def _delete_body(cfg, G, capacity, store: KVStore, keys, valid,
@@ -517,15 +516,16 @@ def _delete_body(cfg, G, capacity, store: KVStore, keys, valid,
     am_primary = rg == me
     data = store.data
     dcap = data.vals.shape[1]
-    old_a, old_f, _ = hix.lookup(_sq(store.hash), rk, cfg)
     if degraded:
         # existence check BEFORE this batch's tombstones land: the
         # temporary primary consults its replica + pending log, so DELETE
         # reports found honestly even while the true primary is down
-        addr_b, found_b, _ = _backup_probe(cfg, store, rk, me, G)
+        old_a, old_f, _, addr_b, found_b, _ = _index_probe(
+            cfg, store, rk, me, G)
         old_a = jnp.where(am_primary, old_a, addr_b)
         old_f = jnp.where(am_primary, old_f, found_b)
     else:
+        old_a, old_f, _ = kops.probe(cfg, _sq(store.hash), rk)
         found_b = jnp.zeros(rk.shape, bool)   # no degraded lanes exist
     # free-queue push-back BEFORE the tombstone lands: a delete whose
     # value slot lives on another shard (or a dead one) must queue its
@@ -588,10 +588,10 @@ def _get_body(cfg, G, capacity, store: KVStore, keys, valid):
         dest, {"k": (keys, key_inf(keys.dtype))}, G, capacity)
     recv = exchange(bufs, AXIS)
     rk = recv["k"]
-    # --- primary path: one-sided probe (gathers only) -------------------
-    addr_p, found_p, acc_p = hix.lookup(_sq(store.hash), rk, cfg)
-    # --- backup path: pending log + sorted replica (per replica slot) ---
-    addr_b, found_b, acc_b = _backup_probe(cfg, store, rk, me, G)
+    # primary path (one-sided hash probe) + backup path (pending log +
+    # sorted replica, per replica slot) in ONE fused dispatch call
+    addr_p, found_p, acc_p, addr_b, found_b, acc_b = _index_probe(
+        cfg, store, rk, me, G)
     am_primary = owner_group(rk, G) == me
     addr = jnp.where(am_primary, addr_p, addr_b)
     found = jnp.where(am_primary, found_p, found_b)
@@ -709,7 +709,7 @@ def _apply_body(cfg, batch, store: KVStore):
         one_log = jax.tree.map(lambda a: a[r, 0], blog)
         one_srt = jax.tree.map(lambda a: a[r, 0], bsorted)
         keys, addrs, ops, one_log = lg.take_pending(one_log, batch)
-        one_srt = six.merge(one_srt, keys, addrs, ops)
+        one_srt = kops.merge(cfg, one_srt, keys, addrs, ops)
         blog = jax.tree.map(lambda f, v, r=r: f.at[r, 0].set(v), blog, one_log)
         bsorted = jax.tree.map(lambda f, v, r=r: f.at[r, 0].set(v),
                                bsorted, one_srt)
@@ -747,7 +747,7 @@ def _scan_body(cfg, G, limit, store: KVStore, lo, hi):
     eff = store.alive & ~store.sever
     for r in range(store.blog.tail.shape[0]):
         srt = jax.tree.map(lambda a: a[r, 0], st.bsorted)
-        k, a, n = six.range_query(srt, lo[0], hi[0], limit)
+        k, a, n = kops.range_query(cfg, srt, lo[0], hi[0], limit)
         g = (me - r - 1) % G
         # serve replica r of group g iff I'm alive and EVERY
         # lower-replica holder (devices g+1 .. g+r) is dead — exactly
@@ -1193,7 +1193,7 @@ def re_replicate(store: KVStore, cfg) -> tuple:
             v = np.asarray(valid)
             rk, ra = np.asarray(keys)[v], np.asarray(addrs)[v]
             if eff[g]:
-                a_h, f_h, _ = hix.lookup(hs, keys, cfg)
+                a_h, f_h, _ = kops.probe(cfg, hs, keys)
                 okk = (len(rk) == n_auth
                        and bool(np.asarray(f_h | ~valid).all())
                        and bool(np.asarray((a_h == addrs) | ~valid).all()))
@@ -1247,7 +1247,7 @@ def parity_report(store: KVStore, cfg, apply_fn=None) -> list:
             srt, _ = _drain_one(srt, blog, cfg)
             keys, addrs, valid = six.items(srt)
             n_sorted = int(valid.sum())
-            a_h, f_h, _ = hix.lookup(hs, keys, cfg)
+            a_h, f_h, _ = kops.probe(cfg, hs, keys)
             found_ok = bool(np.asarray(f_h | ~valid).all())
             addr_ok = bool(np.asarray((a_h == addrs) | ~valid).all())
             out.append({"group": g, "replica": r, "holder": h,

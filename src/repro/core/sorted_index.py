@@ -118,11 +118,12 @@ def search(idx: SortedIndex, keys, fanout: int = 128):
     return addr, found, n_acc
 
 
-def range_query(idx: SortedIndex, lo, hi, limit: int):
-    """SCAN [lo, hi]: up to ``limit`` ascending entries.
-    lo, hi: scalars.  Returns (keys [limit], addrs [limit], count)."""
+def range_from_start(idx: SortedIndex, start, hi, limit: int):
+    """SCAN tail shared by the jnp and kernel paths: take ``limit``
+    entries from position ``start`` (the lower bound — searchsorted
+    here, the search kernel's descent position on the kernel path) and
+    mask to keys <= hi.  Returns (keys [limit], addrs [limit], count)."""
     cap = idx.keys.shape[0]
-    start = jnp.searchsorted(idx.keys, lo)
     take = jnp.clip(start + jnp.arange(limit), 0, cap - 1)
     k = idx.keys[take]
     a = idx.addrs[take]
@@ -131,6 +132,12 @@ def range_query(idx: SortedIndex, lo, hi, limit: int):
     k = jnp.where(valid, k, INF)
     a = jnp.where(valid, a, -1)
     return k, a, valid.sum().astype(I32)
+
+
+def range_query(idx: SortedIndex, lo, hi, limit: int):
+    """SCAN [lo, hi]: up to ``limit`` ascending entries.
+    lo, hi: scalars.  Returns (keys [limit], addrs [limit], count)."""
+    return range_from_start(idx, jnp.searchsorted(idx.keys, lo), hi, limit)
 
 
 def items(idx: SortedIndex):

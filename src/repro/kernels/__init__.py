@@ -1,3 +1,14 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the index hot path + the model-side fused scan.
+
+Public surface: the cfg-routed dispatch API in ``repro.kernels.ops``
+(re-exported below) — ``probe``/``search``/``merge``/``range_query``/
+``sort``/``group_probe``/``backup_probe`` take the HiStoreConfig and
+route by ``cfg.use_kernels`` ("off" | "on" | "auto"); both paths are
+bit-exact by contract.  The old per-kernel module imports
+(kernels.hash_probe / sorted_search / bitonic_sort) are deprecated
+shims over the private ``_``-prefixed kernel modules.
+"""
+from repro.kernels import ops  # noqa: F401
+from repro.kernels.ops import (active_path, backup_probe,  # noqa: F401
+                               group_probe, kernels_enabled, merge, probe,
+                               range_query, search, sort)

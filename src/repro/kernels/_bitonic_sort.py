@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: batched in-VMEM bitonic key/payload sort.
+
+Used by the write path: the sort-based batched hash insert (conflict-free
+CAS replacement), the MoE token-by-expert dispatch, and the log->sorted
+merge all sort (key, payload) batches.  A bitonic network is the TPU-native
+choice: every stage is a strided compare-exchange expressible as reshapes +
+where (no gathers), log^2(T) stages, fully vectorised on the VPU.
+
+The tile ([rows, T] with T a power of two) lives entirely in VMEM via
+BlockSpec; the grid walks row blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I32 = jnp.int32
+
+
+def _compare_exchange(keys, vals, j, ascending_mask):
+    """One compare-exchange with partner distance j (power of two).
+    keys/vals: [R, T].  ascending_mask: [T] bool, direction per element."""
+    R, T = keys.shape
+    k = keys.reshape(R, T // (2 * j), 2, j)
+    v = vals.reshape(R, T // (2 * j), 2, j)
+    asc = ascending_mask.reshape(T // (2 * j), 2, j)[:, 0, :]   # [T/2j, j]
+    lo_k, hi_k = k[:, :, 0], k[:, :, 1]
+    lo_v, hi_v = v[:, :, 0], v[:, :, 1]
+    swap = jnp.where(asc[None], lo_k > hi_k, lo_k < hi_k)
+    nlo_k = jnp.where(swap, hi_k, lo_k)
+    nhi_k = jnp.where(swap, lo_k, hi_k)
+    nlo_v = jnp.where(swap, hi_v, lo_v)
+    nhi_v = jnp.where(swap, lo_v, hi_v)
+    k = jnp.stack([nlo_k, nhi_k], axis=2)
+    v = jnp.stack([nlo_v, nhi_v], axis=2)
+    return k.reshape(R, T), v.reshape(R, T)
+
+
+def _kernel(k_ref, v_ref, ko_ref, vo_ref):
+    keys = k_ref[...]
+    vals = v_ref[...]
+    R, T = keys.shape
+    idx = jax.lax.broadcasted_iota(I32, (T,), 0)
+    stage = 2
+    while stage <= T:
+        asc = (idx // stage) % 2 == 0        # direction per bitonic block
+        j = stage // 2
+        while j >= 1:
+            keys, vals = _compare_exchange(keys, vals, j, asc)
+            j //= 2
+        stage *= 2
+    ko_ref[...] = keys
+    vo_ref[...] = vals
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "interpret"))
+def bitonic_sort_kernel(keys, vals, *, row_block: int = 8,
+                        interpret: bool = True):
+    """keys, vals: [R, T] int32, T a power of two.  Sorts each row of keys
+    ascending, applying the same permutation to vals."""
+    R, T = keys.shape
+    assert T & (T - 1) == 0, "T must be a power of two"
+    RB = min(row_block, R)
+    assert R % RB == 0
+    spec = pl.BlockSpec((RB, T), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(R // RB,),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((R, T), I32)] * 2,
+        interpret=interpret,
+    )(keys, vals)

@@ -1,0 +1,458 @@
+"""Pallas kernels for the serving hot path (block-vectorized).
+
+These are the kernels ``kernels/ops.py`` dispatches to when
+``cfg.use_kernels`` resolves to "on":
+
+  * ``group_probe_kernel`` — the fused GET probe: hash-bucket chain walk
+    + per-replica newest-wins pending-log lookup + sorted-directory
+    descent + replica-select combine, all in ONE kernel (the paper's
+    "dedicatedly chosen primitive per operation", offloaded to where the
+    index lives — the same argument the SmartNIC ordered-KV line makes
+    for pushing index logic onto the data path);
+  * ``backup_probe_kernel`` / ``hash_probe_block_kernel`` /
+    ``sorted_search_block_kernel`` — the individual probes (the sorted
+    search also emits the descent position, which ``ops.range_query``
+    turns into the SCAN lower bound);
+  * ``merge_kernel`` — the bitonic-merge incremental apply: bitonic-sort
+    the log batch by (key, arrival), place both sequences by branchless
+    binary-search rank (merge-path), then the same newest-wins /
+    tombstone-compacting keep pass as ``sorted_index.merge``;
+  * ``sort_pairs_stable_kernel`` — rowwise stable (key, payload) sort
+    (bitonic with an index tie-break).
+
+Unlike the per-query DMA kernels in ``_hash_probe.py`` /
+``_sorted_search.py`` (which model the paper's one-RTT RDMA reads and
+remain the measured-access-count reference), these kernels tile the
+QUERY batch through VMEM via BlockSpec and stage each table once per
+block — the layout that wins on the VPU, and in interpret mode on CPU,
+where the fast tier runs them.  Every body mirrors its jnp reference
+(``hash_index.lookup`` / ``sorted_index.search`` / ``log
+.pending_lookup`` / ``sorted_index.merge``) operation-for-operation:
+the dispatch contract is BIT-EXACT parity, enforced by
+tests/test_kernel_dispatch.py.
+
+Keys are int32 in-kernel (canonical x32 key codec); ``ops.py`` falls
+back to the jnp path for int64 keys.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+I32 = jnp.int32
+KEY_INF32 = jnp.iinfo(jnp.int32).max
+OP_PUT = 1
+OP_DEL = 2
+
+
+def directory_levels(cap: int, fanout: int) -> int:
+    lv, span = 1, fanout
+    while span < cap:
+        span *= fanout
+        lv += 1
+    return lv
+
+
+def _full_spec(a):
+    """Whole-array BlockSpec: stage the table into VMEM once per block."""
+    nd = a.ndim
+    return pl.BlockSpec(a.shape, lambda i, _n=nd: (0,) * _n)
+
+
+# ---------------------------------------------------------------------------
+# shared in-kernel bodies (each mirrors its jnp reference exactly)
+# ---------------------------------------------------------------------------
+def _hash_probe(sig, fp, haddr, fill, b, qsig, qfp, S):
+    """Mirror of hash_index.lookup (incl. the fill-based miss count)."""
+    rows_sig = sig[b]                               # [QB, CS]
+    rows_fp = fp[b]
+    rows_addr = haddr[b]
+    match = (rows_sig == qsig[:, None]) & (rows_fp == qfp[:, None])
+    found = match.any(axis=1)
+    off = jnp.argmax(match, axis=1).astype(I32)
+    addr = jnp.where(found, jnp.take_along_axis(
+        rows_addr, off[:, None], axis=1)[:, 0], -1)
+    occupied = jnp.maximum(fill[b], 1)
+    acc = jnp.where(found, off // S + 1, (occupied + S - 1) // S)
+    return addr.astype(I32), found, acc.astype(I32)
+
+
+def _descent(skeys, q, cap, fanout, levels):
+    """Mirror of sorted_index.search's directory descent."""
+    pos = jnp.zeros(q.shape, I32)
+    offs = jax.lax.iota(I32, fanout)
+    for l in range(levels - 1, -1, -1):
+        stride = fanout ** l
+        gi = pos[:, None] + offs[None, :] * stride           # [QB, fanout]
+        node = skeys[jnp.clip(gi, 0, cap - 1)]
+        node = jnp.where(gi < cap, node, KEY_INF32)
+        cnt = (node <= q[:, None]).sum(axis=1).astype(I32)
+        pos = pos + jnp.maximum(cnt - 1, 0) * stride
+    return pos
+
+
+def _pending_lookup(lkeys, laddrs, lops, applied, tail, q):
+    """Mirror of log.pending_lookup (newest wins over [applied, tail))."""
+    lcap = lkeys.shape[0]
+    seq = applied + jnp.arange(lcap, dtype=I32)
+    idx = seq % lcap
+    pv = seq < tail
+    pk = jnp.where(pv, lkeys[idx], KEY_INF32)
+    m = pk[None, :] == q[:, None]                            # [QB, lcap]
+    hit = m.any(axis=1)
+    last = (lcap - 1) - jnp.argmax(m[:, ::-1], axis=1)
+    op = jnp.where(hit, lops[idx][last], 0)
+    addr = laddrs[idx][last]
+    return hit, op, addr
+
+
+def _backup_combine(sk, sa, lk, la, lo_, lw, sel, q, fanout, levels):
+    """Per-replica (pending log -> sorted) probe + replica-select combine
+    (mirror of the jnp backup probe: later-selected replicas win)."""
+    R, cap = sk.shape
+    QB = q.shape[0]
+    addr_b = jnp.full((QB,), -1, I32)
+    found_b = jnp.zeros((QB,), jnp.bool_)
+    acc_b = jnp.zeros((QB,), I32)
+    for r in range(R):
+        pos = _descent(sk[r], q, cap, fanout, levels)
+        f_s = sk[r][pos] == q
+        a_s = jnp.where(f_s, sa[r][pos], -1)
+        hit, op, praw = _pending_lookup(lk[r], la[r], lo_[r],
+                                        lw[r, 0], lw[r, 1], q)
+        a_r = jnp.where(hit, jnp.where(op == OP_PUT, praw, -1), a_s)
+        f_r = jnp.where(hit, op == OP_PUT, f_s)
+        s = sel[:, r] != 0
+        addr_b = jnp.where(s, a_r, addr_b)
+        found_b = jnp.where(s, f_r, found_b)
+        acc_b = jnp.where(s, jnp.full((QB,), levels + 1, I32), acc_b)
+    return addr_b, found_b, acc_b
+
+
+def _cx_multi(arrs, j, asc):
+    """Bitonic compare-exchange at distance j over the LAST axis, ordering
+    by (arrs[0], arrs[1]) lexicographically; the remaining arrays ride
+    along as payload.  arrs[1] strictly unique -> a total order, so the
+    network is a stable sort by arrs[0]."""
+    T = arrs[0].shape[-1]
+    lead = arrs[0].shape[:-1]
+    split = lambda x: x.reshape(lead + (T // (2 * j), 2, j))
+    a2 = asc.reshape(T // (2 * j), 2, j)[:, 0, :]            # [T/2j, j]
+    lo = [split(x)[..., 0, :] for x in arrs]
+    hi = [split(x)[..., 1, :] for x in arrs]
+    gt = (lo[0] > hi[0]) | ((lo[0] == hi[0]) & (lo[1] > hi[1]))
+    lt = (lo[0] < hi[0]) | ((lo[0] == hi[0]) & (lo[1] < hi[1]))
+    swap = jnp.where(a2, gt, lt)
+    out = []
+    for l, h in zip(lo, hi):
+        nl = jnp.where(swap, h, l)
+        nh = jnp.where(swap, l, h)
+        out.append(jnp.stack([nl, nh], axis=-2).reshape(lead + (T,)))
+    return out
+
+
+def _bitonic_multi(arrs):
+    """Full bitonic network over the last axis (power-of-two length)."""
+    T = arrs[0].shape[-1]
+    idx = jax.lax.iota(I32, T)
+    stage = 2
+    while stage <= T:
+        asc = (idx // stage) % 2 == 0
+        j = stage // 2
+        while j >= 1:
+            arrs = _cx_multi(arrs, j, asc)
+            j //= 2
+        stage *= 2
+    return arrs
+
+
+def _count_prefix(a, q, leq: bool):
+    """#elements of sorted ``a`` that are < q (or <= q): branchless
+    power-of-two binary search, any array length."""
+    n = a.shape[0]
+    pos = jnp.zeros(q.shape, I32)
+    s = 1
+    while s * 2 <= n:
+        s *= 2
+    while s >= 1:
+        cand = pos + s
+        v = a[jnp.clip(cand - 1, 0, n - 1)]
+        good = (v <= q) if leq else (v < q)
+        pos = jnp.where((cand <= n) & good, cand, pos)
+        s //= 2
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# hash probe (block)
+# ---------------------------------------------------------------------------
+def _hash_body(S, b_ref, qsig_ref, qfp_ref, sig_ref, fp_ref, ha_ref,
+               fill_ref, ao, fo, co):
+    a, f, c = _hash_probe(sig_ref[...], fp_ref[...], ha_ref[...],
+                          fill_ref[...], b_ref[...], qsig_ref[...],
+                          qfp_ref[...], S)
+    ao[...] = a
+    fo[...] = f.astype(I32)
+    co[...] = c
+
+
+@functools.partial(jax.jit, static_argnames=("slots_per_bucket", "q_block",
+                                             "interpret"))
+def hash_probe_block_kernel(bucket, qsig, qfp, sig, fp, addr, fill, *,
+                            slots_per_bucket: int, q_block: int = 512,
+                            interpret: bool = True):
+    """bucket/qsig/qfp: [Q] int32 descriptors; sig/fp/addr: [nb, CS];
+    fill: [nb].  Returns (addr, found int32, n_accesses), each [Q] —
+    bit-exact with hash_index.lookup."""
+    Q = bucket.shape[0]
+    QB = min(q_block, Q)
+    assert Q % QB == 0
+    qspec = pl.BlockSpec((QB,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_hash_body, slots_per_bucket),
+        grid=(Q // QB,),
+        in_specs=[qspec, qspec, qspec,
+                  _full_spec(sig), _full_spec(fp), _full_spec(addr),
+                  _full_spec(fill)],
+        out_specs=[qspec, qspec, qspec],
+        out_shape=[jax.ShapeDtypeStruct((Q,), I32)] * 3,
+        interpret=interpret,
+    )(bucket, qsig, qfp, sig, fp, addr, fill)
+
+
+# ---------------------------------------------------------------------------
+# sorted search (block) — also emits the descent position (SCAN lower bound)
+# ---------------------------------------------------------------------------
+def _search_body(cap, fanout, levels, q_ref, k_ref, a_ref,
+                 ao, fo, co, po, lo_out):
+    q = q_ref[...]
+    keys = k_ref[...]
+    pos = _descent(keys, q, cap, fanout, levels)
+    found = keys[pos] == q
+    ao[...] = jnp.where(found, a_ref[...][pos], -1)
+    fo[...] = found.astype(I32)
+    co[...] = jnp.full(q.shape, levels, I32)
+    po[...] = pos
+    # lower bound: first index with key >= q (== searchsorted output
+    # wherever it matters — see ops.range_query's parity note)
+    lo_out[...] = pos + (keys[pos] < q).astype(I32)
+
+
+@functools.partial(jax.jit, static_argnames=("fanout", "q_block",
+                                             "interpret"))
+def sorted_search_block_kernel(queries, keys, addrs, *, fanout: int = 128,
+                               q_block: int = 512, interpret: bool = True):
+    """queries: [Q] int32; keys: [cap] int32 ascending (INF-padded);
+    addrs: [cap] int32.  Returns (addr, found int32, n_accesses, pos,
+    lower_bound), each [Q] — search outputs bit-exact with
+    sorted_index.search."""
+    Q = queries.shape[0]
+    cap = keys.shape[0]
+    levels = directory_levels(cap, fanout)
+    QB = min(q_block, Q)
+    assert Q % QB == 0
+    qspec = pl.BlockSpec((QB,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_search_body, cap, fanout, levels),
+        grid=(Q // QB,),
+        in_specs=[qspec, _full_spec(keys), _full_spec(addrs)],
+        out_specs=[qspec] * 5,
+        out_shape=[jax.ShapeDtypeStruct((Q,), I32)] * 5,
+        interpret=interpret,
+    )(queries, keys, addrs)
+
+
+# ---------------------------------------------------------------------------
+# backup probe (per-replica pending log + sorted descent + select)
+# ---------------------------------------------------------------------------
+def _backup_body(fanout, levels, rk_ref, sel_ref, sk_ref, sa_ref,
+                 lk_ref, la_ref, lo_ref, lw_ref, bao, bfo, bco):
+    a, f, c = _backup_combine(sk_ref[...], sa_ref[...], lk_ref[...],
+                              la_ref[...], lo_ref[...], lw_ref[...],
+                              sel_ref[...], rk_ref[...], fanout, levels)
+    bao[...] = a
+    bfo[...] = f.astype(I32)
+    bco[...] = c
+
+
+@functools.partial(jax.jit, static_argnames=("fanout", "q_block",
+                                             "interpret"))
+def backup_probe_kernel(rkeys, rep_sel, skeys, saddrs, lkeys, laddrs,
+                        lops, lwin, *, fanout: int = 128,
+                        q_block: int = 512, interpret: bool = True):
+    """rkeys: [Q] int32; rep_sel: [Q, R] int32 lane->replica select;
+    skeys/saddrs: [R, cap]; lkeys/laddrs/lops: [R, lcap]; lwin: [R, 2]
+    (applied, tail).  Returns (addr, found int32, n_accesses) — the
+    degraded-read probe, bit-exact with the jnp backup probe."""
+    Q = rkeys.shape[0]
+    R, cap = skeys.shape
+    levels = directory_levels(cap, fanout)
+    QB = min(q_block, Q)
+    assert Q % QB == 0
+    qspec = pl.BlockSpec((QB,), lambda i: (i,))
+    sspec = pl.BlockSpec((QB, R), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_backup_body, fanout, levels),
+        grid=(Q // QB,),
+        in_specs=[qspec, sspec, _full_spec(skeys), _full_spec(saddrs),
+                  _full_spec(lkeys), _full_spec(laddrs), _full_spec(lops),
+                  _full_spec(lwin)],
+        out_specs=[qspec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((Q,), I32)] * 3,
+        interpret=interpret,
+    )(rkeys, rep_sel, skeys, saddrs, lkeys, laddrs, lops, lwin)
+
+
+# ---------------------------------------------------------------------------
+# fused GET probe: hash walk + backup probe in ONE kernel
+# ---------------------------------------------------------------------------
+def _group_body(S, fanout, levels, b_ref, qsig_ref, qfp_ref, rk_ref,
+                sel_ref, sig_ref, fp_ref, ha_ref, fill_ref, sk_ref, sa_ref,
+                lk_ref, la_ref, lo_ref, lw_ref,
+                hao, hfo, hco, bao, bfo, bco):
+    ha, hf, hc = _hash_probe(sig_ref[...], fp_ref[...], ha_ref[...],
+                             fill_ref[...], b_ref[...], qsig_ref[...],
+                             qfp_ref[...], S)
+    ba, bf, bc = _backup_combine(sk_ref[...], sa_ref[...], lk_ref[...],
+                                 la_ref[...], lo_ref[...], lw_ref[...],
+                                 sel_ref[...], rk_ref[...], fanout, levels)
+    hao[...] = ha
+    hfo[...] = hf.astype(I32)
+    hco[...] = hc
+    bao[...] = ba
+    bfo[...] = bf.astype(I32)
+    bco[...] = bc
+
+
+@functools.partial(jax.jit, static_argnames=("slots_per_bucket", "fanout",
+                                             "q_block", "interpret"))
+def group_probe_kernel(bucket, qsig, qfp, rkeys, rep_sel, sig, fp, haddr,
+                       fill, skeys, saddrs, lkeys, laddrs, lops, lwin, *,
+                       slots_per_bucket: int, fanout: int = 128,
+                       q_block: int = 512, interpret: bool = True):
+    """The fused GET probe.  Query side: bucket/qsig/qfp (hash
+    descriptors), rkeys (raw int32 keys), rep_sel [Q, R].  Table side:
+    the hash arrays + fill, the stacked sorted replicas, the stacked
+    pending logs + their (applied, tail) windows.  Returns
+    (h_addr, h_found, h_acc, b_addr, b_found, b_acc), each [Q] int32 —
+    the primary/backup pair the op bodies combine with their own
+    am_primary masks."""
+    Q = bucket.shape[0]
+    R, cap = skeys.shape
+    levels = directory_levels(cap, fanout)
+    QB = min(q_block, Q)
+    assert Q % QB == 0
+    qspec = pl.BlockSpec((QB,), lambda i: (i,))
+    sspec = pl.BlockSpec((QB, R), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_group_body, slots_per_bucket, fanout, levels),
+        grid=(Q // QB,),
+        in_specs=[qspec, qspec, qspec, qspec, sspec,
+                  _full_spec(sig), _full_spec(fp), _full_spec(haddr),
+                  _full_spec(fill), _full_spec(skeys), _full_spec(saddrs),
+                  _full_spec(lkeys), _full_spec(laddrs), _full_spec(lops),
+                  _full_spec(lwin)],
+        out_specs=[qspec] * 6,
+        out_shape=[jax.ShapeDtypeStruct((Q,), I32)] * 6,
+        interpret=interpret,
+    )(bucket, qsig, qfp, rkeys, rep_sel, sig, fp, haddr, fill,
+      skeys, saddrs, lkeys, laddrs, lops, lwin)
+
+
+# ---------------------------------------------------------------------------
+# bitonic-merge incremental apply (log batch -> sorted index)
+# ---------------------------------------------------------------------------
+def _merge_body(ek_ref, ea_ref, bk_ref, ba_ref, bo_ref,
+                nk_ref, na_ref, sz_ref):
+    ek = ek_ref[...]
+    ea = ea_ref[...]
+    bo = bo_ref[...]
+    bk = jnp.where(bo > 0, bk_ref[...], KEY_INF32)
+    cap = ek.shape[0]
+    MP = bk.shape[0]
+    # stable sort of the batch by (key, arrival): arrival priority is the
+    # tie-break that makes newest-wins exact (mirror of merge's lexsort
+    # prio 1..m; padding lanes carry op=0 -> key INF, dropped below)
+    prio = 1 + jax.lax.iota(I32, MP)
+    sk, _, sa, sd = _bitonic_multi(
+        [bk, prio, ba_ref[...], (bo == OP_DEL).astype(I32)])
+    # merge-path placement: each element's rank in the merged order via
+    # branchless binary search (existing-first on equal keys, matching
+    # the jnp lexsort's priority ordering)
+    pe = jax.lax.iota(I32, cap) + _count_prefix(sk, ek, leq=False)
+    pb = jax.lax.iota(I32, MP) + _count_prefix(ek, sk, leq=True)
+    L = cap + MP
+    mk = jnp.full((L,), KEY_INF32, I32).at[pe].set(ek).at[pb].set(sk)
+    ma = jnp.full((L,), -1, I32).at[pe].set(ea).at[pb].set(sa)
+    md = jnp.zeros((L,), I32).at[pb].set(sd)
+    # newest-wins + tombstone compaction: identical keep pass to
+    # sorted_index.merge on the identically-ordered merged sequence
+    is_last = jnp.concatenate([mk[1:] != mk[:-1], jnp.ones((1,), bool)])
+    keep = is_last & (md == 0) & (mk != KEY_INF32)
+    dest = jnp.cumsum(keep) - 1
+    dest = jnp.where(keep, dest, L)
+    nk_ref[...] = jnp.full((cap,), KEY_INF32, I32).at[dest].set(
+        mk, mode="drop")
+    na_ref[...] = jnp.full((cap,), -1, I32).at[dest].set(ma, mode="drop")
+    sz_ref[0] = keep.sum().astype(I32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def merge_kernel(ekeys, eaddrs, bkeys, baddrs, bops, *,
+                 interpret: bool = True):
+    """ekeys/eaddrs: [cap] int32 (ascending, INF-padded); bkeys/baddrs/
+    bops: [m] int32 log batch (op 0 invalid / 1 PUT / 2 DEL).  Returns
+    (new_keys [cap], new_addrs [cap], size [1]) — bit-exact with
+    sorted_index.merge."""
+    cap = ekeys.shape[0]
+    m = bkeys.shape[0]
+    MP = 1
+    while MP < max(m, 1):
+        MP <<= 1
+    if MP != m:
+        bkeys = jnp.pad(bkeys, (0, MP - m))
+        baddrs = jnp.pad(baddrs, (0, MP - m), constant_values=-1)
+        bops = jnp.pad(bops, (0, MP - m))
+    return pl.pallas_call(
+        _merge_body,
+        out_shape=[jax.ShapeDtypeStruct((cap,), I32),
+                   jax.ShapeDtypeStruct((cap,), I32),
+                   jax.ShapeDtypeStruct((1,), I32)],
+        interpret=interpret,
+    )(ekeys, eaddrs, bkeys, baddrs, bops)
+
+
+# ---------------------------------------------------------------------------
+# rowwise stable pair sort
+# ---------------------------------------------------------------------------
+def _sort_stable_body(k_ref, v_ref, ko_ref, vo_ref):
+    keys = k_ref[...]
+    vals = v_ref[...]
+    T = keys.shape[-1]
+    pr = jnp.broadcast_to(jax.lax.iota(I32, T), keys.shape)
+    ks, _, vs = _bitonic_multi([keys, pr, vals])
+    ko_ref[...] = ks
+    vo_ref[...] = vs
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "interpret"))
+def sort_pairs_stable_kernel(keys, vals, *, row_block: int = 8,
+                             interpret: bool = True):
+    """keys/vals: [R, T] int32, T a power of two.  Rowwise STABLE sort by
+    key (index tie-break) — bit-exact with stable argsort + gather."""
+    R, T = keys.shape
+    assert T & (T - 1) == 0, "T must be a power of two"
+    RB = min(row_block, R)
+    assert R % RB == 0
+    spec = pl.BlockSpec((RB, T), lambda i: (i, 0))
+    return pl.pallas_call(
+        _sort_stable_body,
+        grid=(R // RB,),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((R, T), I32)] * 2,
+        interpret=interpret,
+    )(keys, vals)

@@ -1,104 +1,14 @@
-"""Pallas TPU kernel: batched hash-table probe (the GET hot path).
+"""DEPRECATED module home: import through repro.kernels.ops instead.
 
-The RDMA one-sided READ of the paper becomes an HBM->VMEM DMA: the bucket
-tables stay in HBM (memory_space=ANY); per query the kernel DMAs the
-64 B-class chain row into VMEM (double-buffered across queries, so the next
-row's DMA overlaps the current row's compare) and does the signature +
-fingerprint compare branchlessly.  This mirrors production paged-lookup
-kernels (page-table indirection inside the kernel).
-
-Layout: queries are tiled QB at a time into VMEM via BlockSpec; the chain
-row is [CS] int32 (CS = slots_per_bucket * max_chain <= 128 = one lane
-vector).  Validated against ref.ref_hash_probe in interpret mode.
+The kernel moved to the private module kernels/_hash_probe.py; the
+public surface is the cfg-routed dispatch API (repro.kernels.ops.probe)
+plus the legacy jitted wrapper repro.kernels.ops.hash_probe.
 """
-from __future__ import annotations
+import warnings
 
-import functools
+from repro.kernels._hash_probe import hash_probe_kernel  # noqa: F401
 
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-I32 = jnp.int32
-
-
-def _kernel(slots_per_bucket, b_ref, qsig_ref, qfp_ref,
-            sig_hbm, fp_hbm, addr_hbm,
-            addr_out, found_out, acc_out,
-            sig_s, fp_s, addr_s, sem):
-    QB = b_ref.shape[0]
-    CS = sig_s.shape[1]
-    S = slots_per_bucket
-
-    def start_row(qi, slot):
-        b = b_ref[qi]
-        pltpu.make_async_copy(sig_hbm.at[b], sig_s.at[slot], sem.at[slot, 0]).start()
-        pltpu.make_async_copy(fp_hbm.at[b], fp_s.at[slot], sem.at[slot, 1]).start()
-        pltpu.make_async_copy(addr_hbm.at[b], addr_s.at[slot], sem.at[slot, 2]).start()
-
-    def wait_row(qi, slot):
-        b = b_ref[qi]
-        pltpu.make_async_copy(sig_hbm.at[b], sig_s.at[slot], sem.at[slot, 0]).wait()
-        pltpu.make_async_copy(fp_hbm.at[b], fp_s.at[slot], sem.at[slot, 1]).wait()
-        pltpu.make_async_copy(addr_hbm.at[b], addr_s.at[slot], sem.at[slot, 2]).wait()
-
-    start_row(0, 0)
-
-    def body(qi, _):
-        slot = qi % 2
-        nxt = (qi + 1) % 2
-
-        @pl.when(qi + 1 < QB)
-        def _():
-            start_row(qi + 1, nxt)   # overlap next DMA with this compare
-
-        wait_row(qi, slot)
-        row_sig = sig_s[slot]                       # [CS]
-        row_fp = fp_s[slot]
-        row_addr = addr_s[slot]
-        match = (row_sig == qsig_ref[qi]) & (row_fp == qfp_ref[qi])
-        iota = jax.lax.iota(I32, CS)
-        off = jnp.min(jnp.where(match, iota, CS))
-        found = off < CS
-        occ = jnp.sum((row_sig != 0).astype(I32))    # fill incl. tombstones
-        acc_hit = off // S + 1
-        acc_miss = jnp.maximum((occ + S - 1) // S, 1)
-        addr_out[qi] = jnp.where(found, row_addr[jnp.minimum(off, CS - 1)], -1)
-        found_out[qi] = found.astype(I32)
-        acc_out[qi] = jnp.where(found, acc_hit, acc_miss)
-        return ()
-
-    jax.lax.fori_loop(0, QB, body, ())
-
-
-@functools.partial(jax.jit, static_argnames=("slots_per_bucket", "q_block",
-                                             "interpret"))
-def hash_probe_kernel(bucket, qsig, qfp, sig, fp, addr, *,
-                      slots_per_bucket: int, q_block: int = 256,
-                      interpret: bool = True):
-    """bucket/qsig/qfp: [Q] int32 query descriptors (precomputed hashes);
-    sig/fp/addr: [nb, CS] int32 tables.
-    Returns (addr [Q], found [Q] int32, n_accesses [Q])."""
-    Q = bucket.shape[0]
-    QB = min(q_block, Q)
-    assert Q % QB == 0
-    CS = sig.shape[1]
-    grid = (Q // QB,)
-    qspec = pl.BlockSpec((QB,), lambda i: (i,))
-    tspec = pl.BlockSpec(memory_space=pl.ANY)
-    out = pl.pallas_call(
-        functools.partial(_kernel, slots_per_bucket),
-        grid=grid,
-        in_specs=[qspec, qspec, qspec, tspec, tspec, tspec],
-        out_specs=[qspec, qspec, qspec],
-        out_shape=[jax.ShapeDtypeStruct((Q,), I32)] * 3,
-        scratch_shapes=[
-            pltpu.VMEM((2, CS), I32),
-            pltpu.VMEM((2, CS), I32),
-            pltpu.VMEM((2, CS), I32),
-            pltpu.SemaphoreType.DMA((2, 3)),
-        ],
-        interpret=interpret,
-    )(bucket, qsig, qfp, sig, fp, addr)
-    return out
+warnings.warn(
+    "repro.kernels.hash_probe is deprecated: use repro.kernels.ops "
+    "(probe(cfg, ...) dispatch, or the hash_probe wrapper)",
+    DeprecationWarning, stacklevel=2)

@@ -1,38 +1,287 @@
-"""Jitted public wrappers over the Pallas kernels.
+"""THE kernel-dispatch surface for the serving hot path.
 
-The wrappers own the host-side prep (key hashing, capacity padding) and the
-interpret-mode switch: on CPU (this container) kernels run with
-interpret=True; on real TPU the same call sites compile the Mosaic kernels.
+Every routed op body (GET probe, degraded backup probe, SCAN bounds, the
+log->sorted merge, recovery replay's probes) calls THESE functions —
+``probe`` / ``search`` / ``merge`` / ``range_query`` / ``sort`` /
+``group_probe`` / ``backup_probe`` — never a kernel module directly.
+Each takes the HiStoreConfig and routes by ``cfg.use_kernels``:
+
+  "on"    always serve through the Pallas kernels (kernels/_fused.py;
+          interpret mode off-TPU, Mosaic on TPU);
+  "off"   always the pure-jnp reference path (core/hash_index.py,
+          core/sorted_index.py, core/log.py — unchanged semantics);
+  "auto"  (default) kernels on TPU, jnp elsewhere; the
+          HISTORE_USE_KERNELS env var ("on"/"off") overrides — how CI
+          runs the interpret-mode kernel leg without touching configs.
+
+The two paths are BIT-EXACT by contract (tests/test_kernel_dispatch.py
+holds every routed primitive to array equality, and the client-level
+seeded traces + parity_report must agree across the knob).  The raw-key
+kernels (sorted search/merge/range, pending-log probe) need the
+canonical int32 key codec — int64 keys (jax_enable_x64 deployments)
+fall back to jnp per call; the hash probe is descriptor-based (int32
+bucket/sig/fp) and serves either key dtype.
+
+Resolution happens at TRACE time: the knob (and env override) must be
+process-constant, because jitted callers cache on the cfg object.
+Benchmarks that compare modes therefore pass explicit per-mode cfgs.
+
+The legacy per-module wrappers (``hash_probe``/``sorted_search``/
+``sort_pairs``) remain at the bottom; importing their old module homes
+(kernels/hash_probe.py etc.) now warns deprecation and forwards here.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import hash_index as hix
+from repro.core import log as lg
+from repro.core import sorted_index as six
 from repro.core.hashing import bucket_of, sig_fp_of
-from repro.kernels.bitonic_sort import bitonic_sort_kernel
-from repro.kernels.hash_probe import hash_probe_kernel
-from repro.kernels.sorted_search import sorted_search_kernel
+from repro.kernels._bitonic_sort import bitonic_sort_kernel
+from repro.kernels._fused import (backup_probe_kernel, group_probe_kernel,
+                                  hash_probe_block_kernel, merge_kernel,
+                                  sort_pairs_stable_kernel,
+                                  sorted_search_block_kernel)
+from repro.kernels._hash_probe import hash_probe_kernel
+from repro.kernels._sorted_search import sorted_search_kernel
 
 I32 = jnp.int32
+
+_ON = ("on", "1", "true", "yes")
+_OFF = ("off", "0", "false", "no")
+ENV_KNOB = "HISTORE_USE_KERNELS"
+
+
+def kernels_enabled(cfg) -> bool:
+    """Resolve cfg.use_kernels to a bool (see module docstring)."""
+    knob = getattr(cfg, "use_kernels", "auto")
+    if knob == "on":
+        return True
+    if knob == "off":
+        return False
+    env = os.environ.get(ENV_KNOB, "").strip().lower()
+    if env in _ON:
+        return True
+    if env in _OFF:
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def active_path(cfg, key_dtype=None) -> str:
+    """"kernel" or "jnp": which path serves raw-key index ops under this
+    cfg (and key dtype — int64 keys fall back to jnp)."""
+    if not kernels_enabled(cfg):
+        return "jnp"
+    if key_dtype is not None and jnp.dtype(key_dtype) != jnp.int32:
+        return "jnp"
+    return "kernel"
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def hash_probe(index, keys, cfg, *, q_block: int = 256):
-    """GET probe through the Pallas kernel.  index: core.hash_index
-    HashIndex; keys: [Q].  Returns (addr, found bool, n_accesses)."""
-    nb = index.sig.shape[0]
-    b = bucket_of(keys, nb)
-    sig, fp = sig_fp_of(keys)
-    Q = keys.shape[0]
-    pad = (-Q) % q_block
+def _qblock(Q: int, cap: int = 512) -> int:
+    """Power-of-two query block <= cap (pad Q up to a multiple of it)."""
+    qb = 1
+    while qb < min(Q, cap):
+        qb <<= 1
+    return qb
+
+
+def _pad_queries(pad, b, sig, fp, rk=None):
     if pad:
         b = jnp.pad(b, (0, pad))
         sig = jnp.pad(sig, (0, pad), constant_values=-7)  # never matches
         fp = jnp.pad(fp, (0, pad))
+        if rk is not None:
+            rk = jnp.pad(rk, (0, pad), constant_values=-1)
+    return b, sig, fp, rk
+
+
+# ---------------------------------------------------------------------------
+# point probes
+# ---------------------------------------------------------------------------
+def probe(cfg, index, keys):
+    """GET probe on a HashIndex -> (addr, found bool, n_accesses).
+    Descriptor-based, so it serves either key dtype; bit-exact with
+    hash_index.lookup."""
+    if not kernels_enabled(cfg):
+        return hix.lookup(index, keys, cfg)
+    b, sig, fp = hix.descriptors(index, keys)
+    Q = keys.shape[0]
+    QB = _qblock(Q)
+    b, sig, fp, _ = _pad_queries((-Q) % QB, b, sig, fp)
+    addr, found, acc = hash_probe_block_kernel(
+        b, sig, fp, index.sig, index.fp, index.addr, index.fill,
+        slots_per_bucket=cfg.slots_per_bucket, q_block=QB,
+        interpret=_interpret())
+    return addr[:Q], found[:Q].astype(bool), acc[:Q]
+
+
+def search(cfg, index, queries):
+    """Point lookup on a SortedIndex -> (addr, found bool, n_accesses).
+    Bit-exact with sorted_index.search."""
+    if not kernels_enabled(cfg) or index.keys.dtype != jnp.int32:
+        return six.search(index, queries, cfg.fanout)
+    Q = queries.shape[0]
+    QB = _qblock(Q)
+    pad = (-Q) % QB
+    q = queries.astype(I32)
+    if pad:
+        q = jnp.pad(q, (0, pad), constant_values=-1)
+    addr, found, acc, _, _ = sorted_search_block_kernel(
+        q, index.keys, index.addrs, fanout=cfg.fanout, q_block=QB,
+        interpret=_interpret())
+    return addr[:Q], found[:Q].astype(bool), acc[:Q]
+
+
+def _log_stack(blogs_r):
+    """Kernel-ready views of stacked [R, ...] pending logs."""
+    lwin = jnp.stack([blogs_r.applied, blogs_r.tail], axis=1).astype(I32)
+    return (blogs_r.keys.astype(I32), blogs_r.addrs,
+            blogs_r.ops.astype(I32), lwin)
+
+
+def _backup_probe_jnp(cfg, sorted_r, blogs_r, keys, rep_sel):
+    """jnp reference of the replica-select backup probe (sequential
+    overwrite: the LAST selected replica answers a multi-selected lane —
+    the G==1 wrap case — exactly like the shifted-layout store body)."""
+    R = blogs_r.tail.shape[0]
+    addr_b = jnp.full(keys.shape, -1, I32)
+    found_b = jnp.zeros(keys.shape, bool)
+    acc_b = jnp.zeros(keys.shape, I32)
+    for r in range(R):
+        srt = jax.tree.map(lambda a: a[r], sorted_r)
+        blog = jax.tree.map(lambda a: a[r], blogs_r)
+        a_s, f_s, c_s = six.search(srt, keys, cfg.fanout)
+        hit, op, praw = lg.pending_lookup(blog, keys)
+        a_r = jnp.where(hit, jnp.where(op == six.OP_PUT, praw, -1), a_s)
+        f_r = jnp.where(hit, op == six.OP_PUT, f_s)
+        sel = rep_sel[:, r] != 0
+        addr_b = jnp.where(sel, a_r, addr_b)
+        found_b = jnp.where(sel, f_r, found_b)
+        acc_b = jnp.where(sel, c_s + 1, acc_b)
+    return addr_b, found_b, acc_b
+
+
+def backup_probe(cfg, sorted_r, blogs_r, keys, rep_sel):
+    """Degraded lookup across stacked sorted replicas: per-replica
+    pending-log (newest wins) then sorted descent, combined by
+    ``rep_sel`` [Q, R] (lane i answered by each selected replica in
+    turn, later replicas overwriting).  Returns (addr, found bool,
+    n_accesses)."""
+    if (not kernels_enabled(cfg) or sorted_r.keys.dtype != jnp.int32
+            or keys.dtype != jnp.int32):
+        return _backup_probe_jnp(cfg, sorted_r, blogs_r, keys, rep_sel)
+    Q = keys.shape[0]
+    R = blogs_r.tail.shape[0]
+    QB = _qblock(Q)
+    pad = (-Q) % QB
+    rk = keys
+    sel = rep_sel.astype(I32)
+    if pad:
+        rk = jnp.pad(rk, (0, pad), constant_values=-1)
+        sel = jnp.pad(sel, ((0, pad), (0, 0)))
+    lkeys, laddrs, lops, lwin = _log_stack(blogs_r)
+    addr, found, acc = backup_probe_kernel(
+        rk, sel, sorted_r.keys, sorted_r.addrs, lkeys, laddrs, lops,
+        lwin, fanout=cfg.fanout, q_block=QB, interpret=_interpret())
+    return addr[:Q], found[:Q].astype(bool), acc[:Q]
+
+
+def group_probe(cfg, hidx, sorted_r, blogs_r, keys, rep_sel):
+    """The fused GET probe: hash-bucket chain walk + per-replica
+    pending-log/sorted backup probe in ONE kernel launch (the hot-path
+    op body combines the pair with its own ``am_primary`` mask).
+    Returns (h_addr, h_found, h_acc, b_addr, b_found, b_acc)."""
+    if (not kernels_enabled(cfg) or sorted_r.keys.dtype != jnp.int32
+            or keys.dtype != jnp.int32):
+        a_h, f_h, c_h = hix.lookup(hidx, keys, cfg)
+        a_b, f_b, c_b = _backup_probe_jnp(cfg, sorted_r, blogs_r, keys,
+                                          rep_sel)
+        return a_h, f_h, c_h, a_b, f_b, c_b
+    b, sig, fp = hix.descriptors(hidx, keys)
+    Q = keys.shape[0]
+    QB = _qblock(Q)
+    pad = (-Q) % QB
+    b, sig, fp, rk = _pad_queries(pad, b, sig, fp, keys)
+    sel = rep_sel.astype(I32)
+    if pad:
+        sel = jnp.pad(sel, ((0, pad), (0, 0)))
+    lkeys, laddrs, lops, lwin = _log_stack(blogs_r)
+    ha, hf, hc, ba, bf, bc = group_probe_kernel(
+        b, sig, fp, rk, sel, hidx.sig, hidx.fp, hidx.addr, hidx.fill,
+        sorted_r.keys, sorted_r.addrs, lkeys, laddrs, lops, lwin,
+        slots_per_bucket=cfg.slots_per_bucket, fanout=cfg.fanout,
+        q_block=QB, interpret=_interpret())
+    return (ha[:Q], hf[:Q].astype(bool), hc[:Q],
+            ba[:Q], bf[:Q].astype(bool), bc[:Q])
+
+
+# ---------------------------------------------------------------------------
+# merge (incremental apply) and scan bounds
+# ---------------------------------------------------------------------------
+def merge(cfg, index, keys, addrs, ops):
+    """Apply a log batch to a SortedIndex (newest-wins, tombstones
+    compact away) -> SortedIndex.  Bit-exact with sorted_index.merge."""
+    if (not kernels_enabled(cfg) or index.keys.dtype != jnp.int32
+            or keys.dtype != jnp.int32):
+        return six.merge(index, keys, addrs, ops)
+    nk, na, size = merge_kernel(
+        index.keys, index.addrs, keys.astype(I32), addrs.astype(I32),
+        ops.astype(I32), interpret=_interpret())
+    return six.SortedIndex(nk, na, size[0])
+
+
+def range_query(cfg, index, lo, hi, limit: int):
+    """SCAN [lo, hi] -> (keys [limit], addrs [limit], count).  The lower
+    bound comes from the sorted-search kernel's descent position; the
+    take/mask tail is shared with the jnp path (range_from_start), so
+    the outputs are bit-exact with sorted_index.range_query."""
+    if not kernels_enabled(cfg) or index.keys.dtype != jnp.int32:
+        return six.range_query(index, lo, hi, limit)
+    q = jnp.asarray(lo, I32).reshape((1,))
+    *_, lbound = sorted_search_block_kernel(
+        q, index.keys, index.addrs, fanout=cfg.fanout, q_block=1,
+        interpret=_interpret())
+    return six.range_from_start(index, lbound[0], hi, limit)
+
+
+def sort(cfg, keys, vals):
+    """Rowwise STABLE (key, payload) sort, [R, T] with T a power of two.
+    Bit-exact with a stable argsort + gather."""
+    if kernels_enabled(cfg) and keys.dtype == jnp.int32:
+        R = keys.shape[0]
+        rb = 8
+        while R % rb:
+            rb >>= 1
+        return sort_pairs_stable_kernel(keys, vals.astype(I32),
+                                        row_block=rb,
+                                        interpret=_interpret())
+    order = jnp.argsort(keys, axis=1, stable=True)
+    return (jnp.take_along_axis(keys, order, axis=1),
+            jnp.take_along_axis(vals, order, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# legacy jitted wrappers (the original per-query DMA kernels, kept as the
+# measured one-RTT-read models; kernels/__init__ re-exports the dispatch
+# API above as the public surface)
+# ---------------------------------------------------------------------------
+def hash_probe(index, keys, cfg, *, q_block: int = 256):
+    """GET probe through the per-query DMA Pallas kernel.  index:
+    core.hash_index HashIndex; keys: [Q].  Returns (addr, found bool,
+    n_accesses)."""
+    nb = index.sig.shape[0]
+    b = bucket_of(keys, nb)
+    sig, fp = sig_fp_of(keys)
+    Q = keys.shape[0]
+    b, sig, fp, _ = _pad_queries((-Q) % q_block, b, sig, fp)
     addr, found, acc = hash_probe_kernel(
         b, sig, fp, index.sig, index.fp, index.addr,
         slots_per_bucket=cfg.slots_per_bucket, q_block=q_block,
@@ -41,7 +290,7 @@ def hash_probe(index, keys, cfg, *, q_block: int = 256):
 
 
 def sorted_search(index, queries, *, fanout: int = 128, q_block: int = 256):
-    """Point lookup on a SortedIndex through the Pallas kernel.
+    """Point lookup on a SortedIndex through the per-query DMA kernel.
     Requires int32 keys (canonical x32 codec)."""
     assert index.keys.dtype == jnp.int32, "kernel path uses int32 keys"
     Q = queries.shape[0]
@@ -54,6 +303,7 @@ def sorted_search(index, queries, *, fanout: int = 128, q_block: int = 256):
 
 
 def sort_pairs(keys, vals, *, row_block: int = 8):
-    """Rowwise (key, payload) sort via the bitonic kernel."""
+    """Rowwise (key, payload) sort via the bitonic kernel (NOT stable on
+    duplicate keys; ``sort`` above is the stable dispatch)."""
     return bitonic_sort_kernel(keys.astype(I32), vals.astype(I32),
                                row_block=row_block, interpret=_interpret())

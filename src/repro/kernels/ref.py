@@ -46,6 +46,79 @@ def ref_sorted_search(queries, keys, addrs, *, fanout=128):
     return out, found.astype(I32), jnp.full(queries.shape, levels, I32)
 
 
+def ref_pending_lookup(lkeys, laddrs, lops, applied, tail, queries):
+    """Oracle for the in-kernel pending-log probe (mirrors
+    core.log.pending_lookup over the [applied, tail) ring window)."""
+    cap = lkeys.shape[0]
+    seq = applied + jnp.arange(cap)
+    idx = seq % cap
+    pv = seq < tail
+    pk = jnp.where(pv, lkeys[idx], KEY_INF32)
+    m = pk[None, :] == queries[:, None]
+    hit = m.any(axis=1)
+    last = (cap - 1) - jnp.argmax(m[:, ::-1], axis=1)
+    op = jnp.where(hit, lops[idx][last], 0)
+    addr = laddrs[idx][last]
+    return hit, op, addr
+
+
+def ref_backup_probe(cfg, skeys, saddrs, lkeys, laddrs, lops, lwin,
+                     queries, rep_sel):
+    """Oracle for backup_probe_kernel: per-replica pending-log (newest
+    wins) then sorted descent, sequential replica-select overwrite."""
+    R = skeys.shape[0]
+    OP_PUT = 1
+    addr_b = jnp.full(queries.shape, -1, I32)
+    found_b = jnp.zeros(queries.shape, bool)
+    acc_b = jnp.zeros(queries.shape, I32)
+    for r in range(R):
+        a_s, f_s, c_s = ref_sorted_search(queries, skeys[r], saddrs[r],
+                                          fanout=cfg.fanout)
+        hit, op, praw = ref_pending_lookup(lkeys[r], laddrs[r], lops[r],
+                                           lwin[r, 0], lwin[r, 1], queries)
+        a_r = jnp.where(hit, jnp.where(op == OP_PUT, praw, -1), a_s)
+        f_r = jnp.where(hit, op == OP_PUT, f_s.astype(bool))
+        sel = rep_sel[:, r] != 0
+        addr_b = jnp.where(sel, a_r, addr_b)
+        found_b = jnp.where(sel, f_r, found_b)
+        acc_b = jnp.where(sel, c_s + 1, acc_b)
+    return addr_b, found_b.astype(I32), acc_b
+
+
+def ref_merge(ekeys, eaddrs, bkeys, baddrs, bops):
+    """Oracle for merge_kernel (mirrors core.sorted_index.merge on int32
+    arrays): newest-wins per key, DELETEs (op 2) compact away, op 0
+    entries are ignored."""
+    cap = ekeys.shape[0]
+    m = bkeys.shape[0]
+    OP_DEL = 2
+    all_keys = jnp.concatenate(
+        [ekeys, jnp.where(bops > 0, bkeys, KEY_INF32)])
+    all_addrs = jnp.concatenate([eaddrs, baddrs])
+    all_del = jnp.concatenate([jnp.zeros((cap,), bool), bops == OP_DEL])
+    prio = jnp.concatenate(
+        [jnp.zeros((cap,), I32), 1 + jnp.arange(m, dtype=I32)])
+    order = jnp.lexsort((prio, all_keys))
+    k = all_keys[order]
+    a = all_addrs[order]
+    d = all_del[order]
+    is_last = jnp.concatenate([k[1:] != k[:-1], jnp.ones((1,), bool)])
+    keep = is_last & (~d) & (k != KEY_INF32)
+    dest = jnp.cumsum(keep) - 1
+    dest = jnp.where(keep, dest, cap + m)
+    nk = jnp.full((cap,), KEY_INF32, I32).at[dest].set(k, mode="drop")
+    na = jnp.full((cap,), -1, I32).at[dest].set(a, mode="drop")
+    return nk, na, keep.sum().astype(I32)
+
+
+def ref_sort_pairs_stable(keys, vals):
+    """Oracle for sort_pairs_stable_kernel: rowwise stable sort by key,
+    payload rides the exact same permutation (index tie-break)."""
+    order = jnp.argsort(keys, axis=1, stable=True)
+    return (jnp.take_along_axis(keys, order, axis=1),
+            jnp.take_along_axis(vals, order, axis=1))
+
+
 def ref_mamba_scan(x, dt, B_ssm, C_ssm, A):
     """Oracle for mamba_scan_kernel: sequential selective scan."""
     import jax

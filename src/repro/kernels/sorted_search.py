@@ -1,106 +1,14 @@
-"""Pallas TPU kernel: hierarchical sorted-directory descent (the SCAN-side
-point lookup — the paper's skiplist walk).
+"""DEPRECATED module home: import through repro.kernels.ops instead.
 
-Per level the kernel DMAs one fanout-wide node (fanout=128 int32 = 512 B,
-exactly a TPU lane vector / an RDMA-read-sized node) from the packed sorted
-array in HBM, counts keys <= q branchlessly, and descends.  The number of
-DMAs per query equals the directory level count — the same quantity the
-paper measures as per-lookup memory accesses (Fig. 3a).
-
-Keys are int32 in-kernel (canonical x32 key codec; the int64 path is the
-pure-jnp sorted_index, see DESIGN.md §Key codec).
+The kernel moved to the private module kernels/_sorted_search.py; the
+public surface is the cfg-routed dispatch API (repro.kernels.ops.search
+/ range_query) plus the legacy wrapper repro.kernels.ops.sorted_search.
 """
-from __future__ import annotations
+import warnings
 
-import functools
+from repro.kernels._sorted_search import sorted_search_kernel  # noqa: F401
 
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-I32 = jnp.int32
-KEY_INF32 = jnp.iinfo(jnp.int32).max
-
-
-def _levels(cap: int, fanout: int) -> int:
-    lv, span = 1, fanout
-    while span < cap:
-        span *= fanout
-        lv += 1
-    return lv
-
-
-def _kernel(cap, fanout, levels, q_ref, keys_hbm, addrs_hbm,
-            addr_out, found_out, acc_out, node_s, anode_s, sem, asem):
-    QB = q_ref.shape[0]
-
-    def body(qi, _):
-        q = q_ref[qi]
-
-        def level_step(li, pos):
-            stride = fanout ** (levels - 1 - li)
-
-            def g(i, _):
-                # one express-lane hop element; the leaf level (stride 1)
-                # coalesces to a contiguous 512 B burst on real hw.
-                j = jnp.minimum(pos + i * stride, cap - 1)
-                pltpu.make_async_copy(
-                    keys_hbm.at[pl.ds(j, 1)], node_s.at[0, pl.ds(i, 1)],
-                    sem).start()
-                pltpu.make_async_copy(
-                    keys_hbm.at[pl.ds(j, 1)], node_s.at[0, pl.ds(i, 1)],
-                    sem).wait()
-                return ()
-
-            jax.lax.fori_loop(0, fanout, g, ())
-            idx = pos + jax.lax.iota(I32, fanout) * stride
-            node = jnp.where(idx < cap, node_s[0], KEY_INF32)
-            cnt = jnp.sum((node <= q).astype(I32))
-            return pos + jnp.maximum(cnt - 1, 0) * stride
-
-        pos = jax.lax.fori_loop(0, levels, level_step, jnp.int32(0))
-        # fetch key+addr at final pos
-        pltpu.make_async_copy(keys_hbm.at[pl.ds(pos, 1)],
-                              node_s.at[0, pl.ds(0, 1)], sem).start()
-        pltpu.make_async_copy(keys_hbm.at[pl.ds(pos, 1)],
-                              node_s.at[0, pl.ds(0, 1)], sem).wait()
-        pltpu.make_async_copy(addrs_hbm.at[pl.ds(pos, 1)],
-                              anode_s.at[0, pl.ds(0, 1)], asem).start()
-        pltpu.make_async_copy(addrs_hbm.at[pl.ds(pos, 1)],
-                              anode_s.at[0, pl.ds(0, 1)], asem).wait()
-        found = node_s[0, 0] == q
-        addr_out[qi] = jnp.where(found, anode_s[0, 0], -1)
-        found_out[qi] = found.astype(I32)
-        acc_out[qi] = levels
-        return ()
-
-    jax.lax.fori_loop(0, QB, body, ())
-
-
-@functools.partial(jax.jit, static_argnames=("fanout", "q_block", "interpret"))
-def sorted_search_kernel(queries, keys, addrs, *, fanout: int = 128,
-                         q_block: int = 256, interpret: bool = True):
-    """queries: [Q] int32; keys: [cap] int32 ascending (INF-padded);
-    addrs: [cap] int32.  Returns (addr, found int32, n_accesses)."""
-    Q = queries.shape[0]
-    cap = keys.shape[0]
-    levels = _levels(cap, fanout)
-    QB = min(q_block, Q)
-    assert Q % QB == 0
-    qspec = pl.BlockSpec((QB,), lambda i: (i,))
-    tspec = pl.BlockSpec(memory_space=pl.ANY)
-    return pl.pallas_call(
-        functools.partial(_kernel, cap, fanout, levels),
-        grid=(Q // QB,),
-        in_specs=[qspec, tspec, tspec],
-        out_specs=[qspec, qspec, qspec],
-        out_shape=[jax.ShapeDtypeStruct((Q,), I32)] * 3,
-        scratch_shapes=[
-            pltpu.VMEM((1, fanout), I32),
-            pltpu.VMEM((1, fanout), I32),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-        ],
-        interpret=interpret,
-    )(queries, keys, addrs)
+warnings.warn(
+    "repro.kernels.sorted_search is deprecated: use repro.kernels.ops "
+    "(search(cfg, ...) dispatch, or the sorted_search wrapper)",
+    DeprecationWarning, stacklevel=2)

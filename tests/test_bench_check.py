@@ -138,6 +138,40 @@ def test_non_gating_rows_are_skipped(tmp_path):
     assert _run(tmp_path, gone, base_rows=base).returncode == 0
 
 
+def test_flag_mismatch_skips_row(tmp_path):
+    """Rows whose measurement-environment stamps differ (use_kernels /
+    platform — benchmarks/common.py env_fields) are a configuration
+    mismatch: a 10x 'regression' against a differently-stamped baseline
+    must be skipped, and so must that row's capability flags."""
+    base = [{"name": "fig9b_get_histore", "us_per_op": 100.0,
+             "use_kernels": "off", "platform": "cpu", "served": True}]
+    rows = [{"name": "fig9b_get_histore", "us_per_op": 1000.0,
+             "use_kernels": "on", "platform": "cpu", "served": False}]
+    p = _run(tmp_path, rows, base_rows=base)
+    assert p.returncode == 0, p.stderr
+    assert "use_kernels differs" in p.stdout
+
+
+def test_flag_match_still_gates(tmp_path):
+    """Identical stamps gate exactly as unstamped rows do."""
+    base = [{"name": "fig9b_get_histore", "us_per_op": 100.0,
+             "use_kernels": "on", "platform": "cpu"}]
+    rows = [{"name": "fig9b_get_histore", "us_per_op": 1000.0,
+             "use_kernels": "on", "platform": "cpu"}]
+    p = _run(tmp_path, rows, base_rows=base)
+    assert p.returncode != 0
+    assert "fig9b_get_histore.us_per_op" in p.stderr
+
+
+def test_missing_flag_on_one_side_still_gates(tmp_path):
+    """The skip needs the stamp on BOTH rows: pre-stamp baselines keep
+    gating new (stamped) runs — no silent gate loss on upgrade."""
+    base = [{"name": "fig13_dist_recover_server", "seconds": 10.0}]
+    rows = [{"name": "fig13_dist_recover_server", "seconds": 40.0,
+             "use_kernels": "on", "platform": "cpu"}]
+    assert _run(tmp_path, rows, base_rows=base).returncode != 0
+
+
 # ---------------------------------------------------------------------------
 # Trend mode (--trend): monotone drift across a run history
 # ---------------------------------------------------------------------------
@@ -201,6 +235,23 @@ def test_trend_skips_non_gating_and_ungated_rows(tmp_path):
     p, out = _run_trend(tmp_path, hist)
     assert p.returncode == 0, p.stderr
     assert json.loads(out.read_text())["series"] == {}
+
+
+def test_trend_separates_series_by_env_stamp(tmp_path):
+    """A history alternating jnp and kernel runs (each stable, kernel
+    slower) must form two flat per-stamp series, not one sawtooth that
+    the monotone filter could misread as creep."""
+    hist = []
+    for i in range(6):
+        knob = "off" if i % 2 == 0 else "on"
+        s = 10.0 if knob == "off" else 14.0
+        hist.append([{"name": "fig9b_get_histore", "us_per_op": s * 100,
+                      "use_kernels": knob, "platform": "cpu"}])
+    p, out = _run_trend(tmp_path, hist)
+    assert p.returncode == 0, p.stderr
+    series = json.loads(out.read_text())["series"]
+    assert any("use_kernels=off" in k for k in series)
+    assert any("use_kernels=on" in k for k in series)
 
 
 def test_trend_window_limits_lookback(tmp_path):

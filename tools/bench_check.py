@@ -22,7 +22,11 @@ fields...}).  The gate fails (exit 1) on:
 Speedups, extra rows and extra fields never fail the gate.  Rows pair by
 ``name`` (duplicate names pair in file order).  Rows flagged
 ``non_gating: true`` (single-pass phase timings, e.g. the fig12
-load/run split) are skipped entirely.  ``--rtol`` can also come from
+load/run split) are skipped entirely.  Paired rows whose
+measurement-environment stamps differ (FLAG_FIELDS: ``use_kernels``,
+``platform`` — benchmarks/common.py env_fields) are skipped as a
+configuration mismatch, never judged as a regression or lost
+capability.  ``--rtol`` can also come from
 the BENCH_CHECK_RTOL env var (CI escape hatch for slow runners);
 explicit flags win.
 
@@ -55,6 +59,22 @@ DEFAULT_ATOL = {"seconds": 0.5, "us_per_op": 150.0, "stream_seconds": 0.5}
 # the ticker for seconds is within the batteries' own accepted envelope,
 # so only their capability flags gate (detected_idle), never the timing
 UNGATED_LATENCY_ROWS = {"fig13_wall_idle_detection"}
+# measurement-environment stamps (benchmarks/common.py env_fields): when
+# BOTH paired rows carry one of these and the values differ, the pair is
+# a configuration mismatch (e.g. a kernel-path run vs a jnp-path
+# baseline) and is SKIPPED, not judged — neither regression nor lost
+# capability.  A row missing the stamp gates as before (old baselines
+# stay valid).
+FLAG_FIELDS = ("use_kernels", "platform")
+
+
+def _flag_mismatch(new: dict, base: dict):
+    """The first env-stamp field present in both rows with differing
+    values, or None when the rows are comparable."""
+    for f in FLAG_FIELDS:
+        if f in new and f in base and new[f] != base[f]:
+            return f
+    return None
 
 
 def _rows_by_name(rows: list) -> dict:
@@ -79,6 +99,12 @@ def compare(new_rows: list, base_rows: list, rtol: float,
                                 "(lost capability)")
                 continue
             new = nrows[i]
+            flag = _flag_mismatch(new, base)
+            if flag is not None:
+                print(f"bench-check: {name}: {flag} differs "
+                      f"({new.get(flag)!r} vs baseline "
+                      f"{base.get(flag)!r}) — row skipped, not compared")
+                continue
             if "skipped" in new and "skipped" not in base:
                 failures.append(f"{name}: newly skipped "
                                 f"({new['skipped']}) — lost capability")
@@ -132,12 +158,18 @@ def trend(histories: list, rtol: float,
             for i, row in enumerate(nrows):
                 if row.get("non_gating"):
                     continue
+                # env-stamped rows form per-stamp series: a history that
+                # alternates jnp and kernel runs must not read as creep
+                flags = tuple((k, str(row[k])) for k in FLAG_FIELDS
+                              if k in row)
                 for f in LATENCY_FIELDS:
                     if f in row:
-                        values.setdefault((name, i, f), []).append(
+                        values.setdefault((name, i, f, flags), []).append(
                             float(row[f]))
-    for (name, i, f), vs in sorted(values.items()):
+    for (name, i, f, flags), vs in sorted(values.items()):
         label = f"{name}.{f}" if i == 0 else f"{name}[{i}].{f}"
+        if flags:
+            label += "{" + ",".join(f"{k}={v}" for k, v in flags) + "}"
         series[label] = vs
         if len(vs) < 3:
             continue        # row too new to have a trend

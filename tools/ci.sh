@@ -9,9 +9,15 @@
 #                                   # --detection mode (lease detection
 #                                   # latency + online-vs-stop-the-world
 #                                   # recovery) into
-#                                   # bench_smoke_fig13_detection.json, and
-#                                   # gates BOTH against the committed
-#                                   # BENCH_baseline_fig13*.json via
+#                                   # bench_smoke_fig13_detection.json,
+#                                   # then the kernel-dispatch smokes
+#                                   # (fig9 basic ops + fig11 breakdown,
+#                                   # jnp-vs-kernel side-by-side incl.
+#                                   # the fig9_kernel_get_gate
+#                                   # kernel_no_slower capability row)
+#                                   # into bench_smoke_fig9/11.json, and
+#                                   # gates ALL against the committed
+#                                   # BENCH_baseline_*.json via
 #                                   # tools/bench_check.py (>25% latency
 #                                   # regression or a lost capability flag
 #                                   # fails; BENCH_CHECK_RTOL loosens the
@@ -58,10 +64,16 @@ PY
   python -m benchmarks.fig13_recovery --smoke --json bench_smoke_fig13.json
   python -m benchmarks.fig13_recovery --detection --smoke \
     --json bench_smoke_fig13_detection.json
+  python -m benchmarks.fig9_basic_ops --smoke --json bench_smoke_fig9.json
+  python -m benchmarks.fig11_breakdown --smoke --json bench_smoke_fig11.json
   python tools/bench_check.py bench_smoke_fig13.json \
     BENCH_baseline_fig13.json
   python tools/bench_check.py bench_smoke_fig13_detection.json \
     BENCH_baseline_fig13_detection.json
+  python tools/bench_check.py bench_smoke_fig9.json \
+    BENCH_baseline_fig9.json
+  python tools/bench_check.py bench_smoke_fig11.json \
+    BENCH_baseline_fig11.json
   # trend gate: append this run to the rolling history (the CI workflow
   # caches bench-history/ across runs), then scan the window for
   # monotone creep the single-baseline threshold cannot see
@@ -70,6 +82,8 @@ PY
   cp bench_smoke_fig13.json "bench-history/${stamp}_fig13.json"
   cp bench_smoke_fig13_detection.json \
     "bench-history/${stamp}_fig13_detection.json"
+  cp bench_smoke_fig9.json "bench-history/${stamp}_fig9.json"
+  cp bench_smoke_fig11.json "bench-history/${stamp}_fig11.json"
   python tools/bench_check.py --trend bench-history \
     --trend-out bench_trend.json
   set +x
